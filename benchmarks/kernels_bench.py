@@ -1,0 +1,81 @@
+"""DDSketch device/kernel benchmarks (§2.2 fast mapping, DESIGN.md §3).
+
+CPU wall-clock of the jit'd XLA reference path (the TPU-portable
+semantics), plus the mapping-variant comparison the paper motivates: the
+bitwise linear mapping avoids the transcendental log.  Pallas interpret
+mode is a correctness tool, not a fast path, so it is excluded from timing
+and validated in tests instead.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import jax_sketch as js
+from repro.kernels.ref import BucketSpec, histogram_ref
+
+
+def _time(fn, *args, iters=20) -> float:
+    fn(*args)  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_device_insert(n=1_000_000) -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    data = jnp.asarray((rng.pareto(1.0, n) + 1.0).astype(np.float32))
+    for mapping in ("log", "linear", "cubic"):
+        spec = BucketSpec(mapping=mapping)
+        fn = jax.jit(lambda x: histogram_ref(x, spec=spec))
+        secs = _time(fn, data)
+        rows.append(
+            {
+                "bench": "kernel_insert",
+                "mapping": mapping,
+                "n": n,
+                "ns_per_value": round(secs / n * 1e9, 3),
+                "impl": "xla_ref",
+            }
+        )
+    return rows
+
+
+def bench_device_merge(iters=50) -> list[dict]:
+    spec = BucketSpec()
+    rng = np.random.default_rng(0)
+    a = js.add(js.empty(spec), jnp.asarray(rng.pareto(1.0, 10000).astype(np.float32) + 1), spec=spec)
+    b = js.add(js.empty(spec), jnp.asarray(rng.pareto(1.0, 10000).astype(np.float32) + 1), spec=spec)
+    fn = jax.jit(js.merge)
+    secs = _time(fn, a, b, iters=iters)
+    return [
+        {
+            "bench": "kernel_merge",
+            "impl": "device_elementwise_sum",
+            "us_per_merge": round(secs * 1e6, 2),
+        }
+    ]
+
+
+def bench_quantile_query(iters=50) -> list[dict]:
+    spec = BucketSpec()
+    rng = np.random.default_rng(0)
+    sk = js.add(js.empty(spec), jnp.asarray(rng.pareto(1.0, 100000).astype(np.float32) + 1), spec=spec)
+    qs = jnp.asarray([0.5, 0.95, 0.99])
+    fn = jax.jit(lambda s, q: js.quantiles(s, q, spec=spec))
+    secs = _time(fn, sk, qs, iters=iters)
+    return [
+        {
+            "bench": "kernel_quantile",
+            "impl": "device_searchsorted",
+            "us_per_query": round(secs * 1e6 / 3, 2),
+        }
+    ]

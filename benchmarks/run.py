@@ -1,0 +1,107 @@
+"""Benchmark orchestrator: one bench per paper table/figure + kernel timings
++ the roofline table (from dry-run artifacts when present).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --quick    # smaller sweeps
+  PYTHONPATH=src python -m benchmarks.run --only fig10_rel_err
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from benchmarks import kernels_bench, sketches
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def _emit(rows: list[dict]) -> None:
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))
+    print()
+
+
+def roofline_rows() -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        t = rec["roofline"]
+        rows.append(
+            {
+                "bench": "roofline",
+                "arch": rec["arch"],
+                "shape": rec["shape"],
+                "mesh": rec["mesh"],
+                "tag": rec.get("tag", ""),
+                "compute_ms": round(t["compute_s"] * 1e3, 2),
+                "memory_ms": round(t["memory_s"] * 1e3, 2),
+                "collective_ms": round(t["collective_s"] * 1e3, 2),
+                "bound": t["bound"],
+                "mfu_bound_pct": round(t["roofline_mfu"] * 100, 1),
+                "hbm_GiB": round(rec["memory"]["peak_hbm_bytes"] / 2**30, 2),
+                "useful_flops_pct": round(rec["useful_flops_frac"] * 100, 1),
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--only", default=None)
+    args = p.parse_args()
+
+    if args.quick:
+        benches = {
+            "fig6_size": lambda: sketches.bench_size(ns=(10_000, 100_000)),
+            "fig7_bins": lambda: sketches.bench_bins(ns=(10_000, 100_000, 1_000_000)),
+            "fig8_add": lambda: sketches.bench_add(n=50_000),
+            "fig9_merge": lambda: sketches.bench_merge(n_each=20_000, pairs=5),
+            "fig10_rel_err": lambda: sketches.bench_rel_err(n=50_000),
+            "fig11_rank_err": lambda: sketches.bench_rank_err(n=50_000),
+            "kernel_insert": lambda: kernels_bench.bench_device_insert(n=200_000),
+            "kernel_merge": kernels_bench.bench_device_merge,
+            "kernel_quantile": kernels_bench.bench_quantile_query,
+            "roofline": roofline_rows,
+        }
+    else:
+        benches = {
+            "fig6_size": sketches.bench_size,
+            "fig7_bins": sketches.bench_bins,
+            "fig8_add": sketches.bench_add,
+            "fig9_merge": sketches.bench_merge,
+            "fig10_rel_err": sketches.bench_rel_err,
+            "fig11_rank_err": sketches.bench_rank_err,
+            "kernel_insert": kernels_bench.bench_device_insert,
+            "kernel_merge": kernels_bench.bench_device_merge,
+            "kernel_quantile": kernels_bench.bench_quantile_query,
+            "roofline": roofline_rows,
+        }
+
+    failed = []
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        print(f"== {name} ==")
+        try:
+            _emit(fn())
+        except Exception as e:  # keep going; report at the end
+            failed.append((name, repr(e)))
+            print(f"ERROR in {name}: {e!r}\n")
+    if failed:
+        print(f"{len(failed)} benches failed: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""Sketch benchmarks — one per paper figure (§4, Figures 6-11).
+
+Every function returns a list of CSV-able row dicts; ``benchmarks.run``
+prints them and writes bench_output artifacts.  Sizes are swept in decades
+like the paper; the 3.1 GHz MacBook numbers in the paper are wall-clock —
+ours are CPU-container wall-clock, so *relative* orderings are what we
+reproduce (DDSketch-fast > HDR > DDSketch > Moments > GK on insert;
+Moments > DDSketch >> HDR/GK on merge; see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.ddsketch import DDSketch
+from repro.core.gk import GKArray
+from repro.core.hdr import HDRHistogram
+from repro.core.moments import MomentsSketch
+from repro.core.oracle import exact_quantiles, rank_error, relative_error
+from repro.data.datasets import DATASETS, make_dataset
+
+QS = (0.5, 0.95, 0.99)
+
+
+def _make(name: str):
+    """Paper Table 2 parameters."""
+    if name == "ddsketch":
+        return DDSketch(0.01, max_bins=2048, mapping="log", store="dense")
+    if name == "ddsketch_fast":
+        return DDSketch(0.01, max_bins=4096, mapping="linear", store="dense")
+    if name == "hdr":
+        # span durations reach 1.9e12 ns; HDR must be *pre-configured* to
+        # cover its whole range (exactly the bounded-range limitation the
+        # paper's Table 1 contrasts against DDSketch)
+        return HDRHistogram(2, highest_trackable=2e12)
+    if name == "gk":
+        return GKArray(0.01)
+    if name == "moments":
+        return MomentsSketch(20, compressed=True)
+    raise KeyError(name)
+
+
+SKETCHES = ("ddsketch", "ddsketch_fast", "hdr", "gk", "moments")
+
+
+def _fill(sk, data) -> float:
+    """Insert all values, return seconds (vectorized path when available)."""
+    t0 = time.perf_counter()
+    if hasattr(sk, "extend") and isinstance(sk, MomentsSketch):
+        sk.extend(data)  # vectorized power sums (the reference is SIMD too)
+    else:
+        add = sk.add
+        for v in data:
+            add(float(v))
+    return time.perf_counter() - t0
+
+
+# ------------------------------------------------------------------ #
+def bench_size(ns=(10_000, 100_000, 1_000_000)) -> list[dict]:
+    """Figure 6: sketch size in memory (kB) as n grows."""
+    rows = []
+    for dataset in DATASETS:
+        for n in ns:
+            data = make_dataset(dataset, n)
+            for name in SKETCHES:
+                sk = _make(name)
+                _fill(sk, data)
+                rows.append(
+                    {
+                        "bench": "fig6_size",
+                        "dataset": dataset,
+                        "sketch": name,
+                        "n": n,
+                        "kB": round(sk.byte_size() / 1e3, 3),
+                    }
+                )
+    return rows
+
+
+def bench_bins(ns=(10_000, 100_000, 1_000_000, 10_000_000)) -> list[dict]:
+    """Figure 7: number of non-empty DDSketch bins on pareto data."""
+    rows = []
+    for n in ns:
+        sk = DDSketch(0.01, max_bins=2048)
+        sk.extend(make_dataset("pareto", n))
+        rows.append(
+            {
+                "bench": "fig7_bins",
+                "dataset": "pareto",
+                "sketch": "ddsketch",
+                "n": n,
+                "bins": sk.num_bins(),
+                "cap": 2048,
+            }
+        )
+    return rows
+
+
+def bench_add(n=200_000) -> list[dict]:
+    """Figure 8: average time to add a value (ns/value)."""
+    rows = []
+    for dataset in DATASETS:
+        data = make_dataset(dataset, n)
+        for name in SKETCHES:
+            sk = _make(name)
+            secs = _fill(sk, data)
+            rows.append(
+                {
+                    "bench": "fig8_add",
+                    "dataset": dataset,
+                    "sketch": name,
+                    "n": n,
+                    "ns_per_add": round(secs / n * 1e9, 1),
+                }
+            )
+    return rows
+
+
+def bench_merge(n_each=100_000, pairs=20) -> list[dict]:
+    """Figure 9: average time to merge two sketches."""
+    rows = []
+    for dataset in DATASETS:
+        for name in SKETCHES:
+            data = make_dataset(dataset, 2 * n_each)
+            merged_time = 0.0
+            for p in range(pairs):
+                a, b = _make(name), _make(name)
+                _fill(a, data[:n_each])
+                _fill(b, data[n_each:])
+                t0 = time.perf_counter()
+                a.merge(b)
+                merged_time += time.perf_counter() - t0
+            rows.append(
+                {
+                    "bench": "fig9_merge",
+                    "dataset": dataset,
+                    "sketch": name,
+                    "n_merged": 2 * n_each,
+                    "us_per_merge": round(merged_time / pairs * 1e6, 2),
+                }
+            )
+    return rows
+
+
+def bench_rel_err(n=200_000) -> list[dict]:
+    """Figure 10: relative error of p50/p95/p99 estimates."""
+    rows = []
+    for dataset in DATASETS:
+        data = make_dataset(dataset, n)
+        actual = exact_quantiles(data, QS)
+        for name in SKETCHES:
+            sk = _make(name)
+            _fill(sk, data)
+            est = sk.quantiles(QS)
+            for q, e, a in zip(QS, est, actual):
+                rows.append(
+                    {
+                        "bench": "fig10_rel_err",
+                        "dataset": dataset,
+                        "sketch": name,
+                        "q": q,
+                        "rel_err": round(relative_error(e, a), 6),
+                    }
+                )
+    return rows
+
+
+def bench_rank_err(n=200_000) -> list[dict]:
+    """Figure 11: rank error of p50/p95/p99 estimates."""
+    rows = []
+    for dataset in DATASETS:
+        data = make_dataset(dataset, n)
+        s = np.sort(data)
+        for name in SKETCHES:
+            sk = _make(name)
+            _fill(sk, data)
+            est = sk.quantiles(QS)
+            for q, e in zip(QS, est):
+                rows.append(
+                    {
+                        "bench": "fig11_rank_err",
+                        "dataset": dataset,
+                        "sketch": name,
+                        "q": q,
+                        "rank_err": round(rank_error(s, e, q), 6),
+                    }
+                )
+    return rows

@@ -1,0 +1,70 @@
+"""Quickstart: the DDSketch public API in two tiers.
+
+Host tier — the paper's exact algorithm (add / quantile / merge / serialize).
+Device tier — the jit-compatible twin whose merge is a plain '+', usable
+inside any JAX computation and all-reducible across a mesh.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ddsketch import DDSketch
+from repro.core import jax_sketch as js
+from repro.core.jax_sketch import BucketSpec
+
+
+def host_tier():
+    print("== host tier (paper Algorithms 1-4) ==")
+    rng = np.random.default_rng(0)
+    latencies_ms = rng.pareto(1.0, 1_000_000) + 1.0  # heavy-tailed, like Fig 3
+
+    sk = DDSketch(relative_accuracy=0.01, max_bins=2048)
+    sk.extend(latencies_ms)
+
+    for q in (0.5, 0.75, 0.95, 0.99, 0.999):
+        est = sk.quantile(q)
+        act = np.quantile(latencies_ms, q, method="lower")
+        print(f"  p{q*100:<5.4g} est={est:12.4f}  actual={act:12.4f}  "
+              f"rel_err={abs(est-act)/act:.5f}  (alpha=0.01)")
+
+    # full mergeability: two half-streams merge losslessly (Algorithm 4)
+    a, b = DDSketch(0.01), DDSketch(0.01)
+    a.extend(latencies_ms[:500_000])
+    b.extend(latencies_ms[500_000:])
+    a.merge(b)
+    assert abs(a.quantile(0.99) - sk.quantile(0.99)) < 1e-9
+    print(f"  merged p99 == single-sketch p99: {a.quantile(0.99):.4f}")
+    print(f"  sketch: {sk.num_bins()} bins, {sk.byte_size()/1e3:.1f} kB for 1M values")
+
+
+def device_tier():
+    print("== device tier (jit + vectorized insert + '+'-merge) ==")
+    spec = BucketSpec(relative_accuracy=0.01, num_buckets=2048, offset=-1024)
+    rng = np.random.default_rng(1)
+    values = jnp.asarray((rng.pareto(1.0, 100_000) + 1.0).astype(np.float32))
+
+    @jax.jit
+    def sketch_batch(vals):
+        return js.add(js.empty(spec), vals, spec=spec)
+
+    sk = sketch_batch(values)
+    qs = jnp.asarray([0.5, 0.95, 0.99])
+    print("  device quantiles:", np.asarray(js.quantiles(sk, qs, spec=spec)))
+
+    # merging device sketches is elementwise '+' -> psum-able across a mesh
+    sk2 = sketch_batch(values * 2.0)
+    merged = js.merge(sk, sk2)
+    print(f"  merged count: {float(merged.count):.0f}")
+
+    # lossless flush into the host tier for rollups / checkpointing
+    host = js.to_host(merged, spec)
+    print(f"  flushed to host: n={host.count}, p99={host.quantile(0.99):.3f}")
+
+
+if __name__ == "__main__":
+    host_tier()
+    device_tier()

@@ -1,0 +1,179 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-k, auto-resume.
+
+Layout (one directory per step):
+
+    <dir>/step_000001230/
+        arrays.npz          flattened pytree leaves (np arrays)
+        manifest.json       treedef paths, shapes/dtypes, aux json state
+    <dir>/step_000001230.COMMITTED    commit marker (atomicity)
+
+Writes go to ``step_X.tmp`` and are renamed only after fsync — a checkpoint
+either exists completely or not at all; a crash mid-write leaves a ``.tmp``
+that restore() ignores and the next save garbage-collects.  ``save_async``
+snapshots device arrays to host (blocking only on the transfer), then
+serializes on a background thread so the train loop overlaps the disk I/O.
+
+Sketch/telemetry state rides along in ``aux`` (JSON) — the paper's
+mergeability means restarted runs keep exact quantile history: sketches
+merge losslessly across restarts (Algorithm 4), so fleet telemetry survives
+preemption just like model weights.
+
+Per-host sharded writes on a real multi-host pod would key the npz file by
+``jax.process_index()``; in this single-process container the process count
+is 1 and the file layout degenerates to one shard (documented in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in leaves], treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # ------------------------------------------------------------------ #
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:012d}")
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.endswith(".COMMITTED"):
+                steps.append(int(name[len("step_"):-len(".COMMITTED")]))
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, state, aux: dict | None = None) -> None:
+        """Blocking save.  ``state`` is any pytree of arrays; ``aux`` is
+        JSON-serializable side state (telemetry, data iterator, rng)."""
+        self.wait()  # one in-flight async save at a time
+        host_state = jax.tree.map(np.asarray, state)
+        self._write(step, host_state, aux or {})
+
+    def save_async(self, step: int, state, aux: dict | None = None) -> None:
+        """Device->host snapshot now; disk write on a background thread."""
+        self.wait()
+        host_state = jax.tree.map(np.asarray, state)  # snapshot (sync point)
+        aux = dict(aux or {})
+
+        def _run():
+            try:
+                self._write(step, host_state, aux)
+            except BaseException as e:  # pragma: no cover
+                self._error = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------------ #
+    def _write(self, step: int, host_state, aux: dict) -> None:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat, _ = _flatten_with_paths(host_state)
+        arrays = {}
+        dtypes = []
+        for i, (_, v) in enumerate(flat):
+            a = np.asarray(v)
+            dtypes.append(str(a.dtype))
+            if a.dtype.kind == "V" or not a.dtype.isbuiltin:
+                # ml_dtypes extended types (bfloat16, fp8) don't survive
+                # npz: store raw bits, restore via .view(dtype)
+                a = a.view(np.uint8 if a.dtype.itemsize == 1 else np.uint16)
+            arrays[f"leaf_{i}"] = a
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "paths": [p for p, _ in flat],
+            "dtypes": dtypes,
+            "aux": aux,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        # commit marker written last: restore only trusts committed steps
+        marker = final + ".COMMITTED"
+        with open(marker, "w") as f:
+            f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for step in steps[: -self.keep] if self.keep else []:
+            d = self._step_dir(step)
+            for path in (d + ".COMMITTED", d):
+                if os.path.exists(path):
+                    (os.remove if path.endswith(".COMMITTED") else shutil.rmtree)(path)
+        # sweep orphaned tmp dirs from crashed writes
+        for name in os.listdir(self.directory):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def restore(self, like, step: int | None = None, shardings=None):
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs).  Returns (step, state, aux) or None if no
+        committed checkpoint exists (fresh start)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        import ml_dtypes  # noqa: F401  (registers bfloat16/fp8 numpy dtypes)
+
+        dtypes = manifest.get("dtypes") or [None] * len(manifest["paths"])
+        leaves = []
+        for i, dt in enumerate(dtypes):
+            a = data[f"leaf_{i}"]
+            if dt is not None and str(a.dtype) != dt:
+                a = a.view(np.dtype(dt))
+            leaves.append(a)
+        treedef = jax.tree.structure(like)
+        state = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), state, shardings
+            )
+        return step, state, manifest["aux"]

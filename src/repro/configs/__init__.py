@@ -1,0 +1,48 @@
+"""Architecture registry: the ten assigned pool architectures (exact configs)
+plus reduced smoke variants, and the per-arch shape sets.
+
+Usage:  ``cfg = configs.get("yi-6b")``; ``configs.smoke("yi-6b")``;
+``configs.shapes_for("yi-6b")`` -> the applicable shape names.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.shapes import (  # noqa: F401
+    SHAPES,
+    ShapeSpec,
+    input_specs,
+    shapes_for,
+)
+
+ARCHS = [
+    "xlstm-1.3b",
+    "smollm-135m",
+    "starcoder2-7b",
+    "yi-6b",
+    "qwen3-0.6b",
+    "jamba-v0.1-52b",
+    "llama-3.2-vision-90b",
+    "whisper-base",
+    "llama4-maverick-400b-a17b",
+    "llama4-scout-17b-a16e",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; options: {ARCHS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get(arch: str):
+    """The full (production) ModelConfig for an assigned architecture."""
+    return _mod(arch).CONFIG
+
+
+def smoke(arch: str):
+    """Reduced same-family config for CPU smoke tests."""
+    return _mod(arch).SMOKE

@@ -1,0 +1,44 @@
+"""jamba-v0.1-52b [hybrid] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16e top-2 (arXiv:2403.19887); Mamba+attention 1:7
+interleave with MoE every other layer.
+
+Block layout follows the Jamba paper: each 8-layer "Jamba block" has one
+attention layer (position 4) and seven Mamba layers; MoE replaces the dense
+FFN on every second layer.  16 experts -> exactly 1 expert/chip at TP=16
+(expert-parallel).  Mamba's O(1) decode state + sequence-sharded KV for the
+4 attention layers -> runs the long_500k cell (DESIGN.md §6).
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    # 1:7 attn:mamba — attention at position 4 of each 8-layer block (Jamba)
+    block_pattern=("mamba", "mamba", "mamba", "mamba", "attn", "mamba", "mamba", "mamba"),
+    ffn_pattern=("dense", "moe"),  # MoE every other layer
+    n_experts=16,
+    top_k=2,
+    capacity_factor=1.25,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    sharding_profile="tp",
+)
+
+SMOKE = CONFIG.replace(
+    name="jamba-smoke",
+    n_layers=8,  # one full Jamba block
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    n_experts=4,
+    top_k=2,
+)

@@ -1,0 +1,45 @@
+"""llama4-maverick-400b-a17b [moe] — 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048, MoE 128e top-1 (hf:meta-llama/Llama-4 family).
+
+Llama-4-Maverick style: MoE on every other layer (interleaved dense/MoE),
+128 routed experts + 1 shared expert, top-1 routing.  Early fusion noted in
+the pool; per pool instructions the backbone is text-only.  40 query heads
+pad to 48 for TP=16 (3/chip, 20% attention-path waste, documented);
+128 experts -> 8 experts/chip expert-parallel.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    head_dim=128,  # 5120 / 40
+    block_pattern=("attn",),
+    ffn_pattern=("dense", "moe"),  # MoE every other layer (Maverick)
+    n_experts=128,
+    top_k=1,
+    shared_expert=True,
+    capacity_factor=1.25,
+    pad_q_heads_to=48,  # 40 -> 48 for TP=16
+    rope_theta=500000.0,
+    sharding_profile="tp",
+)
+
+SMOKE = CONFIG.replace(
+    name="maverick-smoke",
+    n_layers=4,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    head_dim=32,
+    vocab_size=512,
+    n_experts=8,
+    top_k=1,
+    pad_q_heads_to=0,
+)

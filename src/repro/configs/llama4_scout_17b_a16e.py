@@ -1,0 +1,44 @@
+"""llama4-scout-17b-a16e [moe] — 48L d_model=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 16e top-1 (hf:meta-llama/Llama-4-Scout-17B-16E).
+
+Llama-4-Scout style: MoE on every layer, 16 routed experts + 1 shared
+expert, top-1 routing (pool label read as the 16-expert Scout variant;
+config exactly as given).  40 query heads pad to 48 for TP=16; 16 experts ->
+exactly 1 expert/chip expert-parallel.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    head_dim=128,  # 5120 / 40
+    block_pattern=("attn",),
+    ffn_pattern=("moe",),  # MoE every layer (Scout)
+    n_experts=16,
+    top_k=1,
+    shared_expert=True,
+    capacity_factor=1.25,
+    pad_q_heads_to=48,  # 40 -> 48 for TP=16
+    rope_theta=500000.0,
+    sharding_profile="tp",
+)
+
+SMOKE = CONFIG.replace(
+    name="scout-smoke",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    head_dim=32,
+    vocab_size=512,
+    n_experts=4,
+    top_k=1,
+    pad_q_heads_to=0,
+)

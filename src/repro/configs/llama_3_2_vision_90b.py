@@ -1,0 +1,39 @@
+"""llama-3.2-vision-90b [vlm] — 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256 (hf:meta-llama/Llama-3.2-11B-Vision family); cross-attention
+image layers.
+
+Pool rule: the modality frontend is a STUB — input_specs() supplies
+precomputed patch embeddings (B, n_cross_tokens, d_model); the text backbone
+cross-attends to them on every 10th layer (10 cross-attn layers over 100,
+llama-3.2-vision style), gated with a zero-init tanh gate.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    block_pattern=("attn",),
+    ffn_pattern=("dense",),
+    cross_attn_every=10,  # every 10th block cross-attends to image patches
+    n_cross_tokens=1600,  # stubbed vision frontend: ~1 tile of patches
+    rope_theta=500000.0,
+    sharding_profile="tp",
+)
+
+SMOKE = CONFIG.replace(
+    name="llama32v-smoke",
+    n_layers=4,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    cross_attn_every=2,
+    n_cross_tokens=16,
+)

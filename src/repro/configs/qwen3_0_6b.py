@@ -1,0 +1,36 @@
+"""qwen3-0.6b [dense] — 28L d_model=1024 16H (GQA kv=8) d_ff=3072
+vocab=151936 (hf:Qwen/Qwen3-8B family); qk_norm + GQA.
+
+head_dim defaults to d_model/n_heads = 64 (the pool config lists no explicit
+head_dim).  0.6B params: "fsdp" profile (pure DP compute, ZeRO-3 weights) —
+16 heads would divide TP=16 but one head per chip on a 0.6B model is all
+communication and no compute.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=3072,
+    vocab_size=151936,
+    block_pattern=("attn",),
+    ffn_pattern=("dense",),
+    qk_norm=True,  # RMSNorm on per-head q and k (Qwen3)
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+    sharding_profile="fsdp",
+)
+
+SMOKE = CONFIG.replace(
+    name="qwen3-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=192,
+    vocab_size=512,
+)

@@ -1,0 +1,91 @@
+"""Assigned input shapes and per-(arch × shape) input ShapeDtypeStructs.
+
+Shapes (pool definition):
+  train_4k     seq 4096,    global_batch 256  -> train_step
+  prefill_32k  seq 32768,   global_batch 32   -> prefill_step
+  decode_32k   cache 32768, global_batch 128  -> serve_step (one new token)
+  long_500k    cache 524288, global_batch 1   -> serve_step, sub-quadratic
+               archs only (xlstm, jamba); skipped for pure full-attention
+               archs per pool rules (DESIGN.md §6 records each skip).
+
+``input_specs`` returns ShapeDtypeStructs only — the dry-run lowers against
+them with zero device allocation (shannon/kernels pattern).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.model import init_cache
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+    # model overrides for memory/HLO-size at this shape
+    q_block: int = 2048
+    ssm_chunk: int = 256
+    sp_decode: bool = False  # sequence-parallel KV cache (long-context decode)
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train", q_block=2048, ssm_chunk=512),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill", q_block=2048, ssm_chunk=1024),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode", sp_decode=True),
+}
+
+# archs with O(1)-state / sub-quadratic decode paths run long_500k
+LONG_CONTEXT_ARCHS = {"xlstm-1.3b", "jamba-v0.1-52b"}
+
+
+def shapes_for(arch: str) -> list[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_CONTEXT_ARCHS:
+        names.append("long_500k")
+    return names
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def modality_ctx_spec(cfg: ModelConfig, batch: int):
+    """Stubbed frontend output (pool rule): precomputed patch/frame
+    embeddings of shape (B, P, d_model)."""
+    if cfg.encoder_layers:
+        return _sds((batch, cfg.encoder_seq, cfg.d_model), cfg.jdtype)
+    if cfg.cross_attn_every:
+        return _sds((batch, cfg.n_cross_tokens, cfg.d_model), cfg.jdtype)
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        ctx = modality_ctx_spec(cfg, B)
+        if ctx is not None:
+            specs["ctx"] = ctx
+        return {"batch": specs}
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        ctx = modality_ctx_spec(cfg, B)
+        if ctx is not None:
+            specs["ctx"] = ctx
+        return specs
+    # decode: one new token against a cache filled to S
+    ctx_len = cfg.encoder_seq or cfg.n_cross_tokens
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S, ctx_len))
+    return {"token": _sds((B, 1), jnp.int32), "cache": cache}

@@ -1,0 +1,35 @@
+"""smollm-135m [dense] — 30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152
+(hf:HuggingFaceTB/SmolLM-135M); llama-architecture small model.
+
+9 query heads don't divide TP=16 and the model is ~135M params, so this arch
+uses the "fsdp" profile (pure DP compute, ZeRO-3 weights over 'model') — the
+parallelism a real team would pick at this scale.  Also the ~100M-class
+end-to-end training example (examples/train_lm_telemetry.py).
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    d_ff=1536,
+    vocab_size=49152,
+    block_pattern=("attn",),
+    ffn_pattern=("dense",),
+    rope_theta=10000.0,
+    tie_embeddings=True,  # SmolLM ties lm_head to the embedding
+    sharding_profile="fsdp",
+)
+
+SMOKE = CONFIG.replace(
+    name="smollm-smoke",
+    n_layers=2,
+    d_model=96,
+    n_heads=3,
+    n_kv_heads=1,
+    d_ff=256,
+    vocab_size=256,
+)

@@ -1,0 +1,37 @@
+"""starcoder2-7b [dense] — 32L d_model=4608 36H (GQA kv=4) d_ff=18432
+vocab=49152 (arXiv:2402.19173); GQA + RoPE.
+
+36 query heads don't divide TP=16: padded to 48 (pad_q_heads_to, 33% waste on
+the attention path, documented in the roofline); kv=4 heads replicated 4×
+over the excess TP factor — standard GQA practice (DESIGN.md §5/§6).
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    n_kv_heads=4,
+    d_ff=18432,
+    vocab_size=49152,
+    head_dim=128,  # 4608 / 36
+    block_pattern=("attn",),
+    ffn_pattern=("dense",),
+    pad_q_heads_to=48,  # 36 -> 48 for TP=16 (3 heads/chip)
+    rope_theta=100000.0,
+    sharding_profile="tp",
+)
+
+SMOKE = CONFIG.replace(
+    name="starcoder2-smoke",
+    n_layers=2,
+    d_model=144,
+    n_heads=6,
+    n_kv_heads=2,
+    d_ff=384,
+    head_dim=24,
+    vocab_size=256,
+    pad_q_heads_to=8,  # exercise the padding path at smoke scale
+)

@@ -1,0 +1,46 @@
+"""whisper-base [audio] — 6L d_model=512 8H d_ff=2048 vocab=51865
+(arXiv:2212.04356); encoder-decoder with a stubbed conv frontend.
+
+Pool rule: the conv frontend is a STUB — input_specs() supplies precomputed
+frame embeddings (B, 1500, d_model) (30 s of audio at 50 Hz after the conv
+stride-2).  6 encoder layers (bidirectional, sinusoidal positions) + 6
+decoder layers, each with self-attention + cross-attention to the encoder
+output, LayerNorm + GELU as in Whisper.  decode shapes exercise the decoder
+with self- and cross-attention KV caches.
+
+Deviation (DESIGN.md §6): decoder uses RoPE instead of Whisper's learned
+positional embeddings — the pool shapes run the decoder out to 32k positions
+where learned embeddings (max 448) are undefined.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    n_layers=6,  # decoder layers
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    block_pattern=("attn",),
+    ffn_pattern=("dense",),
+    cross_attn_every=1,  # every decoder layer cross-attends
+    encoder_layers=6,
+    encoder_seq=1500,  # stubbed conv frontend output frames
+    norm="layernorm",
+    act="gelu",
+    sharding_profile="fsdp",
+)
+
+SMOKE = CONFIG.replace(
+    name="whisper-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    encoder_layers=2,
+    encoder_seq=30,
+)

@@ -1,0 +1,38 @@
+"""xlstm-1.3b [ssm] — 48L d_model=2048 4H d_ff=0 vocab=50304 (arXiv:2405.04517).
+
+sLSTM + mLSTM block stack: every 8th sequence-mix block is an sLSTM (7:1
+mLSTM:sLSTM, DESIGN.md §6); d_ff=0 means no separate FFN — the gated
+projection lives inside the block.  4 heads × head_dim 512; "GQA kv=4" is
+read as 4 (multi-head) memory heads, matching the mLSTM matrix-memory form.
+
+Parallelism: 4 heads cannot shard over TP=16 and padding 4→16 would waste 4×
+of the dominant d² projections, so this arch uses the "fsdp" profile: pure
+data-parallel compute, weights ZeRO-3-sharded over 'model' (DESIGN.md §5).
+O(1) decode state per token -> runs the long_500k cell.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=("mlstm",) * 7 + ("slstm",),  # sLSTM every 8th block
+    ffn_pattern=("none",),
+    slstm_every=8,
+    norm="rmsnorm",
+    sharding_profile="fsdp",
+)
+
+SMOKE = CONFIG.replace(
+    name="xlstm-smoke",
+    n_layers=8,  # one full mlstm/slstm cycle
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    vocab_size=256,
+)

@@ -1,0 +1,32 @@
+"""yi-6b [dense] — 32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000
+(arXiv:2403.04652); llama-architecture GQA.
+
+Clean TP=16 fit: 32 heads -> 2/chip, d_ff 11008 -> 688/chip, vocab 64000 ->
+4000/chip; kv=4 replicated 4x.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    block_pattern=("attn",),
+    ffn_pattern=("dense",),
+    rope_theta=5000000.0,
+    sharding_profile="tp",
+)
+
+SMOKE = CONFIG.replace(
+    name="yi-smoke",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=352,
+    vocab_size=512,
+)

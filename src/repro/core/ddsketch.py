@@ -1,0 +1,194 @@
+"""DDSketch (paper §2): fully-mergeable, relative-error quantile sketch.
+
+Host-tier implementation: exact Algorithms 1-4 with
+
+* a positive store (collapsing lowest keys, Algorithm 3),
+* a negative store (keys computed on |x|, collapsing highest keys, §2.2),
+* a dedicated zero bucket for values within float error of 0 (§2.2),
+* tracked min/max/sum/count (§2.2 "keep separate track of min and max"),
+* deletion (§2.1), merging (Algorithm 4), and serialization for
+  checkpointing / wire transfer.
+
+The device-tier (jit-compatible, psum-mergeable) twin lives in
+``repro.core.jax_sketch``; both share the mapping definitions.
+"""
+
+from __future__ import annotations
+
+import math
+
+from .mapping import KeyMapping, make_mapping
+from .store import make_store
+
+__all__ = ["DDSketch"]
+
+
+class DDSketch:
+    def __init__(
+        self,
+        relative_accuracy: float = 0.01,
+        max_bins: int | None = 2048,
+        mapping: str | KeyMapping = "log",
+        store: str = "dense",
+    ):
+        self.mapping = (
+            mapping if isinstance(mapping, KeyMapping) else make_mapping(mapping, relative_accuracy)
+        )
+        self._store_kind = store
+        self.max_bins = max_bins
+        self.store = make_store(store, max_bins)  # positive values
+        # Negative store: keys from |x|; collapse must eat the *highest* keys
+        # (largest magnitudes) per §2.2.
+        self.negative_store = make_store(
+            "dense_high" if store == "dense" else store, max_bins
+        )
+        self.zero_count = 0
+        self.min = math.inf
+        self.max = -math.inf
+        self.sum = 0.0
+
+    # ------------------------------------------------------------------ #
+    @property
+    def count(self) -> int:
+        return self.store.count + self.negative_store.count + self.zero_count
+
+    @property
+    def avg(self) -> float:
+        return self.sum / self.count if self.count else math.nan
+
+    def num_bins(self) -> int:
+        return self.store.num_bins() + self.negative_store.num_bins()
+
+    def byte_size(self) -> int:
+        return self.store.byte_size() + self.negative_store.byte_size() + 64
+
+    # ------------------------------------------------------------------ #
+    def add(self, value: float, weight: int = 1) -> None:
+        """Algorithm 1 / Algorithm 3 insert, extended to all of R (§2.2)."""
+        if weight <= 0:
+            raise ValueError("weight must be positive")
+        value = float(value)
+        if value > self.mapping.min_indexable:
+            self.store.add(self.mapping.key(value), weight)
+        elif value < -self.mapping.min_indexable:
+            self.negative_store.add(self.mapping.key(-value), weight)
+        else:
+            self.zero_count += weight
+        self.min = min(self.min, value)
+        self.max = max(self.max, value)
+        self.sum += value * weight
+
+    def extend(self, values) -> None:
+        for v in values:
+            self.add(float(v))
+
+    def delete(self, value: float, weight: int = 1) -> None:
+        """Paper §2.1: deletion decrements the bucket counter.
+
+        min/max cannot be maintained exactly under deletion; they become
+        conservative bounds (documented limitation shared by the reference
+        implementations).
+        """
+        value = float(value)
+        if value > self.mapping.min_indexable:
+            self.store.remove(self.mapping.key(value), weight)
+        elif value < -self.mapping.min_indexable:
+            self.negative_store.remove(self.mapping.key(-value), weight)
+        else:
+            if self.zero_count < weight:
+                raise ValueError("cannot delete more zeros than were added")
+            self.zero_count -= weight
+        self.sum -= value * weight
+
+    # ------------------------------------------------------------------ #
+    def quantile(self, q: float) -> float:
+        """Algorithm 2 extended over (negatives, zero, positives)."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"q must be in [0,1], got {q}")
+        n = self.count
+        if n == 0:
+            return math.nan
+        # extrema are tracked exactly (§2.2); answer them exactly like the
+        # reference implementations do
+        if q == 0.0:
+            return self.min
+        if q == 1.0:
+            return self.max
+        rank = q * (n - 1)  # Algorithm 2's threshold: first bucket w/ cum > rank
+
+        neg = self.negative_store.count
+        if rank < neg:
+            # walk negatives from most-negative upward == descending |x| keys
+            running = 0
+            for key, cnt in self.negative_store.items_descending():
+                running += cnt
+                if running > rank:
+                    est = -self.mapping.value(key)
+                    break
+        elif rank < neg + self.zero_count:
+            est = 0.0
+        else:
+            key = self.store.key_at_rank(rank - neg - self.zero_count)
+            est = self.mapping.value(key)
+        # Clamp with the exactly-tracked extrema (never hurts the guarantee).
+        return min(max(est, self.min), self.max)
+
+    def quantiles(self, qs) -> list[float]:
+        return [self.quantile(q) for q in qs]
+
+    # ------------------------------------------------------------------ #
+    def merge(self, other: "DDSketch") -> None:
+        """Algorithm 4. Requires identical gamma/mapping (data-independent
+        bucket boundaries are what make the merge exact)."""
+        if self.mapping != other.mapping:
+            raise ValueError(
+                f"cannot merge sketches with different mappings: "
+                f"{self.mapping} vs {other.mapping}"
+            )
+        self.store.merge(other.store)
+        self.negative_store.merge(other.negative_store)
+        self.zero_count += other.zero_count
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        self.sum += other.sum
+
+    def copy(self) -> "DDSketch":
+        return DDSketch.from_dict(self.to_dict())
+
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> dict:
+        return {
+            "mapping": self.mapping.to_dict(),
+            "store_kind": self._store_kind,
+            "max_bins": self.max_bins,
+            "store": self.store.to_dict(),
+            "negative_store": self.negative_store.to_dict(),
+            "zero_count": self.zero_count,
+            "min": self.min,
+            "max": self.max,
+            "sum": self.sum,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DDSketch":
+        sk = cls(
+            relative_accuracy=d["mapping"]["relative_accuracy"],
+            max_bins=d["max_bins"],
+            mapping=d["mapping"]["kind"],
+            store=d["store_kind"],
+        )
+        for key, cnt in zip(d["store"]["keys"], d["store"]["counts"]):
+            sk.store.add(int(key), int(cnt))
+        for key, cnt in zip(d["negative_store"]["keys"], d["negative_store"]["counts"]):
+            sk.negative_store.add(int(key), int(cnt))
+        sk.zero_count = d["zero_count"]
+        sk.min = d["min"]
+        sk.max = d["max"]
+        sk.sum = d["sum"]
+        return sk
+
+    def __repr__(self) -> str:
+        return (
+            f"DDSketch(alpha={self.mapping.relative_accuracy}, n={self.count}, "
+            f"bins={self.num_bins()}, min={self.min:.4g}, max={self.max:.4g})"
+        )

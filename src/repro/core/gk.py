@@ -1,0 +1,125 @@
+"""GKArray — the Greenwald-Khanna rank-error sketch (paper §1.2, §4).
+
+The paper benchmarks its own optimized 'GKArray' variant [12]: a GK summary
+that buffers incoming values and merges them into the tuple array in sorted
+batches. Guarantee: after n insertions, the rank error of any quantile
+estimate is < eps * n. GK is only *one-way* mergeable (merging loses the
+tight bound; repeated merging degrades) — the paper's Table 1 contrast with
+DDSketch's full mergeability.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+__all__ = ["GKArray"]
+
+
+class _Entry:
+    __slots__ = ("v", "g", "delta")
+
+    def __init__(self, v: float, g: int, delta: int):
+        self.v = v
+        self.g = g
+        self.delta = delta
+
+
+class GKArray:
+    def __init__(self, eps: float = 0.01):
+        if not 0 < eps < 1:
+            raise ValueError("eps must be in (0,1)")
+        self.eps = eps
+        self.entries: list[_Entry] = []
+        self.buffer: list[float] = []
+        self._buffer_cap = max(int(1.0 / eps), 4)
+        self.count = 0
+        self.min = math.inf
+        self.max = -math.inf
+
+    # ------------------------------------------------------------------ #
+    def add(self, value: float, weight: int = 1) -> None:
+        for _ in range(weight):
+            self.buffer.append(float(value))
+        self.count += weight
+        self.min = min(self.min, value)
+        self.max = max(self.max, value)
+        if len(self.buffer) >= self._buffer_cap:
+            self._flush()
+
+    def extend(self, values) -> None:
+        for v in values:
+            self.add(float(v))
+
+    def _flush(self) -> None:
+        if not self.buffer:
+            return
+        incoming = sorted(self.buffer)
+        self.buffer = []
+        removal_threshold = 2.0 * self.eps * (self.count - 1)
+        merged: list[_Entry] = []
+        i = j = 0
+        ent = self.entries
+        while i < len(incoming) or j < len(ent):
+            take_new = j >= len(ent) or (i < len(incoming) and incoming[i] < ent[j].v)
+            if take_new:
+                # delta for a new tuple inserted mid-summary
+                delta = int(removal_threshold) if merged and j < len(ent) else 0
+                cand = _Entry(incoming[i], 1, delta)
+                i += 1
+            else:
+                cand = ent[j]
+                j += 1
+            # greedy compress: fold into previous when the band allows
+            if merged and merged[-1].g + cand.g + cand.delta <= removal_threshold:
+                cand.g += merged[-1].g
+                merged.pop()
+            merged.append(cand)
+        self.entries = merged
+
+    # ------------------------------------------------------------------ #
+    def quantile(self, q: float) -> float:
+        if not 0 <= q <= 1:
+            raise ValueError("q must be in [0,1]")
+        if self.count == 0:
+            return math.nan
+        self._flush()
+        if not self.entries:
+            return math.nan
+        # sketches-go GKArray query: first entry whose worst-case max rank
+        # (g_sum + delta) exceeds rank + spread; report the previous value.
+        rank = int(q * (self.count - 1)) + 1
+        spread = int(self.eps * (self.count - 1))
+        g_sum = 0
+        i = 0
+        for e in self.entries:
+            g_sum += e.g
+            if g_sum + e.delta > rank + spread:
+                break
+            i += 1
+        if i == 0:
+            return self.min
+        return self.entries[i - 1].v
+
+    def quantiles(self, qs) -> list[float]:
+        return [self.quantile(q) for q in qs]
+
+    # ------------------------------------------------------------------ #
+    def merge(self, other: "GKArray") -> None:
+        """One-way merge: replay the other summary's mass into this one.
+
+        Rank error grows to eps_self + eps_other in the worst case — GK is
+        not fully mergeable (Table 1)."""
+        other._flush()
+        for e in other.entries:
+            self.add(e.v, e.g)
+        for v in other.buffer:
+            self.add(v)
+
+    def num_entries(self) -> int:
+        return len(self.entries) + len(self.buffer)
+
+    def byte_size(self) -> int:
+        # v, g, delta per entry (8+8+8) + buffered float64s
+        return 24 * len(self.entries) + 8 * self._buffer_cap + 48

@@ -1,0 +1,140 @@
+"""HDR-Histogram-style sketch (paper §1.2: relative error, *bounded* range).
+
+Buckets: per power-of-two 'bucket', ``sub_bucket_count`` linear sub-buckets
+sized to resolve ``significant_digits`` decimal digits. Insertion is pure
+bit manipulation (no log), which is why the paper finds HDR inserts faster
+than logarithmic-mapping DDSketch, at the cost of (a) a bounded trackable
+range fixed at construction and (b) a significantly larger footprint
+(paper Fig. 6).
+
+Fully mergeable: counts arrays with identical parameters sum elementwise
+(the paper notes merges of the Java implementation are slow due to its
+iterator machinery; the mergeability itself is structural, as here).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+__all__ = ["HDRHistogram"]
+
+
+class HDRHistogram:
+    def __init__(
+        self,
+        significant_digits: int = 2,
+        lowest_discernible: float = 1e-9,
+        highest_trackable: float = 1e12,
+    ):
+        if not 1 <= significant_digits <= 5:
+            raise ValueError("significant_digits in [1,5]")
+        self.significant_digits = significant_digits
+        self.lowest_discernible = float(lowest_discernible)
+        self.highest_trackable = float(highest_trackable)
+
+        # smallest power of 2 with >= 10^d distinct linear steps
+        largest_resolvable = 2 * 10 ** significant_digits
+        self.sub_bucket_count = 1 << math.ceil(math.log2(largest_resolvable))
+        self.sub_bucket_half_count = self.sub_bucket_count // 2
+        self.sub_bucket_mask = self.sub_bucket_count - 1
+
+        # work in units of lowest_discernible so unit value 1 is the floor
+        self._unit = self.lowest_discernible
+        max_units = self.highest_trackable / self._unit
+        # number of power-of-two buckets needed to cover max_units
+        buckets = 1
+        smallest_untrackable = self.sub_bucket_count
+        while smallest_untrackable <= max_units:
+            smallest_untrackable <<= 1
+            buckets += 1
+        self.bucket_count = buckets
+        n_counts = (buckets + 1) * self.sub_bucket_half_count
+        self.counts = np.zeros(n_counts, dtype=np.int64)
+        self.count = 0
+        self.min = math.inf
+        self.max = -math.inf
+
+    # ------------------------------------------------------------------ #
+    def _index_of(self, value: float) -> int:
+        units = int(value / self._unit)
+        if units < 0:
+            raise ValueError("HDRHistogram only handles non-negative values")
+        # bucket b holds units whose highest set bit is at position
+        # (sub_bucket_magnitude - 1 + b); sub = units >> b lies in
+        # [half_count, count) for b > 0 and [0, count) for b == 0.
+        m = self.sub_bucket_count.bit_length() - 1  # log2(sub_bucket_count)
+        bucket = max((units | self.sub_bucket_mask).bit_length() - m, 0)
+        sub = units >> bucket
+        return (bucket + 1) * self.sub_bucket_half_count + (sub - self.sub_bucket_half_count)
+
+    def _value_at(self, index: int) -> float:
+        bucket = index // self.sub_bucket_half_count - 1
+        sub = index % self.sub_bucket_half_count + self.sub_bucket_half_count
+        if bucket < 0:
+            bucket = 0
+            sub -= self.sub_bucket_half_count
+        lo = sub << bucket
+        hi = lo + (1 << bucket)
+        # midpoint of the linear sub-bucket, back to value units
+        return 0.5 * (lo + hi) * self._unit
+
+    # ------------------------------------------------------------------ #
+    def add(self, value: float, weight: int = 1) -> None:
+        if value > self.highest_trackable:
+            raise ValueError(
+                f"value {value} above highest_trackable {self.highest_trackable} "
+                f"(HDR's bounded-range limitation, paper Table 1)"
+            )
+        idx = self._index_of(max(float(value), 0.0))
+        if idx >= len(self.counts):
+            idx = len(self.counts) - 1
+        self.counts[idx] += weight
+        self.count += weight
+        self.min = min(self.min, value)
+        self.max = max(self.max, value)
+
+    def extend(self, values) -> None:
+        for v in values:
+            self.add(float(v))
+
+    # ------------------------------------------------------------------ #
+    def quantile(self, q: float) -> float:
+        if self.count == 0:
+            return math.nan
+        rank = q * (self.count - 1)
+        running = 0
+        for idx in np.flatnonzero(self.counts):
+            running += int(self.counts[idx])
+            if running > rank:
+                est = self._value_at(int(idx))
+                return min(max(est, self.min), self.max)
+        return self.max
+
+    def quantiles(self, qs) -> list[float]:
+        return [self.quantile(q) for q in qs]
+
+    def merge(self, other: "HDRHistogram") -> None:
+        if (
+            self.significant_digits != other.significant_digits
+            or self.lowest_discernible != other.lowest_discernible
+            or self.highest_trackable != other.highest_trackable
+        ):
+            raise ValueError("HDR histograms must share parameters to merge")
+        self.counts += other.counts
+        self.count += other.count
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+
+    def num_bins(self) -> int:
+        return int(np.count_nonzero(self.counts))
+
+    def byte_size(self) -> int:
+        return 8 * len(self.counts) + 64
+
+
+def _clz64(x: int) -> int:
+    if x == 0:
+        return 64
+    return 64 - x.bit_length()

@@ -1,0 +1,275 @@
+"""Device-tier DDSketch: a jit/vmap/psum-compatible twin of ``DDSketch``.
+
+The paper's headline property — *full mergeability* (Algorithm 4: merging is
+a per-key sum because bucket boundaries are data-independent) — is exactly
+the algebraic requirement of ``jax.lax.psum``: an associative, commutative
+combiner.  A DDSketch with a fixed bucket range is therefore an ordinary
+dense array that can live *inside* a pjit-compiled train step, sharded or
+replicated like any activation, and cross-device merging is a single
+all-reduce.
+
+Differences vs. the host tier (``repro.core.ddsketch.DDSketch``), all
+documented in DESIGN.md §3:
+
+* **Static geometry.** ``jax.lax`` cannot grow a dict, so the indexable key
+  range ``[offset, offset + m)`` is fixed at trace time (``BucketSpec``).
+  Keys below the range clamp into bucket 0 — the static analogue of
+  Algorithm 3's collapse-lowest (Proposition 4's guarantee shape applies:
+  quantiles above the collapsed mass stay alpha-accurate).  Keys above the
+  range clamp into the top bucket and are tallied in ``overflow`` so the
+  caller can detect guarantee loss (never observed with the default range,
+  which spans ~1.2e-9 .. 8e8 at alpha=0.01, m=2048).
+* **float32 counts.** Exact for window counts below 2^24; the telemetry
+  layer flushes windows into the (int64, dynamically-sized) host sketch,
+  mirroring the paper's agent -> aggregator pipeline.
+* **Insertion is a vectorized histogram**, not a scalar scatter loop; the
+  Pallas kernel path (``repro.kernels``) tiles it through VMEM.
+
+Both tiers share the key mappings; cross-tier equality is tested in
+``tests/test_jax_sketch.py``.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ddsketch import DDSketch
+from repro.kernels.ref import BucketSpec, bucket_index, histogram_ref
+
+__all__ = [
+    "BucketSpec",
+    "DeviceSketch",
+    "empty",
+    "add",
+    "merge",
+    "allreduce",
+    "quantile",
+    "quantiles",
+    "to_host",
+    "from_host",
+    "bucket_values",
+]
+
+
+class DeviceSketch(NamedTuple):
+    """DDSketch state as a pytree of arrays (all float32).
+
+    ``pos[i]`` counts values x with key(x) - offset == i (clamped); ``neg``
+    mirrors it for negative values keyed on |x| (collapse direction handled
+    at query time by walking descending keys first, per paper §2.2).
+    """
+
+    pos: jnp.ndarray  # (m,) bucket counts for positive values
+    neg: jnp.ndarray  # (m,) bucket counts for negative values (keys of |x|)
+    zero: jnp.ndarray  # () count of |x| <= min_indexable
+    overflow: jnp.ndarray  # () count of |x| clamped into the top bucket
+    summ: jnp.ndarray  # () running sum (for avg, as in §1's count/sum rollups)
+    vmin: jnp.ndarray  # () exact running min   (§2.2 "keep separate track")
+    vmax: jnp.ndarray  # () exact running max
+
+    @property
+    def count(self) -> jnp.ndarray:
+        return self.pos.sum() + self.neg.sum() + self.zero
+
+
+def empty(spec: BucketSpec) -> DeviceSketch:
+    m = spec.num_buckets
+    return DeviceSketch(
+        pos=jnp.zeros(m, jnp.float32),
+        neg=jnp.zeros(m, jnp.float32),
+        zero=jnp.zeros((), jnp.float32),
+        overflow=jnp.zeros((), jnp.float32),
+        summ=jnp.zeros((), jnp.float32),
+        vmin=jnp.asarray(jnp.inf, jnp.float32),
+        vmax=jnp.asarray(-jnp.inf, jnp.float32),
+    )
+
+
+def _histogram(values, weights, spec: BucketSpec, use_kernel: bool):
+    if use_kernel:
+        from repro.kernels import ops
+
+        return ops.ddsketch_histogram(values, weights, spec=spec)
+    return histogram_ref(values, weights, spec=spec)
+
+
+@partial(jax.jit, static_argnames=("spec", "use_kernel"))
+def add(
+    sketch: DeviceSketch,
+    values: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    spec: BucketSpec,
+    use_kernel: bool = False,
+) -> DeviceSketch:
+    """Vectorized Algorithm 1 over a batch of values (any shape).
+
+    Non-finite entries are ignored.  Positive / negative / near-zero routing
+    follows the host implementation exactly.
+    """
+    x = values.reshape(-1).astype(jnp.float32)
+    w = jnp.ones_like(x) if weights is None else weights.reshape(-1).astype(jnp.float32)
+    finite = jnp.isfinite(x)
+    w = jnp.where(finite, w, 0.0)
+
+    is_pos = finite & (x > spec.min_indexable)
+    is_neg = finite & (x < -spec.min_indexable)
+    is_zero = finite & ~is_pos & ~is_neg
+
+    pos_hist = _histogram(jnp.where(is_pos, x, -1.0), w, spec, use_kernel)
+    neg_hist = _histogram(jnp.where(is_neg, -x, -1.0), w, spec, use_kernel)
+
+    top_key = jnp.float32(spec.offset + spec.num_buckets - 1)
+    # overflow accounting: values whose (unclamped) key exceeds the top key
+    from repro.kernels.ref import approx_log2
+
+    raw_key = jnp.ceil(approx_log2(jnp.abs(jnp.where(finite, x, 1.0)), spec.mapping)
+                       * jnp.float32(spec.multiplier))
+    over = ((is_pos | is_neg) & (raw_key > top_key))
+    overflow = (w * over).sum()
+
+    any_valid = finite.any()
+    xmasked = jnp.where(finite & (w > 0), x, jnp.inf)
+    vmin = jnp.minimum(sketch.vmin, jnp.where(any_valid, xmasked.min(), jnp.inf))
+    xmasked = jnp.where(finite & (w > 0), x, -jnp.inf)
+    vmax = jnp.maximum(sketch.vmax, jnp.where(any_valid, xmasked.max(), -jnp.inf))
+
+    return DeviceSketch(
+        pos=sketch.pos + pos_hist,
+        neg=sketch.neg + neg_hist,
+        zero=sketch.zero + (w * is_zero).sum(),
+        overflow=sketch.overflow + overflow,
+        summ=sketch.summ + (w * jnp.where(finite, x, 0.0)).sum(),
+        vmin=vmin,
+        vmax=vmax,
+    )
+
+
+def merge(a: DeviceSketch, b: DeviceSketch) -> DeviceSketch:
+    """Algorithm 4 on fixed geometry: a per-bucket '+' (hence psum-able)."""
+    return DeviceSketch(
+        pos=a.pos + b.pos,
+        neg=a.neg + b.neg,
+        zero=a.zero + b.zero,
+        overflow=a.overflow + b.overflow,
+        summ=a.summ + b.summ,
+        vmin=jnp.minimum(a.vmin, b.vmin),
+        vmax=jnp.maximum(a.vmax, b.vmax),
+    )
+
+
+def allreduce(sketch: DeviceSketch, axis_name) -> DeviceSketch:
+    """Cross-device Algorithm 4: full mergeability == all-reducibility.
+
+    ``axis_name`` may be a single mesh axis or a tuple (e.g. merge within a
+    pod over ('data','model') then globally over 'pod').
+    """
+    return DeviceSketch(
+        pos=jax.lax.psum(sketch.pos, axis_name),
+        neg=jax.lax.psum(sketch.neg, axis_name),
+        zero=jax.lax.psum(sketch.zero, axis_name),
+        overflow=jax.lax.psum(sketch.overflow, axis_name),
+        summ=jax.lax.psum(sketch.summ, axis_name),
+        vmin=jax.lax.pmin(sketch.vmin, axis_name),
+        vmax=jax.lax.pmax(sketch.vmax, axis_name),
+    )
+
+
+def bucket_values(spec: BucketSpec) -> np.ndarray:
+    """Per-bucket relative-error midpoint estimates (Lemma 2), precomputed.
+
+    Exact host math (float64) baked in as a trace-time constant — 2048
+    floats, negligible, and keeps the device query bit-identical to the
+    host query for uncollapsed data.
+    """
+    from repro.core.mapping import make_mapping
+
+    m = make_mapping(spec.mapping, spec.relative_accuracy)
+    keys = np.arange(spec.offset, spec.offset + spec.num_buckets)
+    return np.array([m.value(int(k)) for k in keys], dtype=np.float64)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def quantile(sketch: DeviceSketch, q, *, spec: BucketSpec) -> jnp.ndarray:
+    """Algorithm 2 over (negatives desc-by-key, zero, positives asc-by-key).
+
+    Vectorized: the three stores concatenate into one monotone value line;
+    the answer is the first bucket whose cumulative count exceeds q(n-1)
+    (found with a searchsorted on the cumsum instead of the paper's loop).
+    """
+    vals = jnp.asarray(bucket_values(spec), jnp.float32)
+    line_vals = jnp.concatenate([-vals[::-1], jnp.zeros((1,), jnp.float32), vals])
+    line_counts = jnp.concatenate(
+        [sketch.neg[::-1], sketch.zero[None], sketch.pos]
+    )
+    n = line_counts.sum()
+    qf = jnp.asarray(q, jnp.float32)
+    rank = qf * jnp.maximum(n - 1.0, 0.0)
+    cum = jnp.cumsum(line_counts)
+    idx = jnp.searchsorted(cum, rank, side="right")
+    idx = jnp.clip(idx, 0, line_vals.shape[0] - 1)
+    est = line_vals[idx]
+    est = jnp.clip(est, sketch.vmin, sketch.vmax)  # exact-extrema clamp
+    # extrema answered exactly (§2.2), mirroring the host tier
+    est = jnp.where(qf <= 0.0, sketch.vmin, jnp.where(qf >= 1.0, sketch.vmax, est))
+    return jnp.where(n > 0, est, jnp.nan)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def quantiles(sketch: DeviceSketch, qs: jnp.ndarray, *, spec: BucketSpec) -> jnp.ndarray:
+    return jax.vmap(lambda q: quantile(sketch, q, spec=spec))(jnp.asarray(qs))
+
+
+# --------------------------------------------------------------------- #
+# host <-> device conversion (telemetry window flush / checkpoint restore)
+# --------------------------------------------------------------------- #
+def to_host(sketch: DeviceSketch, spec: BucketSpec) -> DDSketch:
+    """Flush a device window into the exact, unbounded host sketch.
+
+    Bucket keys map 1:1 (same mapping, same gamma), so this is lossless —
+    it is Algorithm 4 with one operand stored dense-with-offset.
+    """
+    host = DDSketch(
+        relative_accuracy=spec.relative_accuracy,
+        max_bins=None,
+        mapping=spec.mapping,
+        store="dense",
+    )
+    pos = np.asarray(sketch.pos)
+    neg = np.asarray(sketch.neg)
+    for i in np.flatnonzero(pos):
+        host.store.add(spec.offset + int(i), int(round(float(pos[i]))))
+    for i in np.flatnonzero(neg):
+        host.negative_store.add(spec.offset + int(i), int(round(float(neg[i]))))
+    host.zero_count = int(round(float(sketch.zero)))
+    vmin, vmax = float(sketch.vmin), float(sketch.vmax)
+    host.min = vmin if math.isfinite(vmin) else math.inf
+    host.max = vmax if math.isfinite(vmax) else -math.inf
+    host.sum = float(sketch.summ)
+    return host
+
+
+def from_host(host: DDSketch, spec: BucketSpec) -> DeviceSketch:
+    """Load host-sketch counts into device geometry (keys clamp into range)."""
+    sk = empty(spec)
+    pos = np.zeros(spec.num_buckets, np.float32)
+    neg = np.zeros(spec.num_buckets, np.float32)
+    for key, cnt in host.store.items_ascending():
+        pos[np.clip(key - spec.offset, 0, spec.num_buckets - 1)] += cnt
+    for key, cnt in host.negative_store.items_ascending():
+        neg[np.clip(key - spec.offset, 0, spec.num_buckets - 1)] += cnt
+    return DeviceSketch(
+        pos=jnp.asarray(pos),
+        neg=jnp.asarray(neg),
+        zero=jnp.asarray(float(host.zero_count), jnp.float32),
+        overflow=sk.overflow,
+        summ=jnp.asarray(float(host.sum), jnp.float32),
+        vmin=jnp.asarray(host.min if host.count else np.inf, jnp.float32),
+        vmax=jnp.asarray(host.max if host.count else -np.inf, jnp.float32),
+    )

@@ -1,0 +1,143 @@
+"""Moments sketch (paper §1.2, [19]): power sums + maxent-style quantiles.
+
+Stores {count, min, max, sum x^i for i=1..k} — O(k) memory independent of n
+(paper Fig. 6) and trivially mergeable (sums add). Quantile estimation here
+reconstructs a discrete proxy distribution via Gauss quadrature
+(Golub-Welsch on the Hankel moment matrix) instead of the reference's
+Chebyshev-maxent solver; both approaches answer quantiles from the same
+moment vector, with only *average* rank-error-style accuracy (Table 1).
+Following the paper's setup we apply the arcsinh "compression" transform,
+which tames heavy tails before taking powers.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+__all__ = ["MomentsSketch"]
+
+
+class MomentsSketch:
+    def __init__(self, k: int = 20, compressed: bool = True):
+        if k < 2:
+            raise ValueError("k must be >= 2")
+        self.k = k
+        self.compressed = compressed
+        self.power_sums = np.zeros(k + 1, dtype=np.float64)  # sum of t^i
+        self.min = math.inf
+        self.max = -math.inf
+
+    # ------------------------------------------------------------------ #
+    def _fwd(self, x: float) -> float:
+        return math.asinh(x) if self.compressed else x
+
+    def _bwd(self, t: float) -> float:
+        return math.sinh(t) if self.compressed else t
+
+    @property
+    def count(self) -> int:
+        return int(self.power_sums[0])
+
+    def add(self, value: float, weight: int = 1) -> None:
+        t = self._fwd(float(value))
+        self.power_sums += weight * np.power(t, np.arange(self.k + 1))
+        self.min = min(self.min, value)
+        self.max = max(self.max, value)
+
+    def extend(self, values) -> None:
+        values = np.asarray(values, dtype=np.float64)
+        t = np.arcsinh(values) if self.compressed else values
+        # vectorized power-sum accumulation
+        powers = t[None, :] ** np.arange(self.k + 1)[:, None]
+        self.power_sums += powers.sum(axis=1)
+        if values.size:
+            self.min = min(self.min, float(values.min()))
+            self.max = max(self.max, float(values.max()))
+
+    def merge(self, other: "MomentsSketch") -> None:
+        if self.k != other.k or self.compressed != other.compressed:
+            raise ValueError("MomentsSketch parameters must match to merge")
+        self.power_sums += other.power_sums
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+
+    # ------------------------------------------------------------------ #
+    def _quadrature(self) -> tuple[np.ndarray, np.ndarray]:
+        """Nodes/weights of the Gauss quadrature matching the moments.
+
+        Standardizes the (transformed) support to [-1, 1], builds the
+        largest numerically-PSD Hankel system, and applies Golub-Welsch.
+        """
+        n = self.count
+        if n == 0:
+            return np.array([]), np.array([])
+        tmin, tmax = self._fwd(self.min), self._fwd(self.max)
+        if tmax <= tmin:
+            return np.array([self._fwd(self.min)]), np.array([1.0])
+        # moments of u = (2t - (tmin+tmax)) / (tmax - tmin) via binomial expansion
+        a = 2.0 / (tmax - tmin)
+        b = -(tmax + tmin) / (tmax - tmin)
+        raw = self.power_sums / n  # E[t^i]
+        k = self.k
+        u_mom = np.zeros(k + 1)
+        for i in range(k + 1):
+            # E[(a t + b)^i] = sum_j C(i,j) a^j b^(i-j) E[t^j]
+            js = np.arange(i + 1)
+            u_mom[i] = np.sum(
+                [math.comb(i, j) * a**j * b ** (i - j) * raw[j] for j in js]
+            )
+        # find largest p with PSD Hankel (conditioning guard)
+        for p in range(k // 2, 0, -1):
+            H = np.array([[u_mom[i + j] for j in range(p + 1)] for i in range(p + 1)])
+            try:
+                # three-term recurrence coefficients via Cholesky of Hankel
+                L = np.linalg.cholesky(H + 1e-12 * np.eye(p + 1))
+            except np.linalg.LinAlgError:
+                continue
+            alpha = np.zeros(p)
+            beta = np.zeros(p - 1) if p > 1 else np.zeros(0)
+            d = np.diag(L)
+            e = np.diag(L, -1) if p >= 1 else np.array([])
+            for i in range(p):
+                alpha[i] = e[i] / d[i] - (e[i - 1] / d[i - 1] if i > 0 else 0.0)
+            for i in range(p - 1):
+                beta[i] = d[i + 1] / d[i]
+            J = np.diag(alpha) + np.diag(beta, 1) + np.diag(beta, -1)
+            nodes, vecs = np.linalg.eigh(J)
+            weights = vecs[0, :] ** 2
+            if np.all(np.isfinite(nodes)) and np.all(weights >= -1e-9):
+                # back to t then to value space
+                t_nodes = (nodes - b) / a
+                return t_nodes, np.maximum(weights, 0.0)
+        return np.array([(tmin + tmax) / 2.0]), np.array([1.0])
+
+    def quantile(self, q: float) -> float:
+        if self.count == 0:
+            return math.nan
+        nodes, weights = self._quadrature()
+        order = np.argsort(nodes)
+        nodes, weights = nodes[order], weights[order]
+        cdf = np.cumsum(weights) / np.sum(weights)
+        idx = int(np.searchsorted(cdf, q, side="left"))
+        idx = min(idx, len(nodes) - 1)
+        est = self._bwd(float(nodes[idx]))
+        return min(max(est, self.min), self.max)
+
+    def quantiles(self, qs) -> list[float]:
+        if self.count == 0:
+            return [math.nan for _ in qs]
+        nodes, weights = self._quadrature()
+        order = np.argsort(nodes)
+        nodes, weights = nodes[order], weights[order]
+        cdf = np.cumsum(weights) / np.sum(weights)
+        out = []
+        for q in qs:
+            idx = min(int(np.searchsorted(cdf, q, side="left")), len(nodes) - 1)
+            est = self._bwd(float(nodes[idx]))
+            out.append(min(max(est, self.min), self.max))
+        return out
+
+    def byte_size(self) -> int:
+        return 8 * (self.k + 1) + 24

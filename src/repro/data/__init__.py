@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLM, make_batch_specs  # noqa: F401
+from repro.data.datasets import make_dataset, DATASETS  # noqa: F401
+from repro.data.loader import PrefetchLoader  # noqa: F401

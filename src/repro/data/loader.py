@@ -1,0 +1,69 @@
+"""Host prefetch loader: overlaps batch generation with device compute.
+
+A background thread keeps ``depth`` batches ready; ``device_put`` with the
+batch's NamedShardings happens on the consumer side so the arrays land
+already sharded (no host-side gather on the critical path).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+
+__all__ = ["PrefetchLoader"]
+
+
+class PrefetchLoader:
+    def __init__(self, source, shardings=None, depth: int = 2):
+        """``source`` has next_batch() -> dict of np arrays; ``shardings``
+        is an optional matching dict of NamedShardings."""
+        self.source = source
+        self.shardings = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._exc: BaseException | None = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            while not self._stop.is_set():
+                batch = self.source.next_batch()
+                # block until there is room; check stop flag periodically
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(batch, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:  # surface worker errors to the consumer
+            self._exc = e
+
+    def next(self):
+        while True:
+            if self._exc is not None:
+                raise self._exc
+            try:
+                batch = self._q.get(timeout=0.5)
+                break
+            except queue.Empty:
+                if not self._thread.is_alive() and self._exc is None:
+                    raise RuntimeError("prefetch worker exited")
+        if self.shardings is not None:
+            return {
+                k: jax.device_put(v, self.shardings[k]) if k in self.shardings else v
+                for k, v in batch.items()
+            }
+        return batch
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

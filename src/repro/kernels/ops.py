@@ -1,0 +1,50 @@
+"""Public jit'd entry points for the DDSketch kernels.
+
+``ddsketch_histogram`` dispatches to the Pallas kernel on TPU and to
+interpret-mode Pallas (or the pure-XLA reference) elsewhere.  The semantics
+contract is ``repro.kernels.ref.histogram_ref``; tests sweep shapes, dtypes
+and mappings asserting exact agreement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ddsketch_hist import histogram_pallas
+from repro.kernels.ref import BucketSpec, histogram_ref
+
+__all__ = ["ddsketch_histogram", "BucketSpec"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ddsketch_histogram(
+    values: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    spec: BucketSpec,
+    value_tile: int = 2048,
+    bucket_tile: int = 512,
+    force: str | None = None,  # "pallas" | "interpret" | "ref" | None(auto)
+) -> jnp.ndarray:
+    """Bucket counts (m,) of the positive finite entries of ``values``.
+
+    ``force`` pins an implementation (tests use "interpret" and "ref");
+    the default picks the compiled kernel on TPU and the reference XLA
+    scatter path on CPU/GPU (interpret-mode Pallas is a correctness tool,
+    not a fast path).
+    """
+    if force == "ref" or (force is None and not _on_tpu()):
+        return histogram_ref(values, weights, spec=spec)
+    interpret = force == "interpret" or (force is None and not _on_tpu())
+    return histogram_pallas(
+        values,
+        weights,
+        spec=spec,
+        value_tile=value_tile,
+        bucket_tile=bucket_tile,
+        interpret=interpret,
+    )

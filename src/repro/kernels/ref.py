@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for the DDSketch bucket kernels.
+
+These define the *semantics* the Pallas kernels must match bit-for-bit
+(same float32 index math), and serve as the XLA fallback path on hardware
+without Pallas support. Shared by tests (assert_allclose vs kernels) and by
+``repro.core.jax_sketch``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["BucketSpec", "bucket_index", "histogram_ref", "approx_log2"]
+
+
+@dataclass(frozen=True)
+class BucketSpec:
+    """Static device-sketch geometry (trace-time constants).
+
+    The device sketch covers keys [offset, offset + num_buckets); keys below
+    collapse into bucket 0 (the static analogue of Algorithm 3's
+    collapse-lowest), keys above clamp into the top bucket and are counted
+    as overflow by the caller.
+    """
+
+    relative_accuracy: float = 0.01
+    num_buckets: int = 2048
+    offset: int = -1024  # key of bucket 0
+    mapping: str = "log"  # "log" | "linear" | "cubic"
+
+    @property
+    def gamma(self) -> float:
+        return (1.0 + self.relative_accuracy) / (1.0 - self.relative_accuracy)
+
+    @property
+    def multiplier(self) -> float:
+        """key = ceil(_log(x) * multiplier); _log is log2-based for the
+        interpolated mappings and natural-log based for "log"."""
+        if self.mapping == "log":
+            return 1.0 / math.log(self.gamma)
+        if self.mapping == "linear":
+            return 1.0 / math.log(self.gamma)
+        if self.mapping == "cubic":
+            from repro.core.mapping import _CUBIC_CORR
+
+            return _CUBIC_CORR / math.log2(self.gamma)
+        raise ValueError(f"unknown mapping {self.mapping}")
+
+    @property
+    def min_indexable(self) -> float:
+        # float32-safe: stay inside normal range (kernels bit-cast f32)
+        return 1e-37
+
+    def key_bounds(self) -> tuple[int, int]:
+        return self.offset, self.offset + self.num_buckets - 1
+
+    def bucket_value(self, key) -> jnp.ndarray:
+        """Relative-error midpoint estimate for (vector of) keys."""
+        from repro.core.mapping import make_mapping
+
+        m = make_mapping(self.mapping, self.relative_accuracy)
+        import numpy as np
+
+        keys = np.atleast_1d(np.asarray(key))
+        return jnp.asarray([m.value(int(k)) for k in keys])
+
+
+# --------------------------------------------------------------------- #
+_CUBIC_A = 6.0 / 35.0
+_CUBIC_B = -3.0 / 5.0
+_CUBIC_C = 10.0 / 7.0
+
+
+def approx_log2(x: jnp.ndarray, mapping: str) -> jnp.ndarray:
+    """Mapping-specific monotone log approximation (float32 semantics).
+
+    "log": exact natural log (converted by the multiplier).
+    "linear"/"cubic": exponent bits + mantissa interpolation — the paper's
+    §2.2 'costless log2 from the binary representation' trick, expressed as
+    a bitcast so it lowers to TPU integer ops.
+    """
+    x = x.astype(jnp.float32)
+    if mapping == "log":
+        return jnp.log(x)  # natural log; multiplier = 1/ln(gamma)
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 127
+    f = (bits & 0x7FFFFF).astype(jnp.float32) * (2.0 ** -23)
+    if mapping == "linear":
+        return e.astype(jnp.float32) + f
+    poly = ((_CUBIC_A * f + _CUBIC_B) * f + _CUBIC_C) * f
+    return e.astype(jnp.float32) + poly
+
+
+def bucket_index(x: jnp.ndarray, spec: BucketSpec) -> jnp.ndarray:
+    """Clamped bucket index for positive values (callers pre-mask others)."""
+    key = jnp.ceil(approx_log2(x, spec.mapping) * jnp.float32(spec.multiplier))
+    idx = key.astype(jnp.int32) - spec.offset
+    return jnp.clip(idx, 0, spec.num_buckets - 1)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def histogram_ref(
+    values: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    spec: BucketSpec,
+) -> jnp.ndarray:
+    """Oracle: bucket-count vector for positive finite values.
+
+    Non-positive / non-finite entries contribute nothing (the jax_sketch
+    wrapper routes them to the zero/negative/nan counters).
+    """
+    x = values.reshape(-1).astype(jnp.float32)
+    w = (
+        jnp.ones_like(x)
+        if weights is None
+        else weights.reshape(-1).astype(jnp.float32)
+    )
+    mask = jnp.isfinite(x) & (x > spec.min_indexable)
+    idx = bucket_index(jnp.where(mask, x, 1.0), spec)
+    contrib = jnp.where(mask, w, 0.0)
+    return jnp.zeros(spec.num_buckets, jnp.float32).at[idx].add(contrib)

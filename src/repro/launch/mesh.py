@@ -1,0 +1,39 @@
+"""Production mesh construction (DESIGN.md §5).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+jax initialization, and smoke tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1):
+    """Mesh over whatever devices exist (CPU smoke runs, elastic restarts).
+
+    Elastic rescale: callers re-invoke this after device loss; the data axis
+    shrinks to the surviving device count (train.py re-lowers against it).
+    """
+    n = len(jax.devices())
+    if n % model:
+        raise ValueError(f"{n} devices not divisible by model={model}")
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+class HW:
+    """TPU v5e-class hardware constants for the roofline model (§7)."""
+
+    PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+    HBM_BW = 819e9  # bytes/s per chip
+    ICI_BW = 50e9  # bytes/s per link (per-chip effective for ring terms)

@@ -1,0 +1,176 @@
+"""Batched serving loop with DDSketch latency telemetry.
+
+The paper's running example is *latency quantiles of a web service*; here
+the service is the model itself.  Each decode step's wall time goes into a
+DDSketch; per-request end-to-end latencies go into another; the server
+reports p50/p95/p99 — the numbers the paper argues means cannot give you.
+
+Continuous batching (slot-based): a fixed decode batch of B slots; finished
+sequences (EOS or max_len) release their slot, queued requests prefill into
+it.  For the CPU smoke runs, prefill is per-request and sequential — slot
+state is what matters for the logic tests.
+
+Usage (CPU smoke):
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
+      --requests 16 --batch-slots 4 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.ddsketch import DDSketch
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import StepConfig, build_serve_step
+from repro.models.common import init_params
+from repro.models.model import init_cache, prefill
+
+__all__ = ["Server", "main"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new: int
+    t_submit: float = field(default_factory=time.time)
+    t_done: float | None = None
+    output: list = field(default_factory=list)
+
+
+class Server:
+    def __init__(self, cfg, *, batch_slots: int, max_len: int, model_axis: int = 1):
+        self.cfg = cfg
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.mesh = make_local_mesh(model=model_axis)
+        scfg = StepConfig(ssm_chunk=64, q_block=max_len)
+        self.step_fn, pshard, self.shard = build_serve_step(cfg, self.mesh, scfg=scfg)
+        self.params = jax.device_put(
+            init_params(jax.random.PRNGKey(0), cfg), pshard
+        )
+        self.jitted = jax.jit(self.step_fn, donate_argnums=(1,))
+        # telemetry: the paper's Figure 2 setting, measured on ourselves
+        self.step_latency = DDSketch(0.01)
+        self.request_latency = DDSketch(0.01)
+        ctx_len = cfg.encoder_seq or cfg.n_cross_tokens
+        self.cache = init_cache(cfg, batch_slots, max_len, ctx_len)
+        self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        self.active: list[Request | None] = [None] * batch_slots
+        self.remaining = np.zeros(batch_slots, np.int64)
+
+    # ------------------------------------------------------------------ #
+    def _admit(self, req: Request, slot: int) -> None:
+        """Prefill the request into a slot (per-slot cache splice)."""
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        ctx = None
+        if self.cfg.encoder_layers or self.cfg.cross_attn_every:
+            n = self.cfg.encoder_seq or self.cfg.n_cross_tokens
+            ctx = jnp.zeros((1, n, self.cfg.d_model), self.cfg.jdtype)
+        logits, cache1 = prefill(
+            self.params, toks, self.cfg, max_len=self.max_len, ctx=ctx,
+            shard=self.shard,
+        )
+        # splice the single-row cache into the batch cache at `slot`
+        def splice(batch_leaf, one_leaf):
+            return batch_leaf.at[slot].set(one_leaf[0].astype(batch_leaf.dtype))
+
+        layers = [
+            {k: splice(self.cache["layers"][i][k], cache1["layers"][i][k])
+             for k in self.cache["layers"][i]}
+            for i in range(len(self.cache["layers"]))
+        ]
+        # NOTE: per-slot positions; simple servers use one shared pos when
+        # all prompts are admitted together.  We conservatively keep the max.
+        self.cache = {
+            "pos": jnp.maximum(self.cache["pos"], cache1["pos"]),
+            "layers": layers,
+        }
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.tokens = self.tokens.at[slot, 0].set(first[0])
+        req.output.append(int(first[0]))
+        self.active[slot] = req
+        self.remaining[slot] = req.max_new - 1
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: list[Request]) -> list[Request]:
+        queue = list(requests)
+        done: list[Request] = []
+        while queue or any(r is not None for r in self.active):
+            # admit into free slots
+            for slot in range(self.slots):
+                if self.active[slot] is None and queue:
+                    self._admit(queue.pop(0), slot)
+            # one batched decode step
+            t0 = time.time()
+            self.tokens, self.cache = self.jitted(
+                self.params, self.cache, self.tokens
+            )
+            self.tokens.block_until_ready()
+            self.step_latency.add(time.time() - t0)
+            toks = np.asarray(self.tokens)[:, 0]
+            for slot in range(self.slots):
+                req = self.active[slot]
+                if req is None:
+                    continue
+                req.output.append(int(toks[slot]))
+                self.remaining[slot] -= 1
+                if self.remaining[slot] <= 0:
+                    req.t_done = time.time()
+                    self.request_latency.add(req.t_done - req.t_submit)
+                    done.append(req)
+                    self.active[slot] = None
+        return done
+
+    def latency_report(self) -> dict:
+        qs = [0.5, 0.95, 0.99]
+        return {
+            "step_ms": [v * 1e3 for v in self.step_latency.quantiles(qs)],
+            "request_ms": [v * 1e3 for v in self.request_latency.quantiles(qs)],
+            "steps": self.step_latency.count,
+            "requests": self.request_latency.count,
+        }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="smollm-135m", choices=configs.ARCHS)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--requests", type=int, default=16)
+    p.add_argument("--batch-slots", type=int, default=4)
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--prompt-len", type=int, default=8)
+    args = p.parse_args()
+    cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    rng = np.random.default_rng(0)
+    server = Server(
+        cfg, batch_slots=args.batch_slots,
+        max_len=args.prompt_len + args.max_new + 1,
+    )
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, args.prompt_len),
+            max_new=int(rng.integers(2, args.max_new + 1)),
+        )
+        for i in range(args.requests)
+    ]
+    done = server.run(reqs)
+    rep = server.latency_report()
+    print(
+        f"[serve] {len(done)} requests; decode-step ms p50/p95/p99 = "
+        f"{rep['step_ms'][0]:.2f}/{rep['step_ms'][1]:.2f}/{rep['step_ms'][2]:.2f}; "
+        f"request ms p50/p95/p99 = "
+        f"{rep['request_ms'][0]:.1f}/{rep['request_ms'][1]:.1f}/{rep['request_ms'][2]:.1f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,439 @@
+"""Step builders: jit-able train / prefill / serve steps with shardings.
+
+One construction path shared by the dry-run (lower+compile against
+ShapeDtypeStructs), the fault-tolerant trainer, and the server — so what we
+roofline is exactly what we would run.
+
+``build_train_step`` returns (fn, in_shardings, out_shardings, donate_argnums)
+for  fn(params, opt_state, telemetry, batch) ->
+       (params', opt_state', telemetry', metrics).
+
+The DDSketch telemetry rides *inside* the step: per-token losses, gradient
+RMS, activation scales and MoE router load go into device sketches whose
+cross-chip merge is the all-reduce the partitioner inserts (the paper's full
+mergeability, DESIGN.md §2).
+
+Optional int8+error-feedback gradient compression over a chosen mesh axis
+(multi-pod 'pod' axis): the whole grad computation runs in a shard_map with
+that axis manual, so the backward pass's implicit all-reduce never covers
+it, and the explicit cross-axis reduction moves int8 (optim/compression.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import SHAPES, ShapeSpec, input_specs
+from repro.core import jax_sketch
+from repro.models.common import ModelConfig, param_shapes
+from repro.models.model import decode_step, init_cache, loss_fn, prefill
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_state_init,
+    compressed_psum,
+    cosine_schedule,
+    opt_shardings,
+)
+from repro.sharding import rules
+from repro.telemetry import TelemetryConfig, init_telemetry, record, telemetry_shardings
+from repro.telemetry.device import SERVE_STREAMS, grad_rms_stream
+
+__all__ = [
+    "StepConfig",
+    "build_train_step",
+    "build_prefill_step",
+    "build_serve_step",
+    "build_cell",
+    "cache_shardings",
+]
+
+
+@dataclass(frozen=True)
+class StepConfig:
+    """Everything the launcher can tune about a step (perf knobs included)."""
+
+    remat: bool = True
+    ssm_chunk: int = 512
+    q_block: int = 2048
+    ce_chunk: int = 1024  # chunked-CE tokens per lm-head block
+    seq_shard: bool | None = None  # None => tp profile: True, fsdp: False
+    max_grad_norm: float = 1.0
+    telemetry: bool = True
+    telemetry_mapping: str = "log"  # "linear" = the paper's fast mapping
+    grad_compress_axis: str | None = None  # e.g. "pod" (multi-pod)
+    adamw: AdamWConfig = AdamWConfig()
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    # decode: sequence-shard the KV caches over these axes (flash-decoding)
+    sp_decode_axes: tuple | None = None
+
+
+def _default_seq_shard(cfg: ModelConfig, scfg: StepConfig) -> bool:
+    if scfg.seq_shard is not None:
+        return scfg.seq_shard
+    return cfg.sharding_profile == "tp"
+
+
+def _batch_shardings(batch_specs: dict, mesh: Mesh, profile: str = "tp") -> dict:
+    out = {}
+    for k, v in batch_specs.items():
+        kind = "tokens" if k in ("tokens", "labels") else "ctx"
+        spec = rules.batch_specs(kind, mesh, profile, v.shape)
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# train
+# --------------------------------------------------------------------- #
+def build_train_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    scfg: StepConfig = StepConfig(),
+    tcfg: TelemetryConfig = TelemetryConfig(),
+):
+    """Returns (fn, in_shardings, out_shardings, donate_argnums, state_shapes)."""
+    shard = rules.MeshShardCtx(
+        mesh, cfg, sp_decode_axes=None, seq_shard=_default_seq_shard(cfg, scfg)
+    )
+    cfg_step = cfg.replace(q_block=scfg.q_block)
+    compress_axis = scfg.grad_compress_axis
+    if compress_axis is not None and compress_axis not in mesh.axis_names:
+        compress_axis = None
+    n_compress = mesh.shape[compress_axis] if compress_axis else 0
+
+    def loss_wrapped(params, batch, shard_ctx):
+        return loss_fn(
+            params,
+            batch,
+            cfg_step,
+            shard=shard_ctx,
+            remat=scfg.remat,
+            ssm_chunk=scfg.ssm_chunk,
+            ce_chunk=scfg.ce_chunk,
+            collect_stats=True,
+        )
+
+    def telemetry_streams(aux, grads):
+        return {
+            "token_loss": aux["token_losses"],
+            "grad_rms": grad_rms_stream(grads),
+            "act_scale": aux["act_scales"],
+            "router_load": aux["router_load"],
+        }
+
+    if compress_axis is None:
+
+        def train_step(params, opt_state, telemetry, batch):
+            (loss, aux), grads = jax.value_and_grad(
+                loss_wrapped, has_aux=True
+            )(params, batch, shard)
+            grads, gnorm = clip_by_global_norm(grads, scfg.max_grad_norm)
+            lr = cosine_schedule(
+                opt_state["step"],
+                peak_lr=scfg.peak_lr,
+                warmup_steps=scfg.warmup_steps,
+                total_steps=scfg.total_steps,
+            )
+            new_params, new_opt = adamw_update(
+                grads, opt_state, params, lr, scfg.adamw
+            )
+            telemetry = record(telemetry, telemetry_streams(aux, grads), tcfg)
+            metrics = {
+                "loss": aux["loss"],
+                "total_loss": loss,
+                "grad_norm": gnorm,
+                "lr": lr,
+                "moe_aux": aux["moe_aux"],
+            }
+            return new_params, new_opt, telemetry, metrics
+
+    else:
+        # manual 'pod' axis: pod-local grads -> int8 error-feedback psum
+        dp_inner_mesh = mesh  # same mesh; constraints use 'data'/'model' only
+
+        class _InnerCtx(rules.MeshShardCtx):
+            def __call__(self, x, kind):
+                spec = rules.activation_spec(
+                    kind, x.shape, self.profile, self.mesh,
+                    seq_shard=self.seq_shard, sp_decode_axes=self.sp_decode_axes,
+                )
+                if spec is None:
+                    return x
+                # strip the manual axis from any dp tuples
+                entries = []
+                for e in spec:
+                    if isinstance(e, tuple):
+                        e = tuple(a for a in e if a != compress_axis) or None
+                        if isinstance(e, tuple) and len(e) == 1:
+                            e = e[0]
+                    elif e == compress_axis:
+                        e = None
+                    entries.append(e)
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(self.mesh, P(*entries))
+                )
+
+        inner_shard = _InnerCtx(
+            mesh, cfg, sp_decode_axes=None,
+            seq_shard=_default_seq_shard(cfg, scfg),
+        )
+
+        def train_step(params, opt_state, telemetry, batch):
+            err = opt_state["err"]
+
+            def inner(params, batch_local, err):
+                """Manual over the compressed axis: grads never see the
+                implicit cross-pod all-reduce; everything else is returned
+                pod-stacked and merged by GSPMD outside (the partitioner
+                crashes on psums of auto-sharded values inside subgrouped
+                manual regions)."""
+                (loss, aux), grads = jax.value_and_grad(
+                    loss_wrapped, has_aux=True
+                )(params, batch_local, inner_shard)
+                err_local = jax.tree.map(lambda e: e[0], err)
+                g_hat, err_new = compressed_psum(grads, err_local, compress_axis)
+                err_new = jax.tree.map(lambda e: e[None], err_new)
+                aux_out = {
+                    "loss": loss[None],
+                    "ce": aux["loss"][None],
+                    "moe_aux": aux["moe_aux"][None],
+                    "token_losses": aux["token_losses"],
+                    "act_scales": aux["act_scales"][None],
+                    "router_load": aux["router_load"][None],
+                }
+                return aux_out, g_hat, err_new
+
+            batch_axis = P(compress_axis)
+            fn = jax.shard_map(
+                inner,
+                mesh=mesh,
+                in_specs=(P(), jax.tree.map(lambda _: batch_axis, batch), P(compress_axis)),
+                out_specs=(P(compress_axis), P(), P(compress_axis)),
+                axis_names={compress_axis},
+                check_vma=False,
+            )
+            aux_out, grads, err_new = fn(params, batch, err)
+            grads, gnorm = clip_by_global_norm(grads, scfg.max_grad_norm)
+            opt_inner = {k: opt_state[k] for k in ("m", "v", "step")}
+            lr = cosine_schedule(
+                opt_state["step"],
+                peak_lr=scfg.peak_lr,
+                warmup_steps=scfg.warmup_steps,
+                total_steps=scfg.total_steps,
+            )
+            new_params, new_opt = adamw_update(grads, opt_inner, params, lr, scfg.adamw)
+            new_opt["err"] = err_new
+            # telemetry + metric reductions merged by GSPMD out here
+            telemetry = record(
+                telemetry,
+                {
+                    "token_loss": aux_out["token_losses"],
+                    "grad_rms": grad_rms_stream(grads),
+                    "act_scale": aux_out["act_scales"].reshape(-1),
+                    "router_load": aux_out["router_load"].reshape(
+                        (-1,) + aux_out["router_load"].shape[2:]
+                    )
+                    if aux_out["router_load"].size
+                    else aux_out["router_load"],
+                },
+                tcfg,
+            )
+            metrics = {
+                "loss": jnp.mean(aux_out["ce"]),
+                "total_loss": jnp.mean(aux_out["loss"]),
+                "grad_norm": gnorm,
+                "lr": lr,
+                "moe_aux": jnp.mean(aux_out["moe_aux"]),
+            }
+            return new_params, new_opt, telemetry, metrics
+
+    # -- shardings -------------------------------------------------------- #
+    pshapes = param_shapes(cfg)
+    pspecs = rules.param_specs_tree(cfg, mesh)
+    pshard = rules.param_shardings(cfg, mesh)
+    oshard = opt_shardings(pspecs, pshapes, mesh)
+    opt_state_shapes = jax.eval_shape(partial(adamw_init, cfg=scfg.adamw), pshapes)
+    if compress_axis:
+        err_shapes = jax.eval_shape(
+            lambda: jax.tree.map(
+                lambda p: jnp.zeros((n_compress,) + p.shape, jnp.float32), pshapes
+            )
+        )
+        opt_state_shapes = dict(opt_state_shapes)
+        opt_state_shapes["err"] = err_shapes
+        oshard = dict(oshard)
+        oshard["err"] = jax.tree.map(
+            lambda _: NamedSharding(mesh, P(compress_axis)), err_shapes
+        )
+    tshard = telemetry_shardings(tcfg, mesh)
+    tel_shapes = jax.eval_shape(lambda: init_telemetry(tcfg))
+    if not scfg.telemetry:
+        tcfg = TelemetryConfig(spec=tcfg.spec, streams=tcfg.streams, enabled=False)
+
+    state_shapes = (pshapes, opt_state_shapes, tel_shapes)
+    in_shardings = (pshard, oshard, tshard)
+    out_shardings = (pshard, oshard, tshard, None)
+    donate = (0, 1, 2)
+    return train_step, in_shardings, out_shardings, donate, state_shapes
+
+
+# --------------------------------------------------------------------- #
+# prefill / serve
+# --------------------------------------------------------------------- #
+def build_prefill_step(
+    cfg: ModelConfig, mesh: Mesh, *, scfg: StepConfig = StepConfig()
+):
+    shard = rules.MeshShardCtx(
+        mesh, cfg, sp_decode_axes=None, seq_shard=_default_seq_shard(cfg, scfg)
+    )
+    cfg_step = cfg.replace(q_block=scfg.q_block)
+
+    def prefill_step(params, tokens, ctx=None):
+        logits, cache = prefill(
+            params, tokens, cfg_step, ctx=ctx, shard=shard,
+            ssm_chunk=scfg.ssm_chunk,
+        )
+        return logits, cache
+
+    pshard = rules.param_shardings(cfg, mesh)
+    return prefill_step, pshard, shard
+
+
+def build_serve_step(
+    cfg: ModelConfig, mesh: Mesh, *, scfg: StepConfig = StepConfig()
+):
+    """One-token decode step: fn(params, cache, token) -> (next_token, cache').
+
+    KV caches are sequence-sharded over ``scfg.sp_decode_axes`` (flash-
+    decoding, DESIGN.md §5 SP); greedy argmax sampling (serving example adds
+    temperature on the host).
+    """
+    shard = rules.MeshShardCtx(
+        mesh, cfg,
+        sp_decode_axes=scfg.sp_decode_axes,
+        seq_shard=False,  # decode has seq length 1
+    )
+
+    def serve_step(params, cache, token):
+        logits, cache = decode_step(params, cache, token, cfg, shard=shard)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    pshard = rules.param_shardings(cfg, mesh)
+    return serve_step, pshard, shard
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, scfg: StepConfig, cache_shapes):
+    """NamedShardings for the decode cache pytree (seq-sharded KV).
+
+    scan_layers caches carry a leading n_cycles dim (replicated); attention
+    K/V leaves (identified by name) use the kv_cache_sp rule on their
+    trailing (B, S, n_kv, hd) dims, everything else batch-shards over DP.
+    """
+
+    def spec_for(path, leaf):
+        name = ""
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        extra = 1 if (cfg.scan_layers and name != "pos" and leaf.ndim >= 1) else 0
+        shape = leaf.shape[extra:]
+        if name in ("k", "v", "cross_k", "cross_v") and len(shape) == 4:
+            sp = rules.activation_spec(
+                "kv_cache_sp", shape, cfg.sharding_profile, mesh,
+                sp_decode_axes=scfg.sp_decode_axes,
+            )
+        elif len(shape) >= 1:
+            sp = rules.activation_spec(
+                "ssm_state", shape, cfg.sharding_profile, mesh
+            )
+        else:
+            sp = P()
+        sp = sp if sp is not None else P()
+        return NamedSharding(mesh, P(*((None,) * extra + tuple(sp))))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+
+
+# --------------------------------------------------------------------- #
+# cell assembly (dry-run / benchmarks)
+# --------------------------------------------------------------------- #
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    scfg: StepConfig | None = None,
+    cfg: ModelConfig | None = None,
+):
+    """Returns (fn, arg_shapes, in_shardings, out_shardings, donate) for one
+    (arch × shape) cell.
+
+    ``fn`` is the un-jitted step; the caller jits with the shardings and
+    lowers against ``arg_shapes`` (ShapeDtypeStructs; zero allocation).
+    ``cfg`` overrides the registry config (dry-run variants: scan_layers
+    for the memory compile, reduced depth for the FLOP compiles).
+    """
+    cfg = cfg if cfg is not None else configs.get(arch)
+    shape = SHAPES[shape_name]
+    if scfg is None:
+        scfg = StepConfig(ssm_chunk=shape.ssm_chunk, q_block=shape.q_block)
+    from repro.core.jax_sketch import BucketSpec
+
+    tcfg = TelemetryConfig(
+        spec=BucketSpec(mapping=scfg.telemetry_mapping),
+        enabled=scfg.telemetry,
+    )
+
+    if shape.kind == "train":
+        fn, in_sh, out_sh, donate, state_shapes = build_train_step(
+            cfg, mesh, scfg=scfg, tcfg=tcfg
+        )
+        batch = input_specs(cfg, shape)["batch"]
+        b_shard = _batch_shardings(batch, mesh, cfg.sharding_profile)
+        args = (*state_shapes, batch)
+        in_shardings = (*in_sh, b_shard)
+        return fn, args, in_shardings, out_sh, (0, 1, 2)
+
+    if shape.kind == "prefill":
+        pf, pshard, shard = build_prefill_step(cfg, mesh, scfg=scfg)
+        specs = input_specs(cfg, shape)
+        b_shard = _batch_shardings(specs, mesh, cfg.sharding_profile)
+        if "ctx" in specs:
+            fn = lambda params, tokens, ctx: pf(params, tokens, ctx)
+            args = (param_shapes(cfg), specs["tokens"], specs["ctx"])
+            in_shardings = (pshard, b_shard["tokens"], b_shard["ctx"])
+        else:
+            fn = lambda params, tokens: pf(params, tokens)
+            args = (param_shapes(cfg), specs["tokens"])
+            in_shardings = (pshard, b_shard["tokens"])
+        return fn, args, in_shardings, None, ()
+
+    # decode
+    sp_axes = ("data", "model") if shape.name == "long_500k" else ("model",)
+    scfg = replace(scfg, sp_decode_axes=sp_axes)
+    sv, pshard, shard = build_serve_step(cfg, mesh, scfg=scfg)
+    specs = input_specs(cfg, shape)
+    cache_sh = cache_shardings(cfg, mesh, scfg, specs["cache"])
+    tok_shard = NamedSharding(
+        mesh,
+        rules.batch_specs("token", mesh, cfg.sharding_profile, specs["token"].shape),
+    )
+    args = (param_shapes(cfg), specs["cache"], specs["token"])
+    in_shardings = (pshard, cache_sh, tok_shard)
+    return sv, args, in_shardings, None, (1,)

@@ -1,0 +1,16 @@
+from repro.models.common import (  # noqa: F401
+    ModelConfig,
+    build_param_specs,
+    init_params,
+    logical_axes,
+    param_shapes,
+)
+from repro.models.model import (  # noqa: F401
+    ShardCtx,
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    loss_fn,
+    prefill,
+)

@@ -1,0 +1,214 @@
+"""Attention ops: blocked causal self-attention (train/prefill), cached
+single-token decode, cross-attention, and sequence-parallel decode for
+long-context cells.
+
+All variants are written without ``lax.scan`` so XLA's ``cost_analysis``
+counts every FLOP (DESIGN.md §7): the causal query-block loop is a Python
+loop unrolled into the HLO.  ``q_block`` bounds the live logits tensor to
+``(B, H, q_block, S)`` — the memory/HLO-size trade-off knob.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, apply_rope, rmsnorm, rope_angles
+
+NEG_INF = -1e30
+
+
+def _project_qkv(x, attn, cfg: ModelConfig, positions=None, ctx=None):
+    """Returns q (B,S,nq,hd), k,v (B,S,nkv,hd); RoPE'd when positions given.
+
+    ``ctx`` switches k/v to a cross-attention context stream.
+    """
+    kv_src = x if ctx is None else ctx
+    q = jnp.einsum("bsd,dhk->bshk", x, attn["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, attn["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, attn["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, attn["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, attn["k_norm"], cfg.norm_eps)
+    if positions is not None:
+        cos, sin = rope_angles(positions, cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _expand_kv(k, cfg: ModelConfig):
+    """GQA: repeat kv heads to match (padded) query head count."""
+    reps = cfg.nq // cfg.n_kv_heads
+    if reps == 1:
+        return k
+    return jnp.repeat(k, reps, axis=2)
+
+
+def _sdpa_blocked(q, k, v, *, causal: bool, q_block: int, q_offset=0,
+                  use_scan: bool = False):
+    """softmax(q kᵀ/√d) v with a query-block loop.
+
+    q: (B, Sq, H, hd); k,v: (B, Sk, H, hd).  Logits in float32.
+    ``q_offset``: absolute position of q[0] (causal masking for prefill
+    continuation); may be a traced scalar.
+
+    ``use_scan`` runs the block loop as lax.scan so the live working set is
+    one (B, H, q_block, Sk) logits tile regardless of sequence length (the
+    memory-honest production path); the unrolled form is kept for the
+    FLOP-measuring dry-run compiles (scan bodies are counted once by XLA
+    cost analysis, DESIGN.md §7).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    blk = min(q_block, Sq)
+
+    def one(qb, start):
+        logits = jnp.einsum("bqhk,bshk->bhqs", qb, k).astype(jnp.float32) * scale
+        if causal:
+            qpos = q_offset + start + jnp.arange(qb.shape[1])
+            mask = qpos[:, None] >= jnp.arange(Sk)[None, :]
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqs,bshk->bqhk", p, v)
+
+    if use_scan and Sq > blk and Sq % blk == 0:
+        nb = Sq // blk
+        qs = jnp.moveaxis(q.reshape(B, nb, blk, H, hd), 1, 0)
+        starts = jnp.arange(nb) * blk
+
+        def body(_, xs):
+            qb, st = xs
+            return None, one(qb, st)
+
+        _, outs = jax.lax.scan(body, None, (qs, starts))
+        return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, hd)
+
+    outs = [one(q[:, qs : qs + blk], qs) for qs in range(0, Sq, blk)]
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+
+
+def self_attention(x, attn, cfg: ModelConfig, *, causal=True, rope=True, shard=None):
+    """Full-sequence self-attention for train/encoder (no cache)."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)[None, :] if rope else None
+    q, k, v = _project_qkv(x, attn, cfg, positions=pos)
+    k, v = _expand_kv(k, cfg), _expand_kv(v, cfg)
+    if shard is not None:
+        q, k, v = shard(q, "qkv"), shard(k, "qkv"), shard(v, "qkv")
+    out = _sdpa_blocked(
+        q, k, v, causal=causal, q_block=cfg.q_block, use_scan=cfg.scan_layers
+    )
+    return jnp.einsum("bqhk,hkd->bqd", out, attn["wo"])
+
+
+def prefill_attention(x, attn, cfg: ModelConfig, *, shard=None):
+    """Causal self-attention that also returns the (unexpanded) KV cache."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(x, attn, cfg, positions=jnp.arange(S)[None, :])
+    cache = {"k": k, "v": v}
+    if shard is not None:
+        cache = {n: shard(c, "kv_cache") for n, c in cache.items()}
+    ke, ve = _expand_kv(cache["k"], cfg), _expand_kv(cache["v"], cfg)
+    out = _sdpa_blocked(
+        q, ke, ve, causal=True, q_block=cfg.q_block, use_scan=cfg.scan_layers
+    )
+    return jnp.einsum("bqhk,hkd->bqd", out, attn["wo"]), cache
+
+
+def decode_attention(x, attn, cache, pos, cfg: ModelConfig, *, shard=None):
+    """One-token decode: append (k,v) at ``pos`` into the fixed-size cache
+    and attend over the valid prefix.  x: (B, 1, D); pos: scalar int32.
+
+    Cache layout: k/v (B, S_max, n_kv, hd), donated and updated in place.
+    """
+    q, k_new, v_new = _project_qkv(
+        x, attn, cfg, positions=jnp.full((1, 1), pos, jnp.int32)
+    )
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+    new_cache = {"k": k, "v": v}
+    if shard is not None:
+        new_cache = {n: shard(c, "kv_cache") for n, c in new_cache.items()}
+    ke, ve = _expand_kv(k, cfg), _expand_kv(v, cfg)
+    S = ke.shape[1]
+    scale = 1.0 / math.sqrt(cfg.hd)
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, ke).astype(jnp.float32) * scale
+    valid = jnp.arange(S)[None, None, None, :] <= pos
+    logits = jnp.where(valid, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqs,bshk->bqhk", p, ve)
+    return jnp.einsum("bqhk,hkd->bqd", out, attn["wo"]), new_cache
+
+
+def cross_attention(x, attn, ctx_kv, cfg: ModelConfig):
+    """Attend from text stream to a precomputed context cache (vision
+    patches / encoder frames).  ctx_kv: {"k","v"} (B, P, n_kv, hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, attn["wq"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, attn["q_norm"], cfg.norm_eps)
+    ke, ve = _expand_kv(ctx_kv["k"], cfg), _expand_kv(ctx_kv["v"], cfg)
+    out = _sdpa_blocked(
+        q, ke, ve, causal=False, q_block=cfg.q_block, use_scan=cfg.scan_layers
+    )
+    out = jnp.einsum("bqhk,hkd->bqd", out, attn["wo"])
+    if "gate" in attn:
+        out = jnp.tanh(attn["gate"].astype(jnp.float32)).astype(out.dtype) * out
+    return out
+
+
+def make_cross_cache(ctx, attn, cfg: ModelConfig):
+    """Precompute cross-attention K/V from the stubbed modality embeddings
+    (paper-pool rule: frontend provides (B, P, d_model))."""
+    k = jnp.einsum("bpd,dhk->bphk", ctx, attn["wk"])
+    v = jnp.einsum("bpd,dhk->bphk", ctx, attn["wv"])
+    if cfg.qk_norm:
+        k = rmsnorm(k, attn["k_norm"], cfg.norm_eps)
+    return {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------- #
+# sequence-parallel decode (decode_32k / long_500k): flash-decoding over
+# the mesh
+# --------------------------------------------------------------------- #
+def seq_parallel_decode_attention(q, k_shard, v_shard, pos, *, axis_name, cfg):
+    """Decode attention with the KV cache sharded over ``axis_name`` on the
+    sequence dim (DESIGN.md §5 SP).  Runs inside shard_map.
+
+    Each shard computes partial (numerator, denominator) over its local
+    keys; the global softmax is reconstructed with one pmax + psum — the
+    standard flash-decoding split-K combine, mapped onto mesh axes.
+
+    GQA is computed *grouped* (q reshaped to (B, n_kv, reps, hd)), never
+    materializing the repeated KV heads — at 32k context that expansion
+    would cost reps× cache memory.
+
+    q: (B, 1, nq, hd) replicated over ``axis_name``;
+    k/v_shard: (B, S_local, n_kv, hd) local shards;
+    ``pos``: global position (scalar).  Returns (B, 1, nq, hd).
+    """
+    B, _, nq, hd = q.shape
+    n_kv = k_shard.shape[2]
+    reps = nq // n_kv
+    qg = q[:, 0].reshape(B, n_kv, reps, hd).astype(jnp.float32)
+    ax_idx = jax.lax.axis_index(axis_name)
+    S_local = k_shard.shape[1]
+    start = ax_idx * S_local
+    scale = 1.0 / math.sqrt(hd)
+    kf = k_shard.astype(jnp.float32)
+    logits = jnp.einsum("bgrk,bsgk->bgrs", qg, kf) * scale
+    valid = (start + jnp.arange(S_local))[None, None, None, :] <= pos
+    logits = jnp.where(valid, logits, NEG_INF)
+    m_local = jnp.max(logits, axis=-1, keepdims=True)  # (B,G,R,1)
+    m_global = jax.lax.pmax(m_local, axis_name)
+    p = jnp.exp(logits - m_global)
+    denom = jax.lax.psum(jnp.sum(p, axis=-1, keepdims=True), axis_name)
+    numer = jax.lax.psum(
+        jnp.einsum("bgrs,bsgk->bgrk", p, v_shard.astype(jnp.float32)), axis_name
+    )
+    out = (numer / denom).reshape(B, 1, nq, hd)
+    return out.astype(q.dtype)

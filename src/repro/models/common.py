@@ -1,0 +1,469 @@
+"""Shared model machinery: configs, param specs, norms, RoPE, activations.
+
+Parameters are declared as ``PSpec`` trees (shape + *logical axes* + init),
+from which three views derive without divergence risk:
+
+* ``init_params``     — materialized arrays (real runs / smoke tests),
+* ``param_shapes``    — ShapeDtypeStructs (dry-run lowering, no allocation),
+* ``logical_axes``    — the axis-name tree ``repro.sharding.rules`` maps to
+                        mesh ``PartitionSpec``s.
+
+Logical axis vocabulary (see sharding/rules.py for the mesh mapping):
+  "vocab"   — vocabulary dim (tensor-parallel over 'model')
+  "heads"   — attention query heads (TP when divisible by the axis)
+  "kv_heads"— GQA key/value heads (TP when divisible, else replicated)
+  "head_dim"— per-head feature dim (never sharded by default)
+  "mlp"     — FFN hidden dim (TP)
+  "experts" — MoE expert dim (expert-parallel over 'model')
+  "inner"   — SSM / xLSTM inner dim (TP)
+  "embed"   — model dim (FSDP over 'data': ZeRO-3-style weight sharding)
+  None      — replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}
+
+
+# --------------------------------------------------------------------- #
+# configuration
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024  # 0 => block has no separate FFN (xLSTM-style)
+    vocab_size: int = 1024
+    head_dim: int = 0  # 0 => d_model // n_heads
+    # --- layer pattern: entry i of the cycle gives block i's sequence kind
+    block_pattern: tuple[str, ...] = ("attn",)  # "attn"|"mamba"|"mlstm"|"slstm"
+    ffn_pattern: tuple[str, ...] = ("dense",)  # "dense"|"moe"|"none"
+    # --- MoE
+    n_experts: int = 0
+    top_k: int = 1
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # --- attention details
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    pad_q_heads_to: int = 0  # 0 => no padding; e.g. 48 for starcoder2 @ TP16
+    # --- cross attention (VLM): every k-th block also cross-attends
+    cross_attn_every: int = 0
+    n_cross_tokens: int = 0  # patches / frames (stub frontend)
+    # --- encoder-decoder (whisper): encoder frames are stubbed embeddings
+    encoder_layers: int = 0
+    encoder_seq: int = 0
+    # --- SSM (mamba)
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0  # 0 => ceil(d_model / 16)
+    # --- xLSTM
+    slstm_every: int = 8  # every k-th sequence-mix block is an sLSTM
+    # --- numerics / assembly
+    norm: str = "rmsnorm"  # "rmsnorm" | "layernorm"
+    act: str = "silu"  # "silu" | "gelu"
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    # chunk size for blocked causal attention (memory/HLO-size knob)
+    q_block: int = 2048
+    # sequence-parallel residual stream (activations sharded over 'model';
+    # Korthikanti et al.) — off in the paper-faithful baseline, flipped by
+    # the §Perf hillclimbs
+    seq_shard_activations: bool = False
+    # parallelism profile (sharding/rules.py):
+    #   "tp"   — Megatron TP over 'model' + DP over 'data' (big dense/MoE)
+    #   "fsdp" — ZeRO-3-style weight sharding over 'model', pure DP compute
+    #            (small models / archs whose head counts don't divide TP=16)
+    sharding_profile: str = "tp"
+    # lax.scan over layer cycles (and over the inner q-block / ssm-chunk /
+    # CE-chunk loops): block params get a leading n_cycles dim.  Production
+    # default for big models (bounded live buffers + bounded HLO); the
+    # dry-run's FLOP-measuring compiles use unrolled 1-2 cycle models
+    # because XLA cost_analysis counts a scan body once (DESIGN.md §7).
+    scan_layers: bool = False
+
+    # ----------------------------------------------------------------- #
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def nq(self) -> int:
+        """Query heads after optional TP padding (documented waste)."""
+        return max(self.n_heads, self.pad_q_heads_to)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank or -(-self.d_model // 16)
+
+    @property
+    def jdtype(self):
+        return DTYPES[self.dtype]
+
+    def block_kind(self, i: int) -> str:
+        return self.block_pattern[i % len(self.block_pattern)]
+
+    def ffn_kind(self, i: int) -> str:
+        return self.ffn_pattern[i % len(self.ffn_pattern)]
+
+    def has_cross(self, i: int) -> bool:
+        k = self.cross_attn_every
+        return k > 0 and (i % k == k - 1)
+
+    @property
+    def cycle_len(self) -> int:
+        """Length of the repeating layer pattern (scan-over-layers body)."""
+        c = math.lcm(len(self.block_pattern), len(self.ffn_pattern))
+        if self.cross_attn_every:
+            c = math.lcm(c, self.cross_attn_every)
+        return c
+
+    @property
+    def n_cycles(self) -> int:
+        if self.n_layers % self.cycle_len:
+            raise ValueError(
+                f"n_layers={self.n_layers} not a multiple of the layer "
+                f"pattern cycle ({self.cycle_len}); scan_layers impossible"
+            )
+        return self.n_layers // self.cycle_len
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Total parameters N (for 6·N·D roofline bookkeeping)."""
+        total = 0
+        for spec in jax.tree.leaves(build_param_specs(self), is_leaf=_is_pspec):
+            total += int(np.prod(spec.shape))
+        return total
+
+    def active_param_count(self) -> int:
+        """Active-per-token parameters (MoE: top_k of n_experts)."""
+        total = 0
+        for path, spec in jax.tree_util.tree_flatten_with_path(
+            build_param_specs(self), is_leaf=_is_pspec
+        )[0]:
+            n = int(np.prod(spec.shape))
+            if "experts" in spec.axes:
+                n = n * self.top_k // self.n_experts
+            total += n
+        return total
+
+
+# --------------------------------------------------------------------- #
+# param specs
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class PSpec:
+    """Declarative parameter: shape + logical axes + initializer."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]
+    init: str = "normal"  # "normal"|"zeros"|"ones"|"scaled"|"ssm_a"|"ssm_dt"
+    scale: float = 0.02
+    dtype: Any = None  # None => model dtype
+
+
+def _is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def _dense(d_in, d_out, ax_in, ax_out, scale=0.02) -> PSpec:
+    return PSpec((d_in, d_out), (ax_in, ax_out), "normal", scale)
+
+
+def _attn_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+    hd, nq, nkv = cfg.hd, cfg.nq, cfg.n_kv_heads
+    d = cfg.d_model
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    p = {
+        "wq": PSpec((d, nq, hd), ("embed", "heads", "head_dim"), "normal", 0.02),
+        "wk": PSpec((d, nkv, hd), ("embed", "kv_heads", "head_dim"), "normal", 0.02),
+        "wv": PSpec((d, nkv, hd), ("embed", "kv_heads", "head_dim"), "normal", 0.02),
+        "wo": PSpec((nq, hd, d), ("heads", "head_dim", "embed"), "normal", out_scale),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = PSpec((hd,), (None,), "ones")
+        p["k_norm"] = PSpec((hd,), (None,), "ones")
+    if cross:
+        p["gate"] = PSpec((), (), "zeros")  # llama3.2-style tanh gate
+    return p
+
+
+def _dense_ffn_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "w_gate": _dense(d, f, "embed", "mlp"),
+        "w_up": _dense(d, f, "embed", "mlp"),
+        "w_down": PSpec((f, d), ("mlp", "embed"), "normal", out_scale),
+    }
+
+
+def _moe_specs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    p = {
+        "router": PSpec((d, e), ("embed", None), "normal", 0.02),
+        "w_gate": PSpec((e, d, f), ("experts", "embed", "mlp"), "normal", 0.02),
+        "w_up": PSpec((e, d, f), ("experts", "embed", "mlp"), "normal", 0.02),
+        "w_down": PSpec((e, f, d), ("experts", "mlp", "embed"), "normal", out_scale),
+    }
+    if cfg.shared_expert:
+        p["shared"] = _dense_ffn_specs(cfg)
+    return p
+
+
+def _mamba_specs(cfg: ModelConfig) -> dict:
+    d, di, n, r, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    return {
+        "in_proj": PSpec((d, 2 * di), ("embed", "inner"), "normal", 0.02),
+        "conv_w": PSpec((k, di), (None, "inner"), "normal", 0.2),
+        "conv_b": PSpec((di,), ("inner",), "zeros"),
+        "x_proj": PSpec((di, r + 2 * n), ("inner", None), "normal", 0.02),
+        "dt_proj_w": PSpec((r, di), (None, "inner"), "normal", 0.02),
+        "dt_proj_b": PSpec((di,), ("inner",), "ssm_dt"),
+        "a_log": PSpec((di, n), ("inner", None), "ssm_a"),
+        "d_skip": PSpec((di,), ("inner",), "ones"),
+        "out_proj": PSpec(
+            (di, d), ("inner", "embed"), "normal", 0.02 / math.sqrt(2 * cfg.n_layers)
+        ),
+    }
+
+
+def _mlstm_specs(cfg: ModelConfig) -> dict:
+    """Simplified mLSTM block (DESIGN.md §6): chunkwise linear attention with
+    per-head scalar exponential gating + output gate path."""
+    d, nq, hd = cfg.d_model, cfg.n_heads, cfg.d_model // cfg.n_heads
+    return {
+        "wq": PSpec((d, nq, hd), ("embed", "heads", "head_dim"), "normal", 0.02),
+        "wk": PSpec((d, nq, hd), ("embed", "heads", "head_dim"), "normal", 0.02),
+        "wv": PSpec((d, nq, hd), ("embed", "heads", "head_dim"), "normal", 0.02),
+        "w_igate": PSpec((d, nq), ("embed", "heads"), "normal", 0.02),
+        "w_fgate": PSpec((d, nq), ("embed", "heads"), "normal", 0.02),
+        "b_fgate": PSpec((nq,), ("heads",), "ones"),
+        "wz": _dense(d, d, "embed", "inner"),
+        "wo": PSpec(
+            (d, d), ("inner", "embed"), "normal", 0.02 / math.sqrt(2 * cfg.n_layers)
+        ),
+    }
+
+
+def _slstm_specs(cfg: ModelConfig) -> dict:
+    """Simplified sLSTM (recurrent h->gate weights dropped; diagonal cell)."""
+    d = cfg.d_model
+    return {
+        "wz": _dense(d, d, "embed", "inner"),
+        "wi": _dense(d, d, "embed", "inner"),
+        "wf": _dense(d, d, "embed", "inner"),
+        "wo_gate": _dense(d, d, "embed", "inner"),
+        "b_f": PSpec((d,), ("inner",), "ones"),
+        "wo": PSpec(
+            (d, d), ("inner", "embed"), "normal", 0.02 / math.sqrt(2 * cfg.n_layers)
+        ),
+    }
+
+
+def _block_specs(cfg: ModelConfig, i: int) -> dict:
+    kind = cfg.block_kind(i)
+    p: dict = {"norm_seq": PSpec((cfg.d_model,), (None,), "ones")}
+    if cfg.norm == "layernorm":
+        p["norm_seq_b"] = PSpec((cfg.d_model,), (None,), "zeros")
+    if kind == "attn":
+        p["attn"] = _attn_specs(cfg)
+    elif kind == "mamba":
+        p["mamba"] = _mamba_specs(cfg)
+    elif kind == "mlstm":
+        p["mlstm"] = _mlstm_specs(cfg)
+    elif kind == "slstm":
+        p["slstm"] = _slstm_specs(cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if cfg.has_cross(i):
+        p["norm_cross"] = PSpec((cfg.d_model,), (None,), "ones")
+        p["cross"] = _attn_specs(cfg, cross=True)
+        if cfg.norm == "layernorm":
+            p["norm_cross_b"] = PSpec((cfg.d_model,), (None,), "zeros")
+    ffn = cfg.ffn_kind(i)
+    if ffn != "none" and cfg.d_ff > 0:
+        p["norm_ffn"] = PSpec((cfg.d_model,), (None,), "ones")
+        if cfg.norm == "layernorm":
+            p["norm_ffn_b"] = PSpec((cfg.d_model,), (None,), "zeros")
+        p["moe" if ffn == "moe" else "ffn"] = (
+            _moe_specs(cfg) if ffn == "moe" else _dense_ffn_specs(cfg)
+        )
+    return p
+
+
+def _encoder_block_specs(cfg: ModelConfig) -> dict:
+    p = {
+        "norm_seq": PSpec((cfg.d_model,), (None,), "ones"),
+        "attn": _attn_specs(cfg),
+        "norm_ffn": PSpec((cfg.d_model,), (None,), "ones"),
+        "ffn": _dense_ffn_specs(cfg),
+    }
+    if cfg.norm == "layernorm":
+        p["norm_seq_b"] = PSpec((cfg.d_model,), (None,), "zeros")
+        p["norm_ffn_b"] = PSpec((cfg.d_model,), (None,), "zeros")
+    return p
+
+
+def _stack_pspec(spec: PSpec, n: int) -> PSpec:
+    """Prepend a scanned n_cycles dim (never sharded by the logical rules)."""
+    return PSpec((n,) + spec.shape, (None,) + spec.axes, spec.init, spec.scale, spec.dtype)
+
+
+def build_param_specs(cfg: ModelConfig) -> dict:
+    """The full parameter tree of the model as PSpecs.
+
+    ``scan_layers=True`` stores blocks as ``cycle_len`` templates whose
+    leaves carry a leading ``n_cycles`` dim (lax.scan consumes them as xs);
+    unrolled models keep one dict per layer.
+    """
+    if cfg.scan_layers:
+        blocks = [
+            jax.tree.map(
+                partial(_stack_pspec, n=cfg.n_cycles),
+                _block_specs(cfg, pos),
+                is_leaf=_is_pspec,
+            )
+            for pos in range(cfg.cycle_len)
+        ]
+    else:
+        blocks = [_block_specs(cfg, i) for i in range(cfg.n_layers)]
+    p: dict = {
+        "embed": PSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), "normal", 0.02),
+        "norm_f": PSpec((cfg.d_model,), (None,), "ones"),
+        "blocks": blocks,
+    }
+    if cfg.norm == "layernorm":
+        p["norm_f_b"] = PSpec((cfg.d_model,), (None,), "zeros")
+    if not cfg.tie_embeddings:
+        p["head"] = PSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), "normal", 0.02)
+    if cfg.encoder_layers:
+        enc = {
+            "blocks": [_encoder_block_specs(cfg) for _ in range(cfg.encoder_layers)],
+            "norm_f": PSpec((cfg.d_model,), (None,), "ones"),
+        }
+        if cfg.norm == "layernorm":
+            enc["norm_f_b"] = PSpec((cfg.d_model,), (None,), "zeros")
+        p["encoder"] = enc
+    return p
+
+
+# --------------------------------------------------------------------- #
+# materialization
+# --------------------------------------------------------------------- #
+def _materialize(spec: PSpec, key, cfg: ModelConfig) -> jnp.ndarray:
+    dtype = spec.dtype or cfg.jdtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "ssm_a":  # mamba: A = -exp(a_log), a_log = log(1..N)
+        n = spec.shape[-1]
+        a = jnp.tile(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), spec.shape[:-1] + (1,))
+        return a.astype(dtype)
+    if spec.init == "ssm_dt":  # bias so softplus(dt) starts in [1e-3, 1e-1]
+        u = jax.random.uniform(key, spec.shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dtype)
+
+
+def init_params(rng, cfg: ModelConfig):
+    specs = build_param_specs(cfg)
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_pspec)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_materialize(s, k, cfg) for s, k in zip(leaves, keys)]
+    )
+
+
+def param_shapes(cfg: ModelConfig):
+    """ShapeDtypeStruct tree — what the dry-run lowers against."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or cfg.jdtype),
+        build_param_specs(cfg),
+        is_leaf=_is_pspec,
+    )
+
+
+def logical_axes(cfg: ModelConfig):
+    return jax.tree.map(lambda s: s.axes, build_param_specs(cfg), is_leaf=_is_pspec)
+
+
+# --------------------------------------------------------------------- #
+# primitive layers (pure functions)
+# --------------------------------------------------------------------- #
+def rmsnorm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layernorm(x, scale, bias, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+def norm(x, block, name, cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return layernorm(x, block[name], block[name + "_b"], cfg.norm_eps)
+    return rmsnorm(x, block[name], cfg.norm_eps)
+
+
+def activation(x, kind: str):
+    return jax.nn.gelu(x) if kind == "gelu" else jax.nn.silu(x)
+
+
+def rope_angles(positions, hd: int, theta: float):
+    """(..., hd/2) cos/sin tables for the given integer positions."""
+    freqs = theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2) or (S, hd/2)."""
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., ::2], xf[..., 1::2]
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int):
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d)
+    out = np.zeros((seq, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)

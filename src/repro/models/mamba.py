@@ -1,0 +1,156 @@
+"""Mamba selective-SSM block (jamba's sequence mixer).
+
+Training/prefill uses a *chunked associative scan*: the sequence is split
+into chunks of ``ssm_chunk``; within a chunk the linear recurrence
+``h_t = a_t ⊙ h_{t-1} + b_t`` runs as ``jax.lax.associative_scan``
+(log-depth, fully unrolled in HLO so FLOPs are honestly counted), and the
+carry crosses chunks through an unrolled Python loop.  This bounds the live
+``(B, chunk, d_inner, N)`` working set — the TPU-VMEM-minded adaptation of
+the paper-adjacent CUDA selective-scan kernel (DESIGN.md §3).
+
+Decode keeps O(1) state per token: a (k-1)-deep conv window and the
+(d_inner, N) SSM state — why jamba runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+def _causal_conv(u, w, b, k: int):
+    """Depthwise causal conv via k shifted adds (k is 4; honest FLOPs)."""
+    B, S, D = u.shape
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for j in range(k):
+        out = out + pad[:, j : j + S].astype(jnp.float32) * w[j].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(u.dtype)
+
+
+def _ssm_inputs(u, p, cfg: ModelConfig):
+    """dt (B,S,di) f32, A (di,N) f32, B_t/C_t (B,S,N) f32 from conv'd u."""
+    n, r = cfg.ssm_state, cfg.dt_rank
+    x_dbl = jnp.einsum("bsd,dk->bsk", u, p["x_proj"]).astype(jnp.float32)
+    dt_raw, b_t, c_t = jnp.split(x_dbl, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_raw, p["dt_proj_w"].astype(jnp.float32))
+        + p["dt_proj_b"].astype(jnp.float32)
+    )
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, N)
+    return dt, a, b_t, c_t
+
+
+def _scan_chunked(dt, a, b_t, c_t, u, h0, chunk: int, use_scan: bool = False):
+    """Selective scan h_t = exp(dt_t A) ⊙ h_{t-1} + dt_t B_t u_t, contracted
+    against C_t chunk-by-chunk:  y_t = <h_t, C_t>.
+
+    dt/u: (B, S, di) f32; a: (di, N) f32; b_t/c_t: (B, S, N) f32.
+    Returns (y (B, S, di) f32, h_last (B, di, N) f32).
+
+    The (B, S, di, N) discretized tensors da/dbu and the state trajectory
+    only ever exist one chunk at a time — materializing them full-sequence
+    is the classic selective-scan memory blowup (at jamba's d_inner=8192
+    it would be ~34 TB per step); the CUDA kernel avoids it by fusing, we
+    avoid it by chunking the same fusion in HLO (DESIGN.md §3).
+    ``use_scan`` runs the chunk loop as lax.scan (memory-honest production
+    path); unrolled is for the FLOP-measuring dry-run compiles (§7).
+    """
+    B, S, DI = dt.shape
+    N = a.shape[-1]
+    chunk = min(chunk, S)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    def one(h, dt_c, b_c, c_c, u_c):
+        da_c = jnp.exp(dt_c[..., None] * a[None, None])  # (B,c,di,N)
+        dbu_c = (dt_c * u_c)[..., None] * b_c[:, :, None, :]
+        a_acc, b_acc = jax.lax.associative_scan(combine, (da_c, dbu_c), axis=1)
+        h_c = a_acc * h[:, None] + b_acc
+        y_c = jnp.einsum("bsdn,bsn->bsd", h_c, c_c)
+        return y_c, h_c[:, -1]
+
+    if use_scan and S > chunk and S % chunk == 0:
+        nb = S // chunk
+        blk = lambda t: jnp.moveaxis(t.reshape((B, nb, chunk) + t.shape[2:]), 1, 0)
+
+        def body(h, xs):
+            y_c, h_new = one(h, *xs)
+            return h_new, y_c
+
+        h_last, ys = jax.lax.scan(body, h0, (blk(dt), blk(b_t), blk(c_t), blk(u)))
+        return jnp.moveaxis(ys, 0, 1).reshape(B, S, DI), h_last
+
+    outs = []
+    h = h0
+    for cs in range(0, S, chunk):
+        sl = slice(cs, cs + chunk)
+        y_c, h = one(h, dt[:, sl], b_t[:, sl], c_t[:, sl], u[:, sl])
+        outs.append(y_c)
+    y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+    return y, h
+
+
+def mamba_mixer(x, p, cfg: ModelConfig, *, ssm_chunk: int = 256, shard=None,
+                return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D).  Full-sequence (train / prefill) path.
+
+    Every (B, S, d_inner) intermediate carries the "inner" sharding
+    constraint — without them the partitioner leaves these f32 tensors
+    replicated over the TP axis (measured ~2 GiB each, x many per layer,
+    on jamba).
+    """
+    di, k = cfg.d_inner, cfg.ssm_conv
+    inner = (lambda t: shard(t, "inner")) if shard is not None else (lambda t: t)
+    xz = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    u_raw, z = jnp.split(xz, 2, axis=-1)
+    u_raw, z = inner(u_raw), inner(z)
+    u = inner(jax.nn.silu(_causal_conv(u_raw, p["conv_w"], p["conv_b"], k)))
+
+    dt, a, b_t, c_t = _ssm_inputs(u, p, cfg)
+    dt = inner(dt)
+    uf = u.astype(jnp.float32)
+    h0 = jnp.zeros((x.shape[0], di, cfg.ssm_state), jnp.float32)
+    y, h_last = _scan_chunked(
+        dt, a, b_t, c_t, uf, h0, ssm_chunk, use_scan=cfg.scan_layers
+    )
+    y = inner(y) + p["d_skip"].astype(jnp.float32) * uf
+    y = inner((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype))
+    out = jnp.einsum("bsd,dk->bsk", y, p["out_proj"])
+    if return_state:
+        return out, {"conv": u_raw[:, -(k - 1):], "ssm": h_last}
+    return out
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_decode(x, p, state, cfg: ModelConfig):
+    """One-token step.  x: (B, 1, D); state: {"conv","ssm"} -> (y, state')."""
+    k = cfg.ssm_conv
+    xz = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    u, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+    window = jnp.concatenate([state["conv"], u], axis=1)  # (B,k-1+1,di)
+    conv = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    u = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))[:, None].astype(x.dtype)
+    new_conv = window[:, 1:]
+
+    dt, a, b_t, c_t = _ssm_inputs(u, p, cfg)
+    uf = u.astype(jnp.float32)
+    da = jnp.exp(dt[:, 0, :, None] * a[None])  # (B,di,N)
+    dbu = (dt[:, 0] * uf[:, 0])[..., None] * b_t[:, 0, None, :]
+    h = da * state["ssm"] + dbu
+    y = jnp.einsum("bdn,bn->bd", h, c_t[:, 0])
+    y = y + p["d_skip"].astype(jnp.float32) * uf[:, 0]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32)))[:, None].astype(x.dtype)
+    out = jnp.einsum("bsd,dk->bsk", y, p["out_proj"])
+    return out, {"conv": new_conv, "ssm": h}

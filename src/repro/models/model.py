@@ -1,0 +1,547 @@
+"""Model assembly: decoder-only / encoder-decoder LMs over heterogeneous
+block stacks (attention / mamba / mLSTM / sLSTM × dense / MoE / no FFN),
+with optional cross-attention (VLM, enc-dec) — covering all ten assigned
+architectures from one code path.
+
+Entry points (all pure functions of (params, inputs)):
+  forward()      — full-sequence logits + aux (train / encoder teacher-forcing)
+  loss_fn()      — next-token CE (+ MoE aux), returns per-token losses for
+                   the DDSketch telemetry stream
+  prefill()      — forward that also builds the decode cache
+  decode_step()  — one-token step against the cache
+  encode()       — whisper-style encoder over stubbed frame embeddings
+
+Sharding is injected via ``ShardCtx`` (a callable applying
+``with_sharding_constraint`` by *kind*), so models never import mesh code.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.common import ModelConfig, activation, norm, sinusoidal_positions
+
+
+class ShardCtx:
+    """Activation-sharding hook.  ``launch`` subclasses bind a mesh + rules;
+    the default is a no-op so models run un-meshed (smoke tests)."""
+
+    sp_decode_axes: tuple | None = None  # e.g. ("data",) for long_500k cells
+    mesh = None
+
+    def __call__(self, x, kind: str):
+        return x
+
+
+_NOOP = ShardCtx()
+
+
+# --------------------------------------------------------------------- #
+# block bodies
+# --------------------------------------------------------------------- #
+def _ffn_apply(x, blk, cfg: ModelConfig, shard):
+    h = norm(x, blk, "norm_ffn", cfg)
+    if "moe" in blk:
+        y, aux = moe_lib.moe_ffn(h, blk["moe"], cfg, shard=shard)
+        return x + y, aux  # aux = (load_balance_loss, per-expert load)
+    f = blk["ffn"]
+    y = activation(jnp.einsum("bsd,df->bsf", h, f["w_gate"]), cfg.act) * jnp.einsum(
+        "bsd,df->bsf", h, f["w_up"]
+    )
+    y = shard(y, "mlp")
+    return x + jnp.einsum("bsf,fd->bsd", y, f["w_down"]), None
+
+
+def _block_train(x, blk, i, cfg: ModelConfig, shard, ctx_cache, ssm_chunk, ctx=None):
+    kind = cfg.block_kind(i)
+    h = norm(x, blk, "norm_seq", cfg)
+    if kind == "attn":
+        y = attn_lib.self_attention(h, blk["attn"], cfg, causal=True, shard=shard)
+    elif kind == "mamba":
+        y = mamba_lib.mamba_mixer(h, blk["mamba"], cfg, ssm_chunk=ssm_chunk, shard=shard)
+    elif kind == "mlstm":
+        y = xlstm_lib.mlstm_mixer(h, blk["mlstm"], cfg, chunk=ssm_chunk, shard=shard)
+    else:
+        y = xlstm_lib.slstm_mixer(h, blk["slstm"], cfg, chunk=ssm_chunk, shard=shard)
+    x = x + y
+    if cfg.has_cross(i):
+        h = norm(x, blk, "norm_cross", cfg)
+        # scan-over-layers path has no per-layer precomputed cache: the
+        # cross K/V is built in-body from the (scan-invariant) ctx stream
+        kv = (
+            ctx_cache[i]
+            if ctx_cache is not None
+            else attn_lib.make_cross_cache(ctx, blk["cross"], cfg)
+        )
+        x = x + attn_lib.cross_attention(h, blk["cross"], kv, cfg)
+    aux = None
+    if "ffn" in blk or "moe" in blk:
+        x, aux = _ffn_apply(x, blk, cfg, shard)
+    x = shard(x, "residual")
+    return x, aux
+
+
+def _cross_caches(params, ctx, cfg: ModelConfig):
+    """Precompute per-cross-layer K/V from modality embeddings."""
+    if ctx is None:
+        return {}
+    return {
+        i: attn_lib.make_cross_cache(ctx, blk["cross"], cfg)
+        for i, blk in enumerate(params["blocks"])
+        if cfg.has_cross(i)
+    }
+
+
+def _logits(x, params, cfg: ModelConfig, shard):
+    x = norm(x, params, "norm_f", cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return shard(logits, "logits")
+
+
+# --------------------------------------------------------------------- #
+# encoder (whisper)
+# --------------------------------------------------------------------- #
+def encode(params, frames, cfg: ModelConfig, *, shard=_NOOP):
+    """frames: (B, F, d_model) stubbed conv-frontend output (DESIGN §6)."""
+    enc = params["encoder"]
+    x = frames + sinusoidal_positions(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    x = shard(x, "residual")
+    for blk in enc["blocks"]:
+        h = norm(x, blk, "norm_seq", cfg)
+        x = x + attn_lib.self_attention(h, blk["attn"], cfg, causal=False, rope=False, shard=shard)
+        x, _ = _ffn_apply(x, blk, cfg, shard)
+        x = shard(x, "residual")
+    return norm(x, enc, "norm_f", cfg)
+
+
+# --------------------------------------------------------------------- #
+# full-sequence forward / loss
+# --------------------------------------------------------------------- #
+def forward(
+    params,
+    tokens,
+    cfg: ModelConfig,
+    *,
+    ctx=None,  # (B, P, d_model) vision patches / frames, if the arch uses them
+    shard: ShardCtx = _NOOP,
+    remat: bool = False,
+    ssm_chunk: int = 256,
+    collect_stats: bool = False,
+    return_hidden: bool = False,
+):
+    """tokens: (B, S) int32 -> (logits (B,S,V), aux dict).
+
+    ``return_hidden=True`` skips the lm-head and returns the final-norm
+    hidden states instead — the chunked-CE loss path uses it so the full
+    (B, S, V) logits tensor is never materialized (at pool scale that
+    tensor is ~100 TB; see loss_fn)."""
+    if cfg.encoder_layers:
+        ctx = encode(params, ctx, cfg, shard=shard)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, "residual")
+
+    if cfg.scan_layers:
+        cycle = cfg.cycle_len
+
+        def cycle_body(x, blk_cycle):
+            aux_losses, loads, scales = [], [], []
+            for pos in range(cycle):
+                x, aux = _block_train(
+                    x, blk_cycle[pos], i=pos, cfg=cfg, shard=shard,
+                    ctx_cache=None, ssm_chunk=ssm_chunk, ctx=ctx,
+                )
+                if aux is not None:
+                    aux_losses.append(aux[0])
+                    loads.append(aux[1])
+                if collect_stats:
+                    scales.append(
+                        jnp.sqrt(jnp.mean(jnp.square(x.astype(jnp.float32))))
+                    )
+            ys = {
+                "moe_aux": (
+                    jnp.stack(aux_losses)
+                    if aux_losses
+                    else jnp.zeros((0,), jnp.float32)
+                ),
+                "router_load": (
+                    jnp.stack(loads)
+                    if loads
+                    else jnp.zeros((0, max(cfg.n_experts, 1)), jnp.float32)
+                ),
+                "act_scales": (
+                    jnp.stack(scales) if scales else jnp.zeros((0,), jnp.float32)
+                ),
+            }
+            return x, ys
+
+        body = jax.checkpoint(cycle_body) if remat else cycle_body
+        x, ys = jax.lax.scan(body, x, params["blocks"])
+        aux = {
+            "moe_aux": (
+                jnp.mean(ys["moe_aux"]) if ys["moe_aux"].size else jnp.zeros((), jnp.float32)
+            ),
+            "router_load": ys["router_load"].reshape(-1, ys["router_load"].shape[-1])
+            if ys["router_load"].size
+            else jnp.zeros((0,), jnp.float32),
+            "act_scales": ys["act_scales"].reshape(-1),
+        }
+    else:
+        ctx_cache = _cross_caches(params, ctx, cfg)
+        aux_losses = []
+        router_loads = []
+        act_scales = []
+        for i, blk in enumerate(params["blocks"]):
+            fn = partial(
+                _block_train, i=i, cfg=cfg, shard=shard, ctx_cache=ctx_cache,
+                ssm_chunk=ssm_chunk,
+            )
+            if remat:
+                fn = jax.checkpoint(fn)
+            x, aux = fn(x, blk)
+            if aux is not None:
+                loss_term, load = aux
+                aux_losses.append(loss_term)
+                router_loads.append(load)
+            if collect_stats:
+                act_scales.append(
+                    jnp.sqrt(jnp.mean(jnp.square(x.astype(jnp.float32))))
+                )
+        aux = {
+            "moe_aux": (
+                jnp.mean(jnp.stack(aux_losses)) if aux_losses else jnp.zeros((), jnp.float32)
+            ),
+            "router_load": (
+                jnp.stack(router_loads)  # (n_moe_layers, E) dispatched fractions
+                if router_loads
+                else jnp.zeros((0,), jnp.float32)
+            ),
+            "act_scales": (
+                jnp.stack(act_scales) if act_scales else jnp.zeros((0,), jnp.float32)
+            ),
+        }
+    if return_hidden:
+        logits = norm(x, params, "norm_f", cfg)
+    else:
+        logits = _logits(x, params, cfg, shard)
+    return logits, aux
+
+
+def _ce_chunk(h, labels, head, cfg: ModelConfig, shard):
+    """Per-token CE for one sequence chunk without gather on sharded vocab.
+
+    h: (B, c, D) final hidden; labels: (B, c).  The lm-head matmul, the
+    logsumexp, and the one-hot label contraction all keep the vocab dim
+    TP-sharded (the one-hot einsum contracts it, so the partitioner inserts
+    one small psum instead of all-gathering (B, c, V))."""
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    logits = shard(logits, "logits")
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=jnp.float32)
+    onehot = shard(onehot, "logits")
+    label_logit = jnp.einsum("bsv,bsv->bs", lf, onehot)
+    return lse - label_logit
+
+
+def loss_fn(
+    params, batch, cfg: ModelConfig, *, shard=_NOOP, remat=False, ssm_chunk=256,
+    collect_stats=False, ce_chunk=1024,
+):
+    """Next-token CE.  batch: {"tokens","labels"[, "ctx"]}; labels < 0 mask.
+
+    The loss is computed chunkwise over the sequence (``ce_chunk`` tokens at
+    a time, rematerialized in the backward pass), so the full (B, S, V)
+    logits tensor never exists — at pool scale (B=256, S=4096, V=202k)
+    it would be ~200 TB.
+
+    Returns (scalar loss, aux) with aux["token_losses"] (B,S) — the raw
+    stream the per-token-loss DDSketch ingests (paper §1's motivating
+    example: means hide skew; quantiles don't)."""
+    hidden, aux = forward(
+        params, batch["tokens"], cfg, ctx=batch.get("ctx"), shard=shard,
+        remat=remat, ssm_chunk=ssm_chunk, collect_stats=collect_stats,
+        return_hidden=True,
+    )
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    labels = batch["labels"]
+    B, S = labels.shape
+    step = min(ce_chunk, S)
+    fn = partial(_ce_chunk, cfg=cfg, shard=shard)
+    if remat or S > step:
+        fn = jax.checkpoint(fn, static_argnums=())
+    if cfg.scan_layers and S > step and S % step == 0:
+        nb = S // step
+        hb = jnp.moveaxis(hidden.reshape(B, nb, step, hidden.shape[-1]), 1, 0)
+        lb = jnp.moveaxis(labels.reshape(B, nb, step), 1, 0)
+
+        def body(_, xs):
+            hc, lc = xs
+            return None, fn(hc, jnp.maximum(lc, 0), head)
+
+        _, tl = jax.lax.scan(body, None, (hb, lb))
+        tok_loss = jnp.moveaxis(tl, 0, 1).reshape(B, S)
+    else:
+        chunks = [
+            fn(hidden[:, cs : cs + step], jnp.maximum(labels[:, cs : cs + step], 0), head)
+            for cs in range(0, S, step)
+        ]
+        tok_loss = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks, axis=1)
+    w = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(tok_loss * w) / jnp.maximum(jnp.sum(w), 1.0)
+    aux["token_losses"] = jnp.where(w > 0, tok_loss, jnp.nan)
+    aux["loss"] = loss
+    total = loss + cfg.router_aux_coef * aux["moe_aux"]
+    return total, aux
+
+
+# --------------------------------------------------------------------- #
+# prefill / decode
+# --------------------------------------------------------------------- #
+def _layer_cache_zeros(cfg: ModelConfig, i: int, batch: int, max_len: int, ctx_len: int):
+    kind = cfg.block_kind(i)
+    dt = cfg.jdtype
+    layer: dict[str, Any] = {}
+    if kind == "attn":
+        layer["k"] = jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dt)
+        layer["v"] = jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dt)
+    elif kind == "mamba":
+        layer.update(mamba_lib.mamba_init_state(cfg, batch, dt))
+    elif kind == "mlstm":
+        layer.update(xlstm_lib.mlstm_init_state(cfg, batch))
+    else:
+        layer.update(xlstm_lib.slstm_init_state(cfg, batch))
+    if cfg.has_cross(i):
+        layer["cross_k"] = jnp.zeros((batch, ctx_len, cfg.n_kv_heads, cfg.hd), dt)
+        layer["cross_v"] = jnp.zeros((batch, ctx_len, cfg.n_kv_heads, cfg.hd), dt)
+    return layer
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, ctx_len: int = 0):
+    """Zeroed decode cache pytree (also the dry-run's ShapeDtypeStruct donor).
+
+    Layout mirrors the params: unrolled -> one dict per layer; scan_layers ->
+    ``cycle_len`` dicts whose leaves carry a leading n_cycles dim (scanned
+    together with the stacked block params)."""
+    cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.scan_layers:
+        cache["layers"] = [
+            jax.tree.map(
+                lambda z: jnp.broadcast_to(z, (cfg.n_cycles,) + z.shape).copy(),
+                _layer_cache_zeros(cfg, pos, batch, max_len, ctx_len),
+            )
+            for pos in range(cfg.cycle_len)
+        ]
+    else:
+        cache["layers"] = [
+            _layer_cache_zeros(cfg, i, batch, max_len, ctx_len)
+            for i in range(cfg.n_layers)
+        ]
+    return cache
+
+
+def _prefill_block(x, blk, i, cfg: ModelConfig, shard, ctx, ctx_cache, max_len,
+                   ssm_chunk):
+    """One prefill layer: returns (x', layer_cache)."""
+    kind = cfg.block_kind(i)
+    S = x.shape[1]
+    h = norm(x, blk, "norm_seq", cfg)
+    layer: dict[str, Any] = {}
+    if kind == "attn":
+        y, kv = attn_lib.prefill_attention(h, blk["attn"], cfg, shard=shard)
+        pad = max_len - S
+        layer["k"] = jnp.pad(kv["k"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        layer["v"] = jnp.pad(kv["v"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+    elif kind == "mamba":
+        y, st = mamba_lib.mamba_mixer(
+            h, blk["mamba"], cfg, ssm_chunk=ssm_chunk, shard=shard, return_state=True
+        )
+        layer.update(st)
+    elif kind == "mlstm":
+        y, st = xlstm_lib.mlstm_mixer(
+            h, blk["mlstm"], cfg, chunk=ssm_chunk, shard=shard, return_state=True
+        )
+        layer.update(st)
+    else:
+        y, st = xlstm_lib.slstm_mixer(
+            h, blk["slstm"], cfg, chunk=ssm_chunk, shard=shard, return_state=True
+        )
+        layer.update(st)
+    x = x + y
+    if cfg.has_cross(i):
+        hc = norm(x, blk, "norm_cross", cfg)
+        kv = (
+            ctx_cache[i]
+            if ctx_cache is not None
+            else attn_lib.make_cross_cache(ctx, blk["cross"], cfg)
+        )
+        x = x + attn_lib.cross_attention(hc, blk["cross"], kv, cfg)
+        layer["cross_k"] = kv["k"]
+        layer["cross_v"] = kv["v"]
+    if "ffn" in blk or "moe" in blk:
+        x, _ = _ffn_apply(x, blk, cfg, shard)
+    x = shard(x, "residual")
+    return x, layer
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, max_len=None, ctx=None,
+            shard=_NOOP, ssm_chunk=256):
+    """Teacher-forced pass that returns (last-token logits, filled cache)."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    if cfg.encoder_layers:
+        ctx = encode(params, ctx, cfg, shard=shard)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, "residual")
+    cache: dict[str, Any] = {"pos": jnp.asarray(S, jnp.int32)}
+    if cfg.scan_layers:
+        cycle = cfg.cycle_len
+
+        def body(x, blk_cycle):
+            layers = []
+            for pos in range(cycle):
+                x, layer = _prefill_block(
+                    x, blk_cycle[pos], pos, cfg, shard, ctx, None, max_len,
+                    ssm_chunk,
+                )
+                layers.append(layer)
+            return x, layers
+
+        x, cache["layers"] = jax.lax.scan(body, x, params["blocks"])
+    else:
+        ctx_cache = _cross_caches(params, ctx, cfg)
+        cache["layers"] = []
+        for i, blk in enumerate(params["blocks"]):
+            x, layer = _prefill_block(
+                x, blk, i, cfg, shard, ctx, ctx_cache, max_len, ssm_chunk
+            )
+            cache["layers"].append(layer)
+    logits = _logits(x[:, -1:], params, cfg, shard)
+    return logits[:, 0], cache
+
+
+def _decode_block(x, blk, layer, i, pos, cfg: ModelConfig, shard):
+    """One decode layer: returns (x', new_layer_cache)."""
+    kind = cfg.block_kind(i)
+    h = norm(x, blk, "norm_seq", cfg)
+    new_layer = dict(layer)
+    if kind == "attn":
+        if shard.sp_decode_axes:
+            y, kv = _sp_decode_attn(h, blk["attn"], layer, pos, cfg, shard)
+        else:
+            y, kv = attn_lib.decode_attention(h, blk["attn"], layer, pos, cfg, shard=shard)
+        new_layer.update(kv)
+    elif kind == "mamba":
+        y, st = mamba_lib.mamba_decode(h, blk["mamba"], layer, cfg)
+        new_layer.update(st)
+    elif kind == "mlstm":
+        y, st = xlstm_lib.mlstm_decode(h, blk["mlstm"], layer, cfg)
+        new_layer.update(st)
+    else:
+        y, st = xlstm_lib.slstm_decode(h, blk["slstm"], layer, cfg)
+        new_layer.update(st)
+    x = x + y
+    if cfg.has_cross(i):
+        hc = norm(x, blk, "norm_cross", cfg)
+        ctx_kv = {"k": layer["cross_k"], "v": layer["cross_v"]}
+        x = x + attn_lib.cross_attention(hc, blk["cross"], ctx_kv, cfg)
+    if "ffn" in blk or "moe" in blk:
+        x, _ = _ffn_apply(x, blk, cfg, shard)
+    return x, new_layer
+
+
+def decode_step(params, cache, token, cfg: ModelConfig, *, shard=_NOOP):
+    """One decode step.  token: (B, 1) int32; cache from init_cache/prefill.
+
+    Returns (logits (B, V), new cache).  When ``shard.sp_decode_axes`` is
+    set, attention-layer caches are sequence-sharded over those mesh axes
+    and attention runs as sequence-parallel flash-decoding (decode_32k /
+    long_500k)."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], token, axis=0)
+    if cfg.scan_layers:
+        cycle = cfg.cycle_len
+
+        def body(x, xs):
+            blk_cycle, cache_cycle = xs
+            new = []
+            for p in range(cycle):
+                x, new_layer = _decode_block(
+                    x, blk_cycle[p], cache_cycle[p], p, pos, cfg, shard
+                )
+                new.append(new_layer)
+            return x, new
+
+        x, new_layers = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+    else:
+        new_layers = []
+        for i, blk in enumerate(params["blocks"]):
+            x, new_layer = _decode_block(
+                x, blk, cache["layers"][i], i, pos, cfg, shard
+            )
+            new_layers.append(new_layer)
+    logits = _logits(x, params, cfg, shard)
+    return logits[:, 0], {"pos": pos + 1, "layers": new_layers}
+
+
+def _sp_decode_attn(x, attn, layer, pos, cfg: ModelConfig, shard: ShardCtx):
+    """Sequence-parallel decode attention via shard_map (DESIGN §5 SP).
+
+    The KV cache stays sequence-sharded over ``shard.sp_decode_axes`` (and
+    batch-sharded over the DP axes); each shard computes a flash-decoding
+    partial softmax over its local keys and one psum combines them.  The
+    new token's (k, v) is written with a dynamic_update_slice on the
+    sharded cache — GSPMD turns that into a masked local update on the one
+    shard owning position ``pos`` (no gather).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    shard_map = jax.shard_map
+
+    from repro.sharding.rules import dp_axes as _dp_axes
+
+    axes = shard.sp_decode_axes
+    dp = _dp_axes(shard.mesh)
+    B = x.shape[0]
+    if B % max(int(np.prod([shard.mesh.shape[a] for a in dp])), 1) != 0:
+        dp = ()
+    bspec = dp if dp else None
+
+    q, k_new, v_new = attn_lib._project_qkv(
+        x, attn, cfg, positions=jnp.full((1, 1), pos, jnp.int32)
+    )
+    k = jax.lax.dynamic_update_slice(layer["k"], k_new.astype(layer["k"].dtype), (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(layer["v"], v_new.astype(layer["v"].dtype), (0, pos, 0, 0))
+    k = shard(k, "kv_cache_sp")
+    v = shard(v, "kv_cache_sp")
+
+    fn = shard_map(
+        partial(attn_lib.seq_parallel_decode_attention, axis_name=axes, cfg=cfg),
+        mesh=shard.mesh,
+        in_specs=(
+            P(bspec, None, None, None),
+            P(bspec, axes, None, None),
+            P(bspec, axes, None, None),
+            P(),
+        ),
+        out_specs=P(bspec, None, None, None),
+        check_vma=False,
+    )
+    out = fn(q, k, v, pos)
+    return jnp.einsum("bqhk,hkd->bqd", out, attn["wo"]), {"k": k, "v": v}

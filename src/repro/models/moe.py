@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN with capacity-based token dispatch.
+
+Expert-parallel formulation (DESIGN.md §5 EP): tokens are grouped by their
+data shard, experts live on the 'model' axis.  Dispatch is **sort-based**:
+rows (token x routing-slot) are argsorted by expert id, per-expert block
+starts come from a binary search, and the expert buffers are built with
+plain gathers.  No scatter ever touches a sharded tensor — XLA's SPMD
+partitioner handles data-dependent scatters on sharded operands by
+replicating them and all-reducing the result (measured: ~6.6 TB of
+all-reduce per step on llama4-scout), while sorts and gathers over the
+batch-sharded group axis stay local.  The cross-shard movement reduces to
+the combine-side collectives the partitioner inserts for the (G, E, C, D)
+buffers — the expert all-to-all in GSPMD form.
+
+Routing: softmax top-k with per-group capacity C = ceil(k·gs/E · cf); rows
+beyond capacity are dropped (weight zero) — standard Switch/GShard
+behaviour, earlier tokens win.  The auxiliary load-balance loss follows
+Switch Transformer.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, activation
+
+
+def _capacity(cfg: ModelConfig, group_size: int) -> int:
+    c = int(math.ceil(cfg.top_k * group_size / cfg.n_experts * cfg.capacity_factor))
+    return max(c, 1)
+
+
+def route(x_flat, router_w, cfg: ModelConfig):
+    """x_flat: (G, gs, D) -> (gates (G,gs,k), idx (G,gs,k), aux_loss, load)."""
+    logits = jnp.einsum("gsd,de->gse", x_flat, router_w).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)  # (G,gs,k)
+    if cfg.top_k > 1:
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    # Switch-style load-balance aux loss
+    e = cfg.n_experts
+    dispatch_frac = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    prob_frac = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(dispatch_frac * prob_frac)
+    # dispatch_frac is also the router_load telemetry stream: per-expert
+    # dispatched fraction, whose skew DDSketch quantiles make visible
+    return gates.astype(x_flat.dtype), idx, aux, dispatch_frac
+
+
+def _dispatch_plan(idx, E: int, C: int):
+    """Sort-based dispatch bookkeeping.
+
+    idx: (G, gs, K) expert ids.  Returns
+      token_for_slot (G, E, C)  source token per buffer slot (gs = padding),
+      slot_for_row   (G, gs, K) flat out-buffer row per routing slot
+                               (E*C = drop bin),
+    built exclusively from sorts / binary searches / gathers.
+    """
+    G, gs, K = idx.shape
+    R = gs * K
+    e_flat = idx.reshape(G, R)  # row r = token (r // K), slot (r % K)
+
+    order = jnp.argsort(e_flat, axis=1, stable=True)  # rows grouped by expert
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=1)
+    ar = jnp.broadcast_to(jnp.arange(R)[None, :], (G, R))
+    is_start = jnp.concatenate(
+        [jnp.ones((G, 1), bool), e_sorted[:, 1:] != e_sorted[:, :-1]], axis=1
+    )
+    block_start = jax.lax.cummax(jnp.where(is_start, ar, 0), axis=1)
+    pos_sorted = ar - block_start  # arrival rank within the expert
+
+    # (G, E) index of each expert's first sorted row
+    starts = jax.vmap(lambda es: jnp.searchsorted(es, jnp.arange(E)))(e_sorted)
+    counts = jax.vmap(lambda es: jnp.searchsorted(es, jnp.arange(E), side="right"))(
+        e_sorted
+    ) - starts
+
+    # slot (e, c) <- sorted row starts[e] + c when c < count[e]
+    row_for_slot = starts[:, :, None] + jnp.arange(C)[None, None, :]  # (G,E,C)
+    valid = jnp.arange(C)[None, None, :] < counts[:, :, None]
+    row_for_slot = jnp.clip(row_for_slot, 0, R - 1)
+    tok_sorted = order // K  # token id of each sorted row
+    token_for_slot = jnp.take_along_axis(
+        tok_sorted, row_for_slot.reshape(G, E * C), axis=1
+    ).reshape(G, E, C)
+    token_for_slot = jnp.where(valid, token_for_slot, gs)  # gs = zero-pad token
+
+    # inverse permutation: position of each original row in the sorted order
+    inv = jnp.argsort(order, axis=1)
+    pos_flat = jnp.take_along_axis(pos_sorted, inv, axis=1)  # (G, R)
+    dropped = pos_flat >= C
+    slot_for_row = jnp.where(
+        dropped, E * C, e_flat * C + pos_flat
+    ).reshape(G, gs, K)
+    return token_for_slot, slot_for_row
+
+
+def moe_ffn(x, moe, cfg: ModelConfig, *, shard=None):
+    """x: (B, S, D) -> (B, S, D), (aux_loss, per-expert load).
+
+    Groups are per-example (G=B), so the group axis inherits the batch's
+    data sharding and the expert buffers shard over ('data','model').
+    """
+    B, S, D = x.shape
+    G, gs = B, S
+    xg = x.reshape(G, gs, D)
+    gates, idx, aux, load = route(xg, moe["router"], cfg)
+    C = _capacity(cfg, gs)
+    E = cfg.n_experts
+
+    token_for_slot, slot_for_row = _dispatch_plan(idx, E, C)
+
+    x_pad = jnp.concatenate([xg, jnp.zeros((G, 1, D), xg.dtype)], axis=1)
+    buf = jnp.take_along_axis(
+        x_pad, token_for_slot.reshape(G, E * C)[..., None], axis=1
+    ).reshape(G, E, C, D)
+    if shard is not None:
+        buf = shard(buf, "moe_buffer")
+
+    up = activation(jnp.einsum("gecd,edf->gecf", buf, moe["w_gate"]), cfg.act) * jnp.einsum(
+        "gecd,edf->gecf", buf, moe["w_up"]
+    )
+    out_buf = jnp.einsum("gecf,efd->gecd", up, moe["w_down"])
+    if shard is not None:
+        out_buf = shard(out_buf, "moe_buffer")
+    out_flat = jnp.concatenate(
+        [out_buf.reshape(G, E * C, D), jnp.zeros((G, 1, D), out_buf.dtype)], axis=1
+    )  # row E*C is the drop bin
+
+    tok_out = jnp.take_along_axis(
+        out_flat, slot_for_row.reshape(G, gs * cfg.top_k)[..., None], axis=1
+    ).reshape(G, gs, cfg.top_k, D)
+    combined = jnp.sum(
+        tok_out.astype(jnp.float32) * gates.astype(jnp.float32)[..., None], axis=2
+    ).astype(x.dtype)
+
+    if cfg.shared_expert:
+        sh = moe["shared"]
+        shared = (
+            activation(jnp.einsum("gsd,df->gsf", xg, sh["w_gate"]), cfg.act)
+            * jnp.einsum("gsd,df->gsf", xg, sh["w_up"])
+        )
+        combined = combined + jnp.einsum("gsf,fd->gsd", shared, sh["w_down"])
+
+    return combined.reshape(B, S, D), (aux, load)

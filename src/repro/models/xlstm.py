@@ -1,0 +1,228 @@
+"""xLSTM sequence mixers: chunkwise mLSTM and scan-form sLSTM.
+
+Documented simplifications vs arXiv:2405.04517 (DESIGN.md §6):
+
+* mLSTM — matrix-memory linear attention with per-head scalar gates.  We use
+  sigmoid forget gates / sigmoid input gates (bounded, so chunk products are
+  stable without the paper's max-state m_t stabilizer).  The chunkwise form
+  is exact for this gating: within-chunk causal "attention" with decay
+  weights + cross-chunk state S ∈ R^{hd×hd} carried by an unrolled loop.
+* sLSTM — the h→gate recurrent weights are dropped so the cell recurrence
+  ``c_t = f_t ⊙ c_{t-1} + i_t ⊙ z_t`` is a *linear* scan, computable by the
+  same chunked associative scan as mamba.  Heads become diagonal blocks.
+
+Both keep O(1) decode state (mLSTM: (H, hd, hd) matrix + normalizer;
+sLSTM: (D,) cell), which is why xlstm-1.3b runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+# --------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------- #
+def _mlstm_gates(x, p):
+    """log-forget (B,S,H) f32 and input gate (B,S,H) f32."""
+    f = jax.nn.sigmoid(
+        jnp.einsum("bsd,dh->bsh", x, p["w_fgate"]).astype(jnp.float32)
+        + p["b_fgate"].astype(jnp.float32)
+    )
+    i = jnp.exp(
+        jnp.clip(jnp.einsum("bsd,dh->bsh", x, p["w_igate"]).astype(jnp.float32), -10.0, 5.0)
+    )
+    return f, i
+
+
+def mlstm_mixer(x, p, cfg: ModelConfig, *, chunk: int = 256, shard=None,
+                return_state: bool = False):
+    """x: (B,S,D) -> (B,S,D); chunkwise-parallel linear attention."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]) * (hd**-0.5)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    f, i = _mlstm_gates(x, p)  # (B,S,H)
+
+    chunk = min(chunk, S)
+
+    def one(carry, qc, kc, vc, fc, ic):
+        """One chunk: returns (new (state, norm), normalized h chunk)."""
+        state, nrm = carry
+        T = qc.shape[1]
+        # cumulative decay inside the chunk: prod_{u<=t} f_u
+        logf = jnp.log(fc + 1e-12)
+        cum = jnp.cumsum(logf, axis=1)  # (B,c,H)
+        decay_to_t = jnp.exp(cum)  # decay from chunk start to t (inclusive)
+        # inter-chunk: q_t · (decay_to_t · state)
+        inter = jnp.einsum("bthk,bhkv,bth->bthv", qc, state, decay_to_t)
+        # intra-chunk: sum_{u<=t} (prod_{u<w<=t} f_w) i_u (q_t·k_u) v_u
+        rel = cum[:, :, None, :] - cum[:, None, :, :]  # log decay (t,u)
+        causal = jnp.tril(jnp.ones((T, T), bool))
+        w_tu = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)  # (B,t,u,H)
+        qk = jnp.einsum("bthk,buhk->btuh", qc, kc)
+        aw = qk * w_tu * ic[:, None, :, :]
+        intra = jnp.einsum("btuh,buhv->bthv", aw, vc)
+        # normalizer: q_t · n_t with the same recurrence on k alone; the
+        # intra term is Σ_u aw[t,u]; |·| lower-bounded at 1 (xLSTM conv.)
+        n_inter = jnp.einsum("bthk,bhk,bth->bth", qc, nrm, decay_to_t)
+        denom = jnp.maximum(jnp.abs(n_inter + jnp.sum(aw, axis=2)), 1.0)
+        h_c = (inter + intra) / denom[..., None]
+        # carry: state' = decay_full · state + Σ_u decay_{u->end} i_u k_u v_uᵀ
+        decay_full = jnp.exp(cum[:, -1])  # (B,H)
+        decay_from_u = jnp.exp(cum[:, -1:, :] - cum)  # (B,c,H): prod_{u<w<=T}
+        state = decay_full[:, :, None, None] * state + jnp.einsum(
+            "buhk,buhv,buh->bhkv", kc, vc, decay_from_u * ic
+        )
+        nrm = decay_full[:, :, None] * nrm + jnp.einsum(
+            "buhk,buh->bhk", kc, decay_from_u * ic
+        )
+        return (state, nrm), h_c
+
+    carry = (
+        jnp.zeros((B, H, hd, hd), jnp.float32),  # Σ decay · i · k vᵀ
+        jnp.zeros((B, H, hd), jnp.float32),  # Σ decay · i · k
+    )
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    if cfg.scan_layers and S > chunk and S % chunk == 0:
+        nb = S // chunk
+        blocked = lambda t, d: jnp.moveaxis(
+            t.reshape((B, nb, chunk) + t.shape[2:]), 1, 0
+        )
+        xs = tuple(blocked(t, 0) for t in (qf, kf, vf, f, i))
+
+        def body(c, chunk_xs):
+            return one(c, *chunk_xs)
+
+        (state, norm), hs = jax.lax.scan(body, carry, xs)
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd)
+    else:
+        hs = []
+        for cs in range(0, S, chunk):
+            sl = slice(cs, cs + chunk)
+            carry, h_c = one(
+                carry, qf[:, sl], kf[:, sl], vf[:, sl], f[:, sl], i[:, sl]
+            )
+            hs.append(h_c)
+        state, norm = carry
+        h = jnp.concatenate(hs, axis=1) if len(hs) > 1 else hs[0]  # (B,S,H,hd)
+    h = h.reshape(B, S, D).astype(x.dtype)
+    z = jax.nn.silu(jnp.einsum("bsd,dk->bsk", x, p["wz"]))
+    out = jnp.einsum("bsd,dk->bsk", h * z, p["wo"])
+    if return_state:
+        return out, {"state": state, "norm": norm}
+    return out
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    return {
+        "state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "norm": jnp.zeros((batch, H, hd), jnp.float32),
+    }
+
+
+def mlstm_decode(x, p, st, cfg: ModelConfig):
+    """One-token step.  x: (B,1,D)."""
+    B, _, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])[:, 0].astype(jnp.float32) * (hd**-0.5)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])[:, 0].astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])[:, 0].astype(jnp.float32)
+    f, i = _mlstm_gates(x, p)
+    f, i = f[:, 0], i[:, 0]  # (B,H)
+    state = f[:, :, None, None] * st["state"] + i[:, :, None, None] * jnp.einsum(
+        "bhk,bhv->bhkv", k, v
+    )
+    norm = f[:, :, None] * st["norm"] + i[:, :, None] * k
+    val = jnp.einsum("bhk,bhkv->bhv", q, state)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, norm)), 1.0)
+    h = (val / denom[..., None]).reshape(B, 1, D).astype(x.dtype)
+    z = jax.nn.silu(jnp.einsum("bsd,dk->bsk", x, p["wz"]))
+    out = jnp.einsum("bsd,dk->bsk", h * z, p["wo"])
+    return out, {"state": state, "norm": norm}
+
+
+# --------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------- #
+def slstm_mixer(x, p, cfg: ModelConfig, *, chunk: int = 256, shard=None,
+                return_state: bool = False):
+    """Linear-scan sLSTM: c_t = f_t c_{t-1} + i_t z_t; h = o ⊙ tanh-free c."""
+    z = jnp.tanh(jnp.einsum("bsd,dk->bsk", x, p["wz"]).astype(jnp.float32))
+    i = jnp.exp(jnp.clip(jnp.einsum("bsd,dk->bsk", x, p["wi"]).astype(jnp.float32), -10, 5))
+    f = jax.nn.sigmoid(
+        jnp.einsum("bsd,dk->bsk", x, p["wf"]).astype(jnp.float32)
+        + p["b_f"].astype(jnp.float32)
+    )
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dk->bsk", x, p["wo_gate"]).astype(jnp.float32))
+
+    B, S, D = z.shape
+    chunk = min(chunk, S)
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a2 * a1, a2 * b1 + b2
+
+    def one(carry, fc, ic, zc):
+        c, n = carry
+        a_acc, b_acc = jax.lax.associative_scan(combine, (fc, ic * zc), axis=1)
+        c_all = a_acc * c[:, None] + b_acc
+        a2, b2 = jax.lax.associative_scan(combine, (fc, ic), axis=1)
+        n_all = a2 * n[:, None] + b2
+        return (c_all[:, -1], n_all[:, -1]), c_all / jnp.maximum(n_all, 1.0)
+
+    carry = (
+        jnp.zeros((B, D), jnp.float32),
+        jnp.zeros((B, D), jnp.float32),  # normalizer: same recurrence on i
+    )
+    if cfg.scan_layers and S > chunk and S % chunk == 0:
+        nb = S // chunk
+        blocked = lambda t: jnp.moveaxis(t.reshape(B, nb, chunk, D), 1, 0)
+
+        def body(cc, xs):
+            return one(cc, *xs)
+
+        (c, n), hs = jax.lax.scan(body, carry, (blocked(f), blocked(i), blocked(z)))
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, S, D)
+    else:
+        outs = []
+        for cs in range(0, S, chunk):
+            sl = slice(cs, cs + chunk)
+            carry, h_c = one(carry, f[:, sl], i[:, sl], z[:, sl])
+            outs.append(h_c)
+        c, n = carry
+        h = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    h = (o * h).astype(x.dtype)
+    out = jnp.einsum("bsd,dk->bsk", h, p["wo"])
+    if return_state:
+        return out, {"c": c, "n": n}
+    return out
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    return {
+        "c": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "n": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }
+
+
+def slstm_decode(x, p, st, cfg: ModelConfig):
+    z = jnp.tanh(jnp.einsum("bsd,dk->bsk", x, p["wz"]).astype(jnp.float32))[:, 0]
+    i = jnp.exp(jnp.clip(jnp.einsum("bsd,dk->bsk", x, p["wi"]).astype(jnp.float32), -10, 5))[:, 0]
+    f = jax.nn.sigmoid(
+        jnp.einsum("bsd,dk->bsk", x, p["wf"]).astype(jnp.float32)
+        + p["b_f"].astype(jnp.float32)
+    )[:, 0]
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dk->bsk", x, p["wo_gate"]).astype(jnp.float32))[:, 0]
+    c = f * st["c"] + i * z
+    n = f * st["n"] + i
+    h = (o * c / jnp.maximum(n, 1.0))[:, None].astype(x.dtype)
+    return jnp.einsum("bsd,dk->bsk", h, p["wo"]), {"c": c, "n": n}

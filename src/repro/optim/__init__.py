@@ -1,0 +1,9 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    opt_shardings,
+)
+from repro.optim.schedule import cosine_schedule  # noqa: F401
+from repro.optim.clip import global_norm, clip_by_global_norm  # noqa: F401
+from repro.optim.compression import compress_state_init, compressed_psum  # noqa: F401

@@ -1,0 +1,104 @@
+"""AdamW with dtype-configurable moments and ZeRO-1 state sharding.
+
+Pure functions over pytrees (no optax dependency):
+
+  state = adamw_init(params, cfg)
+  params', state' = adamw_update(grads, state, params, lr, cfg)
+
+ZeRO-1 (DESIGN.md §5): in the "tp" profile weights are already 2D-sharded
+(model × data), so the moments simply inherit the param sharding.  In the
+"fsdp" profile weights shard over 'model' only; ``opt_shardings`` places the
+moments additionally over 'data' on the first divisible unsharded dim, so
+optimizer memory scales with the full chip count.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "opt_shardings"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32  # bf16 halves optimizer HBM (maverick)
+    # params with fewer dims than this skip weight decay (norms, biases)
+    decay_min_ndim: int = 2
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, lr, cfg: AdamWConfig = AdamWConfig()):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1**t
+    bc2 = 1.0 - cfg.b2**t
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(gf)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= cfg.decay_min_ndim:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, mf.astype(cfg.moment_dtype), vf.astype(cfg.moment_dtype)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# --------------------------------------------------------------------- #
+def _zero1_spec(pspec: P, shape, mesh: Mesh) -> P:
+    """Extend a param's PartitionSpec with 'data' on the first divisible
+    unsharded dim (ZeRO-1 for moments)."""
+    if "data" not in mesh.axis_names:
+        return pspec
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    used = {a for e in entries if e is not None for a in ((e,) if isinstance(e, str) else e)}
+    if "data" in used:
+        return pspec  # already data-sharded (tp profile 2D weights)
+    for i, (dim, e) in enumerate(zip(shape, entries)):
+        if e is None and dim % mesh.shape["data"] == 0 and dim >= mesh.shape["data"]:
+            entries[i] = "data"
+            break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def opt_shardings(param_spec_tree, param_shapes_tree, mesh: Mesh):
+    """NamedSharding tree for the AdamW state given param specs/shapes."""
+    m_specs = jax.tree.map(
+        lambda spec, shp: NamedSharding(mesh, _zero1_spec(spec, shp.shape, mesh)),
+        param_spec_tree,
+        param_shapes_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return {
+        "m": m_specs,
+        "v": m_specs,
+        "step": NamedSharding(mesh, P()),
+    }

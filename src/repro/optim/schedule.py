@@ -1,0 +1,25 @@
+"""LR schedules (pure scalar functions of the step, jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule"]
+
+
+def cosine_schedule(
+    step,
+    *,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10000,
+    final_frac: float = 0.1,
+):
+    t = jnp.asarray(step, jnp.float32)
+    # (t+1): the first step trains at peak/warmup instead of lr=0
+    warm = peak_lr * (t + 1.0) / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip(
+        (t - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(t < warmup_steps, warm, peak_lr * cos)

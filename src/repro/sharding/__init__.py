@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    MeshShardCtx,
+    activation_spec,
+    batch_specs,
+    dp_axes,
+    param_shardings,
+    param_specs_tree,
+)

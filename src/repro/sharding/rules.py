@@ -1,0 +1,278 @@
+"""Logical-axis → mesh-axis rules (DESIGN.md §5).
+
+Two parallelism profiles, selected per architecture (`cfg.sharding_profile`):
+
+* ``tp``   — Megatron tensor parallelism over 'model' (heads / mlp / experts /
+  vocab / inner), FSDP-style weight sharding over 'data' on the 'embed' dim
+  (ZeRO-3: weights gather on use, grads reduce-scatter), batch DP over
+  ('pod','data').
+* ``fsdp`` — pure data-parallel compute; weights ZeRO-3-sharded over 'model'
+  on their first shardable dim.  For small models and archs whose head
+  counts don't divide TP=16 (xlstm-1.3b's 4 heads, smollm's 9).
+
+Rules are *ordered*: the first matching rule whose mesh axis is still unused
+for this tensor and whose dim is divisible by the axis size wins — the t5x
+logical-axis-rules convention, plus a divisibility guard so odd dims (e.g.
+whisper's 51865 vocab) gracefully replicate instead of relying on implicit
+padding.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig, PSpec, build_param_specs, _is_pspec
+from repro.models.model import ShardCtx
+
+__all__ = [
+    "dp_axes",
+    "param_spec",
+    "param_shardings",
+    "param_specs_tree",
+    "activation_spec",
+    "batch_specs",
+    "MeshShardCtx",
+]
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """The data-parallel mesh axes: ('pod','data') multi-pod, ('data',) else."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ordered (logical_axis -> mesh_axis) rules per profile; mesh axis may be a
+# tuple (sharded over multiple axes jointly)
+_PARAM_RULES = {
+    "tp": [
+        ("experts", "model"),
+        ("vocab", "model"),
+        ("heads", "model"),
+        ("mlp", "model"),
+        ("inner", "model"),
+        ("embed", "data"),  # FSDP dim (ZeRO-3 weight sharding over data)
+    ],
+    "fsdp": [
+        ("vocab", "model"),
+        ("embed", "model"),
+        ("mlp", "model"),
+        ("inner", "model"),
+        ("heads", "model"),
+    ],
+}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def param_spec(
+    pspec: PSpec, profile: str, mesh: Mesh, *, fsdp_weights: bool = True
+) -> P:
+    """PartitionSpec for one parameter from its logical axes."""
+    rules = list(_PARAM_RULES[profile])
+    if not fsdp_weights and profile == "tp":
+        rules = [r for r in rules if r != ("embed", "data")]
+    used: set = set()
+    out: list[Any] = []
+    for dim, logical in zip(pspec.shape, pspec.axes):
+        assigned = None
+        for name, mesh_axis in rules:
+            if logical != name or mesh_axis in used:
+                continue
+            if mesh_axis not in mesh.axis_names:
+                continue
+            if dim % _axis_size(mesh, mesh_axis) != 0:
+                continue  # replicate instead of uneven-sharding
+            assigned = mesh_axis
+            used.add(mesh_axis)
+            break
+        out.append(assigned)
+    # trim trailing Nones (canonical form)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_specs_tree(cfg: ModelConfig, mesh: Mesh, *, fsdp_weights: bool = True):
+    """PartitionSpec pytree matching build_param_specs(cfg)."""
+    return jax.tree.map(
+        lambda s: param_spec(s, cfg.sharding_profile, mesh, fsdp_weights=fsdp_weights),
+        build_param_specs(cfg),
+        is_leaf=_is_pspec,
+    )
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, *, fsdp_weights: bool = True):
+    """NamedSharding pytree for params (jit in_shardings / out_shardings)."""
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_specs_tree(cfg, mesh, fsdp_weights=fsdp_weights),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# --------------------------------------------------------------------- #
+# activations
+# --------------------------------------------------------------------- #
+def _guard(spec_entries, shape, mesh: Mesh):
+    """Drop mesh axes that don't divide the corresponding dim, dedupe axes
+    across dims (first dim wins), and support per-dim fallback lists.
+
+    An entry may be: None | axis | tuple of axes | list of candidate
+    entries tried in order (first one that divides and is unused wins).
+    """
+    out: list = []
+    used: set = set()
+
+    def resolve(dim, entry):
+        candidates = entry if isinstance(entry, list) else [entry]
+        for cand in candidates:
+            if cand is None:
+                return None
+            axes = cand if isinstance(cand, tuple) else (cand,)
+            keep = tuple(
+                a for a in axes if a in mesh.axis_names and a not in used
+            )
+            if keep and dim % int(np.prod([mesh.shape[a] for a in keep])) == 0:
+                return keep if len(keep) > 1 else keep[0]
+        return None
+
+    for dim, entry in zip(shape, spec_entries):
+        got = resolve(dim, entry)
+        if got is not None:
+            used.update((got,) if isinstance(got, str) else got)
+        out.append(got)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def activation_spec(
+    kind: str,
+    shape: Sequence[int],
+    profile: str,
+    mesh: Mesh,
+    *,
+    seq_shard: bool = False,
+    sp_decode_axes: tuple | None = None,
+) -> P | None:
+    """PartitionSpec for an activation constraint point (ShardCtx kind).
+
+    Shapes (B=batch, S=seq, D=model, H=heads, hd=head_dim, G=groups,
+    E=experts, C=capacity, F=mlp):
+      residual   (B, S, D)
+      qkv        (B, S, H, hd)
+      mlp        (B, S, F)
+      inner      (B, S, D_inner)
+      logits     (B, S, V)
+      kv_cache   (B, S_max, n_kv, hd)       decode caches
+      kv_cache_sp(B, S_max, n_kv, hd)       sequence-sharded decode caches
+      moe_buffer (G, E, C, D)
+    """
+    dp = dp_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    model_tp = tp if profile == "tp" else None
+    # fsdp profile: the 'model' axis carries no tensor parallelism, so the
+    # BATCH shards over it too (256-way DP) when divisible; otherwise the
+    # sequence does (context parallelism — the partitioner inserts the KV
+    # all-gather); otherwise it stays a pure weight-storage axis.
+    if profile == "fsdp" and tp is not None:
+        batch = [dp + (tp,), dp] if dp else [(tp,), None]
+        seq_fallback = tp
+    else:
+        batch = [dp] if dp else [None]
+        seq_fallback = None
+    if kind == "residual":
+        # tp profile: Megatron sequence parallelism — residual sharded on S
+        # over the TP axis between blocks.  fsdp profile: S over 'model'
+        # only when the batch could not take it.
+        seq = model_tp if seq_shard else seq_fallback
+        return _guard((batch, seq, None), shape, mesh)
+    if kind == "qkv":
+        return _guard((batch, seq_fallback, model_tp, None), shape, mesh)
+    if kind in ("mlp", "inner"):
+        return _guard((batch, seq_fallback, model_tp), shape, mesh)
+    if kind == "logits":
+        # vocab TP-sharded when divisible and the model axis is free: the
+        # lm-head matmul is the largest single matmul in the small models.
+        return _guard((batch, seq_fallback, tp), shape, mesh)
+    if kind == "kv_cache":
+        # decode caches: batch over DP, sequence over the model axis
+        # (flash-decoding shards; see model._sp_decode_attn)
+        return _guard((dp, tp, None, None), shape, mesh)
+    if kind == "kv_cache_sp":
+        axes = sp_decode_axes or (tp,)
+        return _guard((dp, axes, None, None), shape, mesh)
+    if kind == "moe_buffer":
+        return _guard((dp, model_tp, None, None), shape, mesh)
+    if kind == "ssm_state":  # (B, d_inner, N) or (B, H, hd, hd)
+        return _guard((dp,) + (None,) * (len(shape) - 1), shape, mesh)
+    return None
+
+
+def batch_specs(kind: str, mesh: Mesh, profile: str, shape: Sequence[int]) -> P:
+    """Input sharding for the step functions' data arguments (same batch /
+    sequence fallback logic as the activations)."""
+    dp = dp_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    if profile == "fsdp" and tp is not None:
+        batch = [dp + (tp,), dp] if dp else [(tp,), None]
+        seq = tp
+    else:
+        batch = [dp] if dp else [None]
+        seq = None
+    if kind in ("tokens", "labels"):  # (B, S)
+        return _guard((batch, seq), shape, mesh)
+    if kind == "ctx":  # (B, P, D)
+        return _guard((batch, None, None), shape, mesh)
+    if kind == "token":  # (B, 1)
+        return _guard((batch, None), shape, mesh)
+    raise KeyError(kind)
+
+
+# --------------------------------------------------------------------- #
+# ShardCtx bound to a mesh
+# --------------------------------------------------------------------- #
+class MeshShardCtx(ShardCtx):
+    """Applies with_sharding_constraint per activation kind (DESIGN.md §5).
+
+    ``sp_decode_axes`` switches decode attention to the shard_map
+    flash-decoding path in model.decode_step (sequence-sharded KV cache);
+    set to ("model",) for decode_32k and ("data","model") for long_500k.
+    """
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        cfg: ModelConfig,
+        *,
+        sp_decode_axes: tuple | None = None,
+        seq_shard: bool | None = None,
+    ):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.profile = cfg.sharding_profile
+        self.sp_decode_axes = sp_decode_axes
+        self.seq_shard = (
+            cfg.seq_shard_activations if seq_shard is None else seq_shard
+        )
+
+    def __call__(self, x, kind: str):
+        spec = activation_spec(
+            kind,
+            x.shape,
+            self.profile,
+            self.mesh,
+            seq_shard=self.seq_shard,
+            sp_decode_axes=self.sp_decode_axes,
+        )
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))

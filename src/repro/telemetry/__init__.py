@@ -1,0 +1,9 @@
+from repro.telemetry.device import (  # noqa: F401
+    TelemetryConfig,
+    TelemetryState,
+    init_telemetry,
+    record,
+    telemetry_shardings,
+)
+from repro.telemetry.host import HostAggregator, WindowStats  # noqa: F401
+from repro.telemetry.watchdog import LossSpikeGuard, StragglerWatchdog  # noqa: F401

@@ -1,0 +1,116 @@
+"""Device-tier telemetry: DDSketches living *inside* the jit'd train step.
+
+This is the paper's fleet-monitoring architecture mapped onto a TPU pod
+(DESIGN.md §2): every chip is an "agent" sketching its local shard of each
+scalar stream; the full mergeability of DDSketch (Algorithm 4 == per-bucket
+'+') is what lets XLA all-reduce the bucket arrays — either explicitly via
+``jax_sketch.allreduce`` under shard_map, or implicitly when the scatter-add
+of a sharded stream into a replicated sketch makes the SPMD partitioner
+insert the very same all-reduce.
+
+Streams recorded per step (all are skewed, mean-hiding distributions — the
+paper's Figure 2 argument applied to training):
+
+  token_loss  — per-token CE losses (B·S values/step); p99/p50 drives the
+                loss-spike guard
+  grad_rms    — per-parameter-tensor gradient RMS (one value per tensor)
+  act_scale   — per-layer residual-stream RMS
+  router_load — MoE: per-(layer, expert) dispatch fractions (load skew)
+
+The state is an ordinary pytree of f32 arrays: it shards/replicates/donates
+like any activation, checkpoints with the model, and flushes losslessly into
+the host tier (``jax_sketch.to_host``) for windowed aggregation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import jax_sketch
+from repro.core.jax_sketch import BucketSpec, DeviceSketch
+
+__all__ = [
+    "TelemetryConfig",
+    "TelemetryState",
+    "init_telemetry",
+    "record",
+    "telemetry_shardings",
+]
+
+# streams recorded by the train step, in a stable order
+TRAIN_STREAMS = ("token_loss", "grad_rms", "act_scale", "router_load")
+SERVE_STREAMS = ("decode_latency",)
+
+
+@dataclass(frozen=True)
+class TelemetryConfig:
+    spec: BucketSpec = BucketSpec(relative_accuracy=0.01, num_buckets=2048, offset=-1024)
+    streams: tuple = TRAIN_STREAMS
+    enabled: bool = True
+
+
+class TelemetryState(NamedTuple):
+    """One DeviceSketch per stream (dict keyed by stream name)."""
+
+    sketches: dict
+
+
+def init_telemetry(tcfg: TelemetryConfig) -> TelemetryState:
+    return TelemetryState(
+        sketches={name: jax_sketch.empty(tcfg.spec) for name in tcfg.streams}
+    )
+
+
+def telemetry_shardings(tcfg: TelemetryConfig, mesh: Mesh):
+    """Telemetry state is replicated: it is the *result* of the all-reduce
+    merge, O(m)=2048 floats per stream — negligible."""
+    repl = NamedSharding(mesh, P())
+    state = init_telemetry(tcfg)
+    return jax.tree.map(lambda _: repl, state)
+
+
+def record(
+    state: TelemetryState, streams: dict, tcfg: TelemetryConfig
+) -> TelemetryState:
+    """Insert each stream's values into its sketch (vectorized Algorithm 1).
+
+    ``streams`` maps stream name -> array of values (any shape; non-finite
+    entries are ignored, which also makes masked-out token losses — set to
+    NaN by loss_fn — drop out naturally).
+    """
+    if not tcfg.enabled:
+        return state
+    sketches = dict(state.sketches)
+    for name, values in streams.items():
+        if name not in sketches:
+            continue
+        values = jnp.asarray(values)
+        if values.size == 0:  # stream not produced (e.g. non-MoE router_load)
+            continue
+        sketches[name] = jax_sketch.add(
+            sketches[name], values, spec=tcfg.spec
+        )
+    return TelemetryState(sketches=sketches)
+
+
+def grad_rms_stream(grads) -> jnp.ndarray:
+    """Per-tensor gradient RMS values (the grad_rms stream)."""
+    leaves = jax.tree.leaves(grads)
+    return jnp.stack(
+        [jnp.sqrt(jnp.mean(jnp.square(g.astype(jnp.float32)))) for g in leaves]
+    )
+
+
+def quantile_summary(
+    state: TelemetryState, tcfg: TelemetryConfig, qs=(0.5, 0.95, 0.99)
+) -> dict:
+    """Jit-friendly per-stream quantiles (used for in-loop guards)."""
+    out = {}
+    for name, sk in state.sketches.items():
+        out[name] = jax_sketch.quantiles(sk, jnp.asarray(qs), spec=tcfg.spec)
+    return out

@@ -1,0 +1,127 @@
+"""Host-tier telemetry: windowed aggregation of device sketches.
+
+Mirrors the paper's agent -> monitoring-system pipeline (§1): device windows
+(one per flush interval) are merged into per-stream host DDSketches — the
+merge is Algorithm 4, so rollups over any time horizon are exact in the
+sense of the paper: a merged sketch answers quantile queries exactly as if
+a single sketch had seen all the data.  Windows can therefore be rolled up
+1s -> 1min -> 1h without re-reading raw data, which is the paper's central
+operational claim.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import time
+from dataclasses import dataclass, field
+
+from repro.core.ddsketch import DDSketch
+from repro.core.jax_sketch import BucketSpec, DeviceSketch, to_host
+
+__all__ = ["WindowStats", "HostAggregator"]
+
+
+@dataclass
+class WindowStats:
+    """One flushed window: step range + per-stream host sketches."""
+
+    start_step: int
+    end_step: int
+    wall_time: float
+    sketches: dict  # stream -> DDSketch
+
+    def quantiles(self, stream: str, qs) -> list[float]:
+        return self.sketches[stream].quantiles(qs)
+
+
+class HostAggregator:
+    """Collects device-telemetry windows and maintains rollups.
+
+    ``flush(state)`` converts the device sketches to host sketches
+    (lossless, same bucket geometry) and resets nothing on device — the
+    caller re-inits the device state for the next window (sketches are
+    cheap: O(m) zeros).
+    """
+
+    def __init__(self, spec: BucketSpec, keep_windows: int = 256):
+        self.spec = spec
+        self.keep_windows = keep_windows
+        self.windows: list[WindowStats] = []
+        self.totals: dict[str, DDSketch] = {}  # stream -> whole-run rollup
+
+    # ------------------------------------------------------------------ #
+    def flush(self, state, start_step: int, end_step: int) -> WindowStats:
+        sketches = {}
+        for name, dev in state.sketches.items():
+            host = to_host(dev, self.spec)
+            sketches[name] = host
+            if name not in self.totals:
+                self.totals[name] = host.copy()
+            else:
+                self.totals[name].merge(host)
+        win = WindowStats(start_step, end_step, time.time(), sketches)
+        self.windows.append(win)
+        if len(self.windows) > self.keep_windows:
+            self.windows.pop(0)
+        return win
+
+    # ------------------------------------------------------------------ #
+    def rollup(self, stream: str, last_k: int | None = None) -> DDSketch:
+        """Merged sketch over the last k windows (Algorithm 4 rollup)."""
+        wins = self.windows if last_k is None else self.windows[-last_k:]
+        out: DDSketch | None = None
+        for w in wins:
+            if stream not in w.sketches:
+                continue
+            if out is None:
+                out = w.sketches[stream].copy()
+            else:
+                out.merge(w.sketches[stream])
+        if out is None:
+            raise KeyError(f"no windows recorded for stream {stream!r}")
+        return out
+
+    def quantiles(self, stream: str, qs, last_k: int | None = None) -> list[float]:
+        return self.rollup(stream, last_k).quantiles(qs)
+
+    def total_quantiles(self, stream: str, qs) -> list[float]:
+        return self.totals[stream].quantiles(qs)
+
+    # ------------------------------------------------------------------ #
+    # checkpoint integration: sketches serialize with the model state
+    def state_dict(self) -> dict:
+        return {
+            "spec": {
+                "relative_accuracy": self.spec.relative_accuracy,
+                "num_buckets": self.spec.num_buckets,
+                "offset": self.spec.offset,
+                "mapping": self.spec.mapping,
+            },
+            "totals": {k: v.to_dict() for k, v in self.totals.items()},
+            "windows": [
+                {
+                    "start_step": w.start_step,
+                    "end_step": w.end_step,
+                    "wall_time": w.wall_time,
+                    "sketches": {k: v.to_dict() for k, v in w.sketches.items()},
+                }
+                for w in self.windows[-16:]  # recent windows only
+            ],
+        }
+
+    @classmethod
+    def from_state_dict(cls, d: dict, keep_windows: int = 256) -> "HostAggregator":
+        spec = BucketSpec(**d["spec"])
+        agg = cls(spec, keep_windows)
+        agg.totals = {k: DDSketch.from_dict(v) for k, v in d["totals"].items()}
+        agg.windows = [
+            WindowStats(
+                w["start_step"],
+                w["end_step"],
+                w["wall_time"],
+                {k: DDSketch.from_dict(v) for k, v in w["sketches"].items()},
+            )
+            for w in d["windows"]
+        ]
+        return agg

@@ -1,0 +1,100 @@
+"""Operational guards driven by DDSketch quantiles.
+
+* ``StragglerWatchdog`` — the paper's "tail at scale" motivation turned on
+  the trainer itself: per-host step latencies go into per-host DDSketches;
+  a host is flagged when its p50 exceeds the fleet median by a ratio
+  threshold, or when the fleet p99/p50 spread spikes (a straggler stretches
+  the synchronous step for everyone).
+* ``LossSpikeGuard`` — per-token-loss quantiles from the device telemetry;
+  flags a step whose p99 jumps far above the trailing median of p99s
+  (quantile-based spike detection is robust to the heavy-tailed per-token
+  loss distribution where a mean-based rule either misses spikes or fires
+  on noise — Figure 2's argument).
+
+Both are pure-host logic over sketches: cheap, mergeable across restarts
+(sketch state checkpoints), and exact in the paper's α-relative-error sense.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.core.ddsketch import DDSketch
+
+__all__ = ["StragglerWatchdog", "LossSpikeGuard"]
+
+
+class StragglerWatchdog:
+    def __init__(
+        self,
+        relative_accuracy: float = 0.01,
+        ratio_threshold: float = 1.5,
+        min_samples: int = 16,
+    ):
+        self.alpha = relative_accuracy
+        self.ratio_threshold = ratio_threshold
+        self.min_samples = min_samples
+        self.per_host: dict[str, DDSketch] = {}
+
+    def observe(self, host: str, step_seconds: float) -> None:
+        if host not in self.per_host:
+            self.per_host[host] = DDSketch(self.alpha)
+        self.per_host[host].add(step_seconds)
+
+    def fleet_sketch(self) -> DDSketch:
+        """Merged view across hosts — Algorithm 4 at the fleet tier."""
+        out: DDSketch | None = None
+        for sk in self.per_host.values():
+            if out is None:
+                out = sk.copy()
+            else:
+                out.merge(sk)
+        if out is None:
+            raise ValueError("no observations")
+        return out
+
+    def stragglers(self) -> list[str]:
+        """Hosts whose median step latency exceeds fleet median x threshold."""
+        ready = {
+            h: sk for h, sk in self.per_host.items() if sk.count >= self.min_samples
+        }
+        if len(ready) < 2:
+            return []
+        fleet = self.fleet_sketch()
+        fleet_p50 = fleet.quantile(0.5)
+        return [
+            h
+            for h, sk in ready.items()
+            if sk.quantile(0.5) > self.ratio_threshold * fleet_p50
+        ]
+
+    def tail_ratio(self) -> float:
+        """Fleet p99/p50 — the paper's skew indicator; ~1 means healthy."""
+        fleet = self.fleet_sketch()
+        p50 = fleet.quantile(0.5)
+        return fleet.quantile(0.99) / p50 if p50 > 0 else math.inf
+
+
+class LossSpikeGuard:
+    def __init__(self, window: int = 32, spike_factor: float = 3.0, warmup: int = 8):
+        self.history: deque[float] = deque(maxlen=window)
+        self.spike_factor = spike_factor
+        self.warmup = warmup
+
+    def check(self, token_loss_sketch: DDSketch) -> dict:
+        """Returns {"spike": bool, "p50","p99","baseline"} for this window."""
+        p50 = token_loss_sketch.quantile(0.5)
+        p99 = token_loss_sketch.quantile(0.99)
+        baseline = (
+            sorted(self.history)[len(self.history) // 2] if self.history else math.nan
+        )
+        spike = (
+            len(self.history) >= self.warmup
+            and math.isfinite(p99)
+            and p99 > self.spike_factor * baseline
+        )
+        if math.isfinite(p99):
+            self.history.append(p99)
+        return {"spike": bool(spike), "p50": p50, "p99": p99, "baseline": baseline}

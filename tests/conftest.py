@@ -1,0 +1,15 @@
+"""Shared test fixtures.
+
+IMPORTANT: no XLA_FLAGS here — smoke tests and benchmarks must see the
+real single CPU device (DESIGN.md §7).  Multi-device behaviour is tested in
+subprocesses that set --xla_force_host_platform_device_count themselves
+(see tests/util.py).
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

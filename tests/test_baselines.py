@@ -1,0 +1,137 @@
+"""The paper's comparison baselines: GKArray, HDR Histogram, Moments.
+
+Each baseline is tested against its OWN guarantee (Table 1): GK's worst-case
+rank error, HDR's relative error on its bounded range, Moments' merge
+exactness — and the contrasts the paper draws (HDR bounded range raises;
+GK one-way merge degrades; Moments relative error blows up on heavy tails).
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.gk import GKArray
+from repro.core.hdr import HDRHistogram
+from repro.core.moments import MomentsSketch
+from repro.core.ddsketch import DDSketch
+from repro.core.oracle import exact_quantile, rank_error, relative_error
+from repro.data.datasets import make_dataset
+
+QS = (0.01, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999)
+
+
+@pytest.mark.parametrize("dataset", ["pareto", "span", "power"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_gk_rank_error_guarantee(dataset, seed):
+    data = make_dataset(dataset, 20000, seed)
+    gk = GKArray(0.01)
+    for v in data:
+        gk.add(float(v))
+    s = np.sort(data)
+    for q in QS:
+        assert rank_error(s, gk.quantile(q), q) <= 0.0105, (dataset, q)
+
+
+def test_gk_one_way_merge_still_bounded():
+    data = make_dataset("pareto", 20000, 2)
+    parts = np.array_split(data, 4)
+    merged = GKArray(0.01)
+    for p in parts:
+        sk = GKArray(0.01)
+        for v in p:
+            sk.add(float(v))
+        merged.merge(sk)
+    s = np.sort(data)
+    # one-way merge: eps grows to ~2*eps in the worst case (paper §1.2)
+    for q in QS:
+        assert rank_error(s, merged.quantile(q), q) <= 0.021
+
+
+@pytest.mark.parametrize("dataset", ["pareto", "power"])
+def test_hdr_relative_error(dataset):
+    data = make_dataset(dataset, 20000, 0)
+    h = HDRHistogram(2)
+    for v in data:
+        h.add(float(v))
+    s = np.sort(data)
+    for q in QS:
+        assert relative_error(h.quantile(q), exact_quantile(s, q)) <= 0.01, q
+
+
+def test_hdr_bounded_range_raises():
+    h = HDRHistogram(2, highest_trackable=1e12)
+    with pytest.raises(ValueError):
+        h.add(2e12)  # the paper's Table 1 "bounded" limitation
+
+
+def test_hdr_merge_exact():
+    a, b, ab = HDRHistogram(2), HDRHistogram(2), HDRHistogram(2)
+    d1, d2 = make_dataset("pareto", 5000, 3), make_dataset("pareto", 5000, 4)
+    for v in d1:
+        a.add(float(v))
+        ab.add(float(v))
+    for v in d2:
+        b.add(float(v))
+        ab.add(float(v))
+    a.merge(b)
+    assert np.array_equal(a.counts, ab.counts)
+    for q in QS:
+        assert a.quantile(q) == ab.quantile(q)
+
+
+def test_hdr_larger_than_ddsketch():
+    """Paper Fig. 6: HDR footprint is significantly larger for the same
+    relative accuracy target."""
+    data = make_dataset("span", 50000, 0)
+    dd = DDSketch(0.01, max_bins=2048)
+    h = HDRHistogram(2)
+    for v in data:
+        dd.add(float(v))
+        h.add(float(v))
+    assert h.byte_size() > 2 * dd.byte_size()
+
+
+def test_moments_merge_exact():
+    a, b, ab = MomentsSketch(20), MomentsSketch(20), MomentsSketch(20)
+    d1, d2 = make_dataset("power", 2000, 0), make_dataset("power", 2000, 1)
+    a.extend(d1), b.extend(d2), ab.extend(np.concatenate([d1, d2]))
+    a.merge(b)
+    np.testing.assert_allclose(a.power_sums, ab.power_sums, rtol=1e-12)
+    assert a.count == ab.count == 4000
+
+
+def test_moments_reasonable_on_light_tails(rng):
+    data = rng.normal(10.0, 1.0, 20000)
+    m = MomentsSketch(20, compressed=True)
+    m.extend(data)
+    s = np.sort(data)
+    # avg-rank-error sketch: loose bound on the median of a gaussian
+    assert relative_error(m.quantile(0.5), exact_quantile(s, 0.5)) < 0.05
+
+
+def test_moments_struggles_on_heavy_tails():
+    """Paper Fig. 10: Moments' relative error on pareto p99 >> DDSketch's."""
+    data = make_dataset("pareto", 50000, 0)
+    m = MomentsSketch(20, compressed=True)
+    m.extend(data)
+    dd = DDSketch(0.01)
+    dd.extend(data)
+    s = np.sort(data)
+    err_m = relative_error(m.quantile(0.99), exact_quantile(s, 0.99))
+    err_dd = relative_error(dd.quantile(0.99), exact_quantile(s, 0.99))
+    assert err_dd <= 0.01
+    assert err_m > 5 * err_dd
+
+
+def test_size_ordering_matches_table1():
+    """Moments is O(k) regardless of n; GK grows slowly; DDSketch bounded."""
+    data = make_dataset("pareto", 30000, 5)
+    mo, gk, dd = MomentsSketch(20), GKArray(0.01), DDSketch(0.01, max_bins=2048)
+    size0 = mo.byte_size()
+    for v in data:
+        mo.add(float(v))
+        gk.add(float(v))
+        dd.add(float(v))
+    assert mo.byte_size() == size0  # input-independent
+    assert dd.num_bins() <= 2048

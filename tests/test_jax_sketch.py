@@ -1,0 +1,157 @@
+"""Device-tier sketch: host/device equivalence + psum mergeability.
+
+The device sketch must agree with the paper-exact host sketch whenever no
+value falls outside the static bucket range, and its merge must be the
+plain '+' that makes it all-reducible (tested for real under shard_map on
+8 fake devices, in a subprocess so the main process keeps 1 device).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import jax_sketch as js
+from repro.core.ddsketch import DDSketch
+from repro.core.oracle import exact_quantile, relative_error
+from repro.kernels.ref import BucketSpec
+
+from util import run_with_devices
+
+SPEC = BucketSpec(relative_accuracy=0.01, num_buckets=2048, offset=-1024)
+QS = (0.01, 0.25, 0.5, 0.75, 0.95, 0.99, 1.0)
+
+
+def _host_equiv(values):
+    host = DDSketch(SPEC.relative_accuracy, max_bins=None, mapping=SPEC.mapping)
+    host.extend(values)
+    return host
+
+
+values_in_range = st.lists(
+    st.floats(min_value=1e-4, max_value=1e4, allow_nan=False).map(float)
+    | st.floats(min_value=-1e4, max_value=-1e-4, allow_nan=False).map(float)
+    | st.just(0.0),
+    min_size=1,
+    max_size=200,
+)
+
+
+@given(data=values_in_range)
+@settings(max_examples=100, deadline=None)
+def test_host_device_equivalence(data):
+    sk = js.add(js.empty(SPEC), jnp.asarray(data, jnp.float32), spec=SPEC)
+    host = _host_equiv(np.asarray(data, np.float32))
+    for q in QS:
+        dev = float(js.quantile(sk, q, spec=SPEC))
+        hst = host.quantile(q)
+        assert dev == pytest.approx(hst, rel=1e-5, abs=1e-7), (q, dev, hst)
+
+
+def test_alpha_guarantee_device(rng):
+    data = (rng.pareto(1.0, 5000) + 1.0).astype(np.float32)
+    sk = js.add(js.empty(SPEC), jnp.asarray(data), spec=SPEC)
+    s = np.sort(data)
+    for q in QS:
+        est = float(js.quantile(sk, q, spec=SPEC))
+        assert relative_error(est, exact_quantile(s, q)) <= 0.0101
+
+
+def test_merge_is_elementwise_sum(rng):
+    a = (rng.pareto(1.0, 1000) + 1).astype(np.float32)
+    b = (rng.lognormal(0, 1, 1000)).astype(np.float32)
+    sa = js.add(js.empty(SPEC), jnp.asarray(a), spec=SPEC)
+    sb = js.add(js.empty(SPEC), jnp.asarray(b), spec=SPEC)
+    merged = js.merge(sa, sb)
+    both = js.add(sa, jnp.asarray(b), spec=SPEC)
+    assert np.array_equal(np.asarray(merged.pos), np.asarray(both.pos))
+    assert float(merged.count) == 2000
+    for q in QS:
+        assert float(js.quantile(merged, q, spec=SPEC)) == float(
+            js.quantile(both, q, spec=SPEC)
+        )
+
+
+def test_weights_and_nonfinite(rng):
+    vals = jnp.asarray([1.0, jnp.nan, 10.0, jnp.inf, -5.0, 0.0], jnp.float32)
+    w = jnp.asarray([2.0, 7.0, 1.0, 3.0, 1.0, 4.0], jnp.float32)
+    sk = js.add(js.empty(SPEC), vals, w, spec=SPEC)
+    # nan/inf weights contribute nothing
+    assert float(sk.count) == 2 + 1 + 1 + 4
+    assert float(sk.zero) == 4
+    assert float(sk.neg.sum()) == 1
+
+
+def test_overflow_counted():
+    sk = js.add(js.empty(SPEC), jnp.asarray([1e30], jnp.float32), spec=SPEC)
+    assert float(sk.overflow) == 1
+
+
+def test_to_host_from_host_roundtrip(rng):
+    data = np.concatenate(
+        [rng.pareto(1.0, 500) + 1, -(rng.pareto(1.0, 300) + 1), np.zeros(11)]
+    ).astype(np.float32)
+    sk = js.add(js.empty(SPEC), jnp.asarray(data), spec=SPEC)
+    host = js.to_host(sk, SPEC)
+    assert host.count == len(data)
+    back = js.from_host(host, SPEC)
+    assert np.array_equal(np.asarray(back.pos), np.asarray(sk.pos))
+    assert np.array_equal(np.asarray(back.neg), np.asarray(sk.neg))
+    for q in QS:
+        assert host.quantile(q) == pytest.approx(
+            float(js.quantile(sk, q, spec=SPEC)), rel=1e-5
+        )
+
+
+def test_quantiles_batch(rng):
+    data = (rng.pareto(1.0, 2000) + 1).astype(np.float32)
+    sk = js.add(js.empty(SPEC), jnp.asarray(data), spec=SPEC)
+    batch = np.asarray(js.quantiles(sk, jnp.asarray(QS), spec=SPEC))
+    single = [float(js.quantile(sk, q, spec=SPEC)) for q in QS]
+    assert np.allclose(batch, single)
+
+
+def test_add_is_jittable_and_donatable(rng):
+    data = jnp.asarray((rng.pareto(1.0, 256) + 1).astype(np.float32))
+    add = jax.jit(lambda s, v: js.add(s, v, spec=SPEC), donate_argnums=(0,))
+    sk = js.empty(SPEC)
+    for _ in range(3):
+        sk = add(sk, data)
+    assert float(sk.count) == 3 * 256
+
+
+# --------------------------------------------------------------------- #
+# cross-device mergeability: the paper's headline property == psum
+# --------------------------------------------------------------------- #
+def test_psum_merge_across_devices():
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import jax_sketch as js
+from repro.core.ddsketch import DDSketch
+from repro.kernels.ref import BucketSpec
+
+SPEC = BucketSpec()
+mesh = jax.make_mesh((8,), ("d",))
+rng = np.random.default_rng(0)
+data = (rng.pareto(1.0, 8 * 500) + 1.0).astype(np.float32)
+
+def per_device(vals):  # vals: (500,) local shard
+    sk = js.add(js.empty(SPEC), vals, spec=SPEC)
+    return js.allreduce(sk, "d")
+
+fn = jax.shard_map(per_device, mesh=mesh, in_specs=P("d"), out_specs=P(), check_vma=False)
+merged = jax.jit(fn)(jnp.asarray(data))
+
+host = DDSketch(SPEC.relative_accuracy, max_bins=None)
+host.extend(data)
+for q in (0.25, 0.5, 0.95, 0.99):
+    dev = float(js.quantile(jax.tree.map(lambda x: x[0] if x.ndim else x, merged), q, spec=SPEC)) \
+        if False else float(js.quantile(merged, q, spec=SPEC))
+    assert abs(dev - host.quantile(q)) <= 1e-5 * abs(host.quantile(q)) + 1e-7, (q, dev, host.quantile(q))
+print("psum merge OK")
+"""
+    out = run_with_devices(script, 8)
+    assert "psum merge OK" in out

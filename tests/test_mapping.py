@@ -1,0 +1,102 @@
+"""Key mappings: the alpha-accuracy invariant (paper Lemma 2, generalized).
+
+A mapping is alpha-accurate iff for every representable x > 0 the bucket
+midpoint estimate value(key(x)) has relative error <= alpha.  This is the
+invariant everything else rests on, so it gets hypothesis sweeps across the
+full float range for all three mapping kinds.
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mapping import (
+    CubicInterpolatedMapping,
+    LinearInterpolatedMapping,
+    LogarithmicMapping,
+    make_mapping,
+)
+
+KINDS = ["log", "linear", "cubic"]
+ALPHAS = [0.001, 0.01, 0.05, 0.2]
+
+values = st.floats(
+    min_value=1e-200, max_value=1e200, allow_nan=False, allow_infinity=False
+)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("alpha", ALPHAS)
+@given(x=values)
+@settings(max_examples=200, deadline=None)
+def test_alpha_accuracy(kind, alpha, x):
+    m = make_mapping(kind, alpha)
+    est = m.value(m.key(x))
+    assert abs(est - x) <= alpha * x * (1 + 1e-9), (kind, alpha, x, est)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@given(x=values, y=values)
+@settings(max_examples=200, deadline=None)
+def test_key_monotone(kind, x, y):
+    m = make_mapping(kind, 0.01)
+    if x <= y:
+        assert m.key(x) <= m.key(y)
+    else:
+        assert m.key(x) >= m.key(y)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_bucket_bounds_consistent(kind):
+    m = make_mapping(kind, 0.01)
+    for key in [-1000, -1, 0, 1, 7, 1000]:
+        lo, hi = m.lower_bound(key), m.upper_bound(key)
+        assert lo < hi
+        assert lo == pytest.approx(m.upper_bound(key - 1), rel=1e-12)
+        # midpoint estimate lies inside the bucket
+        assert lo <= m.value(key) <= hi
+        # bucket values map back to their key
+        assert m.key(m.value(key)) == key
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@given(x=values)
+@settings(max_examples=100, deadline=None)
+def test_value_in_own_bucket(kind, x):
+    m = make_mapping(kind, 0.01)
+    k = m.key(x)
+    assert m.lower_bound(k) * (1 - 1e-12) <= x <= m.upper_bound(k) * (1 + 1e-12)
+
+
+def test_log_mapping_matches_algorithm1():
+    """key == ceil(log_gamma x) exactly for the logarithmic mapping."""
+    m = LogarithmicMapping(0.01)
+    for x in [1e-6, 0.5, 1.0, 1.5, 2.0, 123.456, 8e11]:
+        assert m.key(x) == math.ceil(math.log(x) / math.log(m.gamma))
+
+
+def test_interpolated_overheads():
+    """Paper §2.2: linear costs ~1/ln2 ≈ 1.44x buckets, cubic ~1%."""
+    log_m = LogarithmicMapping(0.01)
+    lin = LinearInterpolatedMapping(0.01)
+    cub = CubicInterpolatedMapping(0.01)
+    span = lambda m: m.key(1e9) - m.key(1e-9)
+    assert span(lin) / span(log_m) == pytest.approx(1 / math.log(2), rel=0.02)
+    assert span(cub) / span(log_m) == pytest.approx(1.0, rel=0.02)
+
+
+def test_bad_alpha_rejected():
+    for bad in (0.0, 1.0, -0.5, 2.0):
+        with pytest.raises(ValueError):
+            make_mapping("log", bad)
+    with pytest.raises(ValueError):
+        make_mapping("nope", 0.01)
+
+
+def test_serialization_roundtrip():
+    for kind in KINDS:
+        m = make_mapping(kind, 0.02)
+        d = m.to_dict()
+        m2 = make_mapping(d["kind"], d["relative_accuracy"])
+        assert m == m2

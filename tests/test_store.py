@@ -1,0 +1,109 @@
+"""Bucket stores: growth, collapse (Algorithm 3), merge (Algorithm 4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.store import (
+    CollapsingHighestDenseStore,
+    CollapsingLowestDenseStore,
+    DenseStore,
+    SparseStore,
+    make_store,
+)
+
+keys = st.lists(st.integers(min_value=-500, max_value=500), min_size=1, max_size=300)
+
+
+@pytest.mark.parametrize("kind", ["dense", "sparse"])
+@given(ks=keys)
+@settings(max_examples=100, deadline=None)
+def test_total_count_preserved(kind, ks):
+    store = make_store(kind, max_bins=16)
+    for k in ks:
+        store.add(k)
+    assert store.count == len(ks)
+    assert store.num_bins() <= 16
+
+
+@given(ks=keys)
+@settings(max_examples=100, deadline=None)
+def test_collapse_lowest_keeps_upper_buckets_exact(ks):
+    capped = CollapsingLowestDenseStore(max_bins=8)
+    exact = DenseStore()
+    for k in ks:
+        capped.add(k)
+        exact.add(k)
+    # every bucket above the collapse boundary must match the exact store
+    kept = sorted(k for k, _ in capped.items_ascending())
+    boundary = kept[0]
+    exact_counts = dict(exact.items_ascending())
+    for k, c in capped.items_ascending():
+        if k > boundary:
+            assert exact_counts[k] == c
+    # the boundary bucket absorbs everything below (Algorithm 3)
+    absorbed = sum(c for k, c in exact.items_ascending() if k <= boundary)
+    assert dict(capped.items_ascending())[boundary] == absorbed
+
+
+def test_collapse_highest_mirror():
+    st_ = CollapsingHighestDenseStore(max_bins=4)
+    for k in range(10):
+        st_.add(k)
+    ks = [k for k, _ in st_.items_ascending()]
+    assert ks == [0, 1, 2, 3]
+    assert dict(st_.items_ascending())[3] == 7  # 3..9 folded
+
+
+@pytest.mark.parametrize("kind", ["dense", "sparse"])
+@given(a=keys, b=keys)
+@settings(max_examples=50, deadline=None)
+def test_merge_equals_union(kind, a, b):
+    """Algorithm 4: merge(sa, sb) answers exactly like a store that saw
+    a + b (when no collapse, i.e. unbounded)."""
+    sa = make_store(kind, None) if kind == "sparse" else DenseStore()
+    sb = make_store(kind, None) if kind == "sparse" else DenseStore()
+    sab = make_store(kind, None) if kind == "sparse" else DenseStore()
+    for k in a:
+        sa.add(k)
+        sab.add(k)
+    for k in b:
+        sb.add(k)
+        sab.add(k)
+    sa.merge(sb)
+    assert dict(sa.items_ascending()) == dict(sab.items_ascending())
+    assert sa.count == sab.count
+
+
+def test_remove():
+    s = DenseStore()
+    s.add(5, 3)
+    s.remove(5, 2)
+    assert s.count == 1
+    with pytest.raises(ValueError):
+        s.remove(5, 5)
+    with pytest.raises(ValueError):
+        s.remove(99)
+
+
+def test_key_at_rank_matches_algorithm2():
+    s = DenseStore()
+    for k, c in [(1, 3), (5, 2), (9, 1)]:
+        s.add(k, c)
+    # cumulative: 3 at key1, 5 at key5, 6 at key9; Algorithm 2: first bucket
+    # with cumulative count > rank
+    assert s.key_at_rank(0) == 1
+    assert s.key_at_rank(2.9) == 1
+    assert s.key_at_rank(3) == 5
+    assert s.key_at_rank(4.9) == 5
+    assert s.key_at_rank(5) == 9
+
+
+@pytest.mark.parametrize("kind", ["dense", "sparse"])
+def test_serialization_roundtrip(kind):
+    s = make_store(kind, 32)
+    for k in [-5, 0, 3, 3, 100]:
+        s.add(k)
+    d = s.to_dict()
+    s2 = type(s).from_dict(d)
+    assert dict(s2.items_ascending()) == dict(s.items_ascending())

@@ -1,0 +1,115 @@
+"""Telemetry: device recorder, host aggregator rollups, watchdog guards."""
+
+import math
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.ddsketch import DDSketch
+from repro.telemetry import (
+    HostAggregator,
+    LossSpikeGuard,
+    StragglerWatchdog,
+    TelemetryConfig,
+    init_telemetry,
+    record,
+)
+
+
+def test_record_and_flush_matches_direct_sketch(rng):
+    tcfg = TelemetryConfig()
+    state = init_telemetry(tcfg)
+    data1 = (rng.pareto(1.0, 512) + 1).astype(np.float32)
+    data2 = (rng.pareto(1.0, 512) + 1).astype(np.float32)
+    state = record(state, {"token_loss": jnp.asarray(data1)}, tcfg)
+    state = record(state, {"token_loss": jnp.asarray(data2)}, tcfg)
+
+    agg = HostAggregator(tcfg.spec)
+    win = agg.flush(state, 0, 2)
+
+    direct = DDSketch(tcfg.spec.relative_accuracy, max_bins=None)
+    direct.extend(np.concatenate([data1, data2]))
+    for q in (0.5, 0.95, 0.99):
+        assert win.sketches["token_loss"].quantile(q) == pytest.approx(
+            direct.quantile(q), rel=1e-6
+        )
+
+
+def test_nan_masked_losses_ignored():
+    tcfg = TelemetryConfig()
+    state = init_telemetry(tcfg)
+    vals = jnp.asarray([1.0, jnp.nan, 2.0, jnp.nan], jnp.float32)
+    state = record(state, {"token_loss": vals}, tcfg)
+    assert float(state.sketches["token_loss"].count) == 2
+
+
+def test_rollup_equals_union(rng):
+    """Windows roll up losslessly (Algorithm 4) — 1s->1min claim (§1)."""
+    tcfg = TelemetryConfig()
+    agg = HostAggregator(tcfg.spec)
+    alldata = []
+    for w in range(5):
+        state = init_telemetry(tcfg)
+        d = (rng.lognormal(0, 2, 256)).astype(np.float32)
+        alldata.append(d)
+        state = record(state, {"token_loss": jnp.asarray(d)}, tcfg)
+        agg.flush(state, w, w + 1)
+    direct = DDSketch(tcfg.spec.relative_accuracy, max_bins=None)
+    direct.extend(np.concatenate(alldata))
+    roll = agg.rollup("token_loss")
+    for q in (0.25, 0.5, 0.9, 0.99):
+        assert roll.quantile(q) == pytest.approx(direct.quantile(q), rel=1e-6)
+    # last-2-window rollup sees only its windows
+    roll2 = agg.rollup("token_loss", last_k=2)
+    assert roll2.count == 512
+
+
+def test_aggregator_state_roundtrip(rng):
+    tcfg = TelemetryConfig()
+    agg = HostAggregator(tcfg.spec)
+    state = init_telemetry(tcfg)
+    state = record(
+        state, {"token_loss": jnp.asarray(rng.pareto(1.0, 100).astype(np.float32) + 1)}, tcfg
+    )
+    agg.flush(state, 0, 1)
+    agg2 = HostAggregator.from_state_dict(agg.state_dict())
+    assert agg2.totals["token_loss"].quantile(0.5) == agg.totals[
+        "token_loss"
+    ].quantile(0.5)
+
+
+def test_straggler_watchdog(rng):
+    wd = StragglerWatchdog(ratio_threshold=1.5, min_samples=8)
+    for step in range(32):
+        for h in range(4):
+            base = 0.10 if h != 2 else 0.25  # host2 is 2.5x slower
+            wd.observe(f"host{h}", base + rng.normal(0, 0.002))
+    assert wd.stragglers() == ["host2"]
+    assert wd.tail_ratio() > 1.5  # fleet skewed by the straggler
+
+
+def test_straggler_none_when_healthy(rng):
+    wd = StragglerWatchdog(min_samples=8)
+    for step in range(32):
+        for h in range(4):
+            wd.observe(f"host{h}", 0.1 + rng.normal(0, 0.002))
+    assert wd.stragglers() == []
+    assert wd.tail_ratio() < 1.2
+
+
+def test_loss_spike_guard():
+    guard = LossSpikeGuard(window=16, spike_factor=3.0, warmup=4)
+    def sk(scale):
+        s = DDSketch(0.01)
+        s.extend(np.random.default_rng(0).lognormal(0, 0.3, 200) * scale)
+        return s
+    for _ in range(6):
+        out = guard.check(sk(1.0))
+        assert not out["spike"]
+    out = guard.check(sk(10.0))
+    assert out["spike"]
+    # recovery: normal windows don't keep flagging
+    out = guard.check(sk(1.0))
+    assert not out["spike"]

@@ -1,0 +1,32 @@
+"""Test helpers: run a python snippet in a subprocess with N fake devices."""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(script: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run ``script`` with XLA_FLAGS forcing ``n_devices`` CPU devices.
+
+    The script should raise/assert on failure; stdout is returned.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout
