@@ -1,0 +1,110 @@
+"""SketchBank benchmarks: single segmented dispatch vs a Python loop over K.
+
+The claim under test is the tentpole of the bank design: inserting a stream
+of (value, sketch_id) pairs into K sketches costs *one* dispatch (the
+segmented histogram contracts values into all K rows at once), while the
+naive serving path launches ``jax_sketch.add`` K times.  The sweep over
+K in {1, 64, 4096} shows the loop path scaling linearly in K while the bank
+path stays flat, plus a throughput row for the vectorized K-row quantile
+query (Algorithm 2 over the whole bank).
+
+CPU wall-clock of the jit'd XLA reference path (the TPU-portable
+semantics), matching kernels_bench's methodology.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import jax_sketch as js
+from repro.core import sketch_bank as sb
+from repro.kernels.ref import BucketSpec
+
+
+def _time(fn, *args, iters=10) -> float:
+    out = fn(*args)  # compile + warm
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_bank_insert(
+    n: int = 500_000, ks=(1, 64, 4096), loop_cap: int = 64, iters: int = 10
+) -> list[dict]:
+    """Bank add (one dispatch) vs a K-loop of jax_sketch.add, sweeping K.
+
+    The loop path is only timed up to ``loop_cap`` sketches (beyond that it
+    is extrapolated linearly — at K=4096 actually running it would dominate
+    the whole suite, which is rather the point).
+    """
+    spec = BucketSpec()
+    rng = np.random.default_rng(0)
+    values = jnp.asarray((rng.pareto(1.0, n) + 1.0).astype(np.float32))
+    rows = []
+    for k in ks:
+        ids = jnp.asarray(rng.integers(0, k, n).astype(np.int32))
+        bank_fn = jax.jit(
+            lambda v, s, k=k: sb.add(sb.empty(spec, k), v, s, spec=spec)
+        )
+        bank_secs = _time(bank_fn, values, ids, iters=iters)
+
+        # naive path: one jax_sketch.add per sketch over its own slice
+        k_loop = min(k, loop_cap)
+        ids_np = np.asarray(ids)
+        slices = [
+            jnp.asarray(np.where(ids_np == i, np.asarray(values), np.nan))
+            for i in range(k_loop)
+        ]
+
+        def loop_fn(slabs):
+            return [
+                js.add(js.empty(spec), slab, spec=spec).pos for slab in slabs
+            ]
+
+        loop_secs = _time(jax.jit(loop_fn), slices, iters=max(1, iters // 2))
+        loop_est = loop_secs * (k / k_loop)
+        rows.append(
+            {
+                "bench": "bank_insert",
+                "K": k,
+                "n": n,
+                "bank_ms": round(bank_secs * 1e3, 3),
+                "loop_ms": round(loop_est * 1e3, 3),
+                "loop_measured_K": k_loop,
+                "speedup": round(loop_est / bank_secs, 1),
+                "impl": "xla_ref",
+            }
+        )
+    return rows
+
+
+def bench_bank_quantiles(k: int = 4096, n: int = 500_000, iters: int = 10) -> list[dict]:
+    """Vectorized Algorithm 2 over all K rows at once (single query pass)."""
+    spec = BucketSpec()
+    rng = np.random.default_rng(0)
+    values = jnp.asarray((rng.pareto(1.0, n) + 1.0).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, k, n).astype(np.int32))
+    bank = jax.block_until_ready(
+        sb.add(sb.empty(spec, k), values, ids, spec=spec)
+    )
+    qs = jnp.asarray([0.5, 0.95, 0.99])
+    fn = jax.jit(lambda b, q: sb.quantiles(b, q, spec=spec))
+    secs = _time(fn, bank, qs, iters=iters)
+    return [
+        {
+            "bench": "bank_quantiles",
+            "K": k,
+            "qs": 3,
+            "ms_per_query_pass": round(secs * 1e3, 3),
+            "us_per_sketch": round(secs / k * 1e6, 3),
+            "impl": "device_searchsorted",
+        }
+    ]

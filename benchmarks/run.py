@@ -4,7 +4,13 @@
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --quick    # smaller sweeps
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI-sized sweeps
   PYTHONPATH=src python -m benchmarks.run --only fig10_rel_err
+  PYTHONPATH=src python -m benchmarks.run --smoke --json BENCH_smoke.json
+
+``--json`` writes every bench's rows to one JSON file (schema:
+{"bench_name": [row, ...], ...}) so CI can upload the per-PR perf
+trajectory as an artifact.
 """
 
 from __future__ import annotations
@@ -15,7 +21,7 @@ import json
 import os
 import sys
 
-from benchmarks import kernels_bench, sketches
+from benchmarks import bank_bench, kernels_bench, sketches
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 
@@ -58,10 +64,33 @@ def roofline_rows() -> list[dict]:
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny sweeps for CI: every bench runs, sizes minimal")
     p.add_argument("--only", default=None)
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also write all rows to PATH as JSON (CI artifact)")
     args = p.parse_args()
 
-    if args.quick:
+    if args.smoke:
+        benches = {
+            "fig6_size": lambda: sketches.bench_size(ns=(10_000,)),
+            "fig7_bins": lambda: sketches.bench_bins(ns=(10_000, 100_000)),
+            "fig8_add": lambda: sketches.bench_add(n=10_000),
+            "fig9_merge": lambda: sketches.bench_merge(n_each=5_000, pairs=3),
+            "fig10_rel_err": lambda: sketches.bench_rel_err(n=10_000),
+            "fig11_rank_err": lambda: sketches.bench_rank_err(n=10_000),
+            "kernel_insert": lambda: kernels_bench.bench_device_insert(n=50_000),
+            "kernel_merge": lambda: kernels_bench.bench_device_merge(iters=10),
+            "kernel_quantile": lambda: kernels_bench.bench_quantile_query(iters=10),
+            "bank_insert": lambda: bank_bench.bench_bank_insert(
+                n=50_000, ks=(1, 64, 4096), loop_cap=8, iters=3
+            ),
+            "bank_quantiles": lambda: bank_bench.bench_bank_quantiles(
+                k=256, n=50_000, iters=3
+            ),
+            "roofline": roofline_rows,
+        }
+    elif args.quick:
         benches = {
             "fig6_size": lambda: sketches.bench_size(ns=(10_000, 100_000)),
             "fig7_bins": lambda: sketches.bench_bins(ns=(10_000, 100_000, 1_000_000)),
@@ -72,6 +101,12 @@ def main() -> None:
             "kernel_insert": lambda: kernels_bench.bench_device_insert(n=200_000),
             "kernel_merge": kernels_bench.bench_device_merge,
             "kernel_quantile": kernels_bench.bench_quantile_query,
+            "bank_insert": lambda: bank_bench.bench_bank_insert(
+                n=200_000, loop_cap=16, iters=5
+            ),
+            "bank_quantiles": lambda: bank_bench.bench_bank_quantiles(
+                k=1024, n=200_000, iters=5
+            ),
             "roofline": roofline_rows,
         }
     else:
@@ -85,19 +120,28 @@ def main() -> None:
             "kernel_insert": kernels_bench.bench_device_insert,
             "kernel_merge": kernels_bench.bench_device_merge,
             "kernel_quantile": kernels_bench.bench_quantile_query,
+            "bank_insert": bank_bench.bench_bank_insert,
+            "bank_quantiles": bank_bench.bench_bank_quantiles,
             "roofline": roofline_rows,
         }
 
     failed = []
+    results: dict[str, list[dict]] = {}
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
         print(f"== {name} ==")
         try:
-            _emit(fn())
+            rows = fn()
+            results[name] = rows
+            _emit(rows)
         except Exception as e:  # keep going; report at the end
             failed.append((name, repr(e)))
             print(f"ERROR in {name}: {e!r}\n")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"wrote {sum(len(v) for v in results.values())} rows to {args.json}")
     if failed:
         print(f"{len(failed)} benches failed: {failed}")
         sys.exit(1)

@@ -1,0 +1,257 @@
+"""SketchBank: K independent device DDSketches as stacked ``(K, m)`` arrays.
+
+The paper's production setting is one quantile sketch *per metric key* (per
+endpoint, per customer, per host).  Because DDSketch bucket boundaries are
+data-independent, a bank of K fixed-geometry sketches is just a dense
+``(K, m)`` array, and inserting a stream of ``(value, sketch_id)`` pairs is a
+*segmented* histogram — one kernel/ref dispatch regardless of K, instead of
+K launches of ``jax_sketch.add``.  Everything else the single sketch enjoys
+lifts row-wise:
+
+* ``merge`` / ``allreduce`` stay per-bucket '+' (Algorithm 4), now over
+  ``(K, m)`` — the bank is psum-able exactly like one sketch;
+* ``quantiles`` runs Algorithm 2 vectorized over all K rows at once (one
+  cumsum + searchsorted over a (K, 2m+1) value line, no Python loop);
+* ``row`` / ``to_host`` / ``from_host`` move single rows across tiers
+  losslessly (same bucket geometry as ``DeviceSketch``).
+
+Per-row auxiliary stats (zero / overflow / sum / min / max) are maintained
+with ``jax.ops.segment_*`` reductions, mirroring ``jax_sketch.add``'s
+scalar counters.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_sketch
+from repro.core.ddsketch import DDSketch
+from repro.core.jax_sketch import DeviceSketch
+from repro.kernels.ref import BucketSpec, approx_log2, segment_histogram_ref
+
+__all__ = [
+    "SketchBank",
+    "empty",
+    "add",
+    "merge",
+    "allreduce",
+    "row",
+    "set_row",
+    "quantile",
+    "quantiles",
+    "to_host",
+    "from_host",
+]
+
+
+class SketchBank(NamedTuple):
+    """K stacked DDSketch states (all float32; leading axis = sketch id)."""
+
+    pos: jnp.ndarray  # (K, m) bucket counts for positive values
+    neg: jnp.ndarray  # (K, m) bucket counts for negative values (keys of |x|)
+    zero: jnp.ndarray  # (K,) counts of |x| <= min_indexable
+    overflow: jnp.ndarray  # (K,) counts of |x| clamped into the top bucket
+    summ: jnp.ndarray  # (K,) running sums
+    vmin: jnp.ndarray  # (K,) exact running mins
+    vmax: jnp.ndarray  # (K,) exact running maxs
+
+    @property
+    def num_sketches(self) -> int:
+        return self.pos.shape[0]
+
+    @property
+    def counts(self) -> jnp.ndarray:
+        """Per-sketch total counts, shape (K,)."""
+        return self.pos.sum(axis=1) + self.neg.sum(axis=1) + self.zero
+
+
+def empty(spec: BucketSpec, num_sketches: int) -> SketchBank:
+    k, m = num_sketches, spec.num_buckets
+    return SketchBank(
+        pos=jnp.zeros((k, m), jnp.float32),
+        neg=jnp.zeros((k, m), jnp.float32),
+        zero=jnp.zeros(k, jnp.float32),
+        overflow=jnp.zeros(k, jnp.float32),
+        summ=jnp.zeros(k, jnp.float32),
+        vmin=jnp.full(k, jnp.inf, jnp.float32),
+        vmax=jnp.full(k, -jnp.inf, jnp.float32),
+    )
+
+
+def _segment_histogram(values, segment_ids, weights, k, spec, use_kernel):
+    if use_kernel:
+        from repro.kernels import ops
+
+        return ops.segment_histogram(
+            values, segment_ids, weights, num_segments=k, spec=spec
+        )
+    return segment_histogram_ref(
+        values, segment_ids, weights, num_segments=k, spec=spec
+    )
+
+
+@partial(jax.jit, static_argnames=("spec", "use_kernel"))
+def add(
+    bank: SketchBank,
+    values: jnp.ndarray,
+    sketch_ids: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    spec: BucketSpec,
+    use_kernel: bool = False,
+) -> SketchBank:
+    """Vectorized Algorithm 1 over ``(value, sketch_id)`` pairs (any shape).
+
+    One segmented-histogram dispatch updates all K rows; there is no Python
+    loop over sketches anywhere.  Non-finite values and out-of-range ids are
+    ignored; positive / negative / near-zero routing matches
+    ``jax_sketch.add`` exactly.
+    """
+    k = bank.num_sketches
+    x = values.reshape(-1).astype(jnp.float32)
+    s = sketch_ids.reshape(-1).astype(jnp.int32)
+    w = jnp.ones_like(x) if weights is None else weights.reshape(-1).astype(jnp.float32)
+    valid = jnp.isfinite(x) & (s >= 0) & (s < k)
+    w = jnp.where(valid, w, 0.0)
+    sc = jnp.clip(s, 0, k - 1)  # safe ids; invalid lanes carry zero weight
+
+    is_pos = valid & (x > spec.min_indexable)
+    is_neg = valid & (x < -spec.min_indexable)
+    is_zero = valid & ~is_pos & ~is_neg
+
+    pos_hist = _segment_histogram(
+        jnp.where(is_pos, x, -1.0), s, w, k, spec, use_kernel
+    )
+    neg_hist = _segment_histogram(
+        jnp.where(is_neg, -x, -1.0), s, w, k, spec, use_kernel
+    )
+
+    top_key = jnp.float32(spec.offset + spec.num_buckets - 1)
+    raw_key = jnp.ceil(
+        approx_log2(jnp.abs(jnp.where(valid, x, 1.0)), spec.mapping)
+        * jnp.float32(spec.multiplier)
+    )
+    over = (is_pos | is_neg) & (raw_key > top_key)
+
+    seg_sum = partial(jax.ops.segment_sum, num_segments=k)
+    wx = w * jnp.where(valid, x, 0.0)
+    contributes = valid & (w > 0)
+    vmin_new = jax.ops.segment_min(
+        jnp.where(contributes, x, jnp.inf), sc, num_segments=k
+    )
+    vmax_new = jax.ops.segment_max(
+        jnp.where(contributes, x, -jnp.inf), sc, num_segments=k
+    )
+
+    return SketchBank(
+        pos=bank.pos + pos_hist,
+        neg=bank.neg + neg_hist,
+        zero=bank.zero + seg_sum(w * is_zero, sc),
+        overflow=bank.overflow + seg_sum(w * over, sc),
+        summ=bank.summ + seg_sum(wx, sc),
+        vmin=jnp.minimum(bank.vmin, vmin_new),
+        vmax=jnp.maximum(bank.vmax, vmax_new),
+    )
+
+
+def merge(a: SketchBank, b: SketchBank) -> SketchBank:
+    """Algorithm 4 over all K rows: still a per-bucket '+' (hence psum-able)."""
+    return SketchBank(
+        pos=a.pos + b.pos,
+        neg=a.neg + b.neg,
+        zero=a.zero + b.zero,
+        overflow=a.overflow + b.overflow,
+        summ=a.summ + b.summ,
+        vmin=jnp.minimum(a.vmin, b.vmin),
+        vmax=jnp.maximum(a.vmax, b.vmax),
+    )
+
+
+def allreduce(bank: SketchBank, axis_name) -> SketchBank:
+    """Cross-device Algorithm 4 for the whole bank in one psum per field."""
+    return SketchBank(
+        pos=jax.lax.psum(bank.pos, axis_name),
+        neg=jax.lax.psum(bank.neg, axis_name),
+        zero=jax.lax.psum(bank.zero, axis_name),
+        overflow=jax.lax.psum(bank.overflow, axis_name),
+        summ=jax.lax.psum(bank.summ, axis_name),
+        vmin=jax.lax.pmin(bank.vmin, axis_name),
+        vmax=jax.lax.pmax(bank.vmax, axis_name),
+    )
+
+
+# --------------------------------------------------------------------- #
+# row access (host <-> device tier moves are per row, like single sketches)
+# --------------------------------------------------------------------- #
+def row(bank: SketchBank, k: int) -> DeviceSketch:
+    """Row ``k`` as a standalone DeviceSketch (shares the bucket geometry)."""
+    return DeviceSketch(
+        pos=bank.pos[k],
+        neg=bank.neg[k],
+        zero=bank.zero[k],
+        overflow=bank.overflow[k],
+        summ=bank.summ[k],
+        vmin=bank.vmin[k],
+        vmax=bank.vmax[k],
+    )
+
+
+def set_row(bank: SketchBank, k: int, sketch: DeviceSketch) -> SketchBank:
+    """Functional update: replace row ``k`` with a DeviceSketch's state."""
+    return SketchBank(
+        pos=bank.pos.at[k].set(sketch.pos),
+        neg=bank.neg.at[k].set(sketch.neg),
+        zero=bank.zero.at[k].set(sketch.zero),
+        overflow=bank.overflow.at[k].set(sketch.overflow),
+        summ=bank.summ.at[k].set(sketch.summ),
+        vmin=bank.vmin.at[k].set(sketch.vmin),
+        vmax=bank.vmax.at[k].set(sketch.vmax),
+    )
+
+
+def to_host(bank: SketchBank, spec: BucketSpec, k: int) -> DDSketch:
+    """Flush row ``k`` into the exact, unbounded host sketch (lossless for
+    integer-weight counts below 2^24; see ``jax_sketch.to_host``)."""
+    return jax_sketch.to_host(row(bank, k), spec)
+
+
+def from_host(hosts: Sequence[DDSketch], spec: BucketSpec) -> SketchBank:
+    """Stack host sketches into a bank, one per row (keys clamp into range).
+
+    Like ``jax_sketch.from_host``, the device-only ``overflow`` counter has
+    no host-tier equivalent and restarts at zero.
+    """
+    rows = [jax_sketch.from_host(h, spec) for h in hosts]
+    if not rows:
+        return empty(spec, 0)
+    return SketchBank(*(jnp.stack(f) for f in zip(*rows)))
+
+
+# --------------------------------------------------------------------- #
+# queries: Algorithm 2 vectorized over all K rows at once
+# --------------------------------------------------------------------- #
+@partial(jax.jit, static_argnames=("spec",))
+def quantiles(bank: SketchBank, qs: jnp.ndarray, *, spec: BucketSpec) -> jnp.ndarray:
+    """Per-row quantile estimates, shape ``(K, len(qs))``.
+
+    ``jax_sketch.quantile`` (Algorithm 2 as one cumsum + searchsorted over
+    the concatenated neg/zero/pos value line) vmapped over the K rows — a
+    single batched pass, no Python loop over rows or qs, and bit-identical
+    semantics to querying each row as a standalone DeviceSketch.
+    """
+    qf = jnp.atleast_1d(jnp.asarray(qs, jnp.float32))
+    rows_as_sketch = DeviceSketch(*bank[:7])  # leading axis K on every leaf
+    return jax.vmap(
+        lambda sk: jax_sketch.quantiles(sk, qf, spec=spec)
+    )(rows_as_sketch)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def quantile(bank: SketchBank, q, *, spec: BucketSpec) -> jnp.ndarray:
+    """One quantile for every row, shape ``(K,)``."""
+    return quantiles(bank, jnp.asarray([q]), spec=spec)[:, 0]

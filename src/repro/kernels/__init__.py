@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""DDSketch device kernels: Pallas TPU implementations + pure-XLA oracles.
+
+Hot spots the paper optimizes (Algorithm 1's insert loop), TPU-native:
+
+* ``ddsketch_hist``     — single-sketch histogram insert,
+* ``ddsketch_seg_hist`` — segmented insert for a bank of K sketches,
+* ``ref``               — pure-jnp semantic oracles / XLA fallback,
+* ``ops``               — backend dispatch (``force=`` pins a path).
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    BucketSpec,
+    ddsketch_histogram,
+    segment_histogram,
+)
+from repro.kernels.ref import histogram_ref, segment_histogram_ref  # noqa: F401

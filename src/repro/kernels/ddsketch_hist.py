@@ -90,6 +90,8 @@ def histogram_pallas(
             f"num_buckets={spec.num_buckets} must be a multiple of "
             f"bucket_tile={bucket_tile}"
         )
+    if values.size == 0:  # zero-length value grid would skip the tile init
+        return jnp.zeros(spec.num_buckets, jnp.float32)
     x = values.reshape(-1).astype(jnp.float32)
     w = (
         jnp.ones_like(x)

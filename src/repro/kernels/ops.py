@@ -1,9 +1,20 @@
 """Public jit'd entry points for the DDSketch kernels.
 
-``ddsketch_histogram`` dispatches to the Pallas kernel on TPU and to
-interpret-mode Pallas (or the pure-XLA reference) elsewhere.  The semantics
-contract is ``repro.kernels.ref.histogram_ref``; tests sweep shapes, dtypes
-and mappings asserting exact agreement.
+``ddsketch_histogram`` (one sketch) and ``segment_histogram`` (a bank of K
+sketches) dispatch to the compiled Pallas kernels on TPU and to the pure-XLA
+reference elsewhere.  The semantics contracts are
+``repro.kernels.ref.histogram_ref`` / ``ref.segment_histogram_ref``; tests
+sweep shapes, dtypes, mappings and tile configurations asserting exact
+agreement.
+
+``force`` pins an implementation:
+
+* ``"ref"``        — pure-XLA scatter path (any backend),
+* ``"interpret"``  — interpret-mode Pallas (correctness tool, any backend),
+* ``"pallas"``     — the compiled Mosaic kernel; **TPU only** (the kernel
+  targets TPU tiling/VMEM — compiling it on CPU/GPU fails mid-lowering, so
+  requesting it off-TPU raises immediately instead),
+* ``None``         — auto: compiled kernel on TPU, reference elsewhere.
 """
 
 from __future__ import annotations
@@ -12,13 +23,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ddsketch_hist import histogram_pallas
-from repro.kernels.ref import BucketSpec, histogram_ref
+from repro.kernels.ddsketch_seg_hist import segment_histogram_pallas
+from repro.kernels.ref import BucketSpec, histogram_ref, segment_histogram_ref
 
-__all__ = ["ddsketch_histogram", "BucketSpec"]
+__all__ = ["ddsketch_histogram", "segment_histogram", "BucketSpec"]
+
+_FORCE_VALUES = (None, "pallas", "interpret", "ref")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _check_force(force: str | None) -> None:
+    if force not in _FORCE_VALUES:
+        raise ValueError(f"force must be one of {_FORCE_VALUES}, got {force!r}")
+    if force == "pallas" and not _on_tpu():
+        raise RuntimeError(
+            'force="pallas" requests the compiled TPU kernel but the default '
+            f"backend is {jax.default_backend()!r}; use force=\"interpret\" "
+            'for correctness checks or force="ref" for the XLA fallback'
+        )
 
 
 def ddsketch_histogram(
@@ -30,21 +55,47 @@ def ddsketch_histogram(
     bucket_tile: int = 512,
     force: str | None = None,  # "pallas" | "interpret" | "ref" | None(auto)
 ) -> jnp.ndarray:
-    """Bucket counts (m,) of the positive finite entries of ``values``.
-
-    ``force`` pins an implementation (tests use "interpret" and "ref");
-    the default picks the compiled kernel on TPU and the reference XLA
-    scatter path on CPU/GPU (interpret-mode Pallas is a correctness tool,
-    not a fast path).
-    """
+    """Bucket counts (m,) of the positive finite entries of ``values``."""
+    _check_force(force)
     if force == "ref" or (force is None and not _on_tpu()):
         return histogram_ref(values, weights, spec=spec)
-    interpret = force == "interpret" or (force is None and not _on_tpu())
     return histogram_pallas(
         values,
         weights,
         spec=spec,
         value_tile=value_tile,
         bucket_tile=bucket_tile,
-        interpret=interpret,
+        interpret=force == "interpret",
+    )
+
+
+def segment_histogram(
+    values: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    num_segments: int,
+    spec: BucketSpec,
+    value_tile: int = 2048,
+    row_tile: int = 8,
+    bucket_tile: int = 512,
+    force: str | None = None,  # "pallas" | "interpret" | "ref" | None(auto)
+) -> jnp.ndarray:
+    """Per-segment bucket counts ``(num_segments, m)`` — one dispatch for a
+    whole bank of K sketches regardless of K."""
+    _check_force(force)
+    if force == "ref" or (force is None and not _on_tpu()):
+        return segment_histogram_ref(
+            values, segment_ids, weights, num_segments=num_segments, spec=spec
+        )
+    return segment_histogram_pallas(
+        values,
+        segment_ids,
+        weights,
+        num_segments=num_segments,
+        spec=spec,
+        value_tile=value_tile,
+        row_tile=row_tile,
+        bucket_tile=bucket_tile,
+        interpret=force == "interpret",
     )

@@ -15,7 +15,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-__all__ = ["BucketSpec", "bucket_index", "histogram_ref", "approx_log2"]
+__all__ = [
+    "BucketSpec",
+    "bucket_index",
+    "histogram_ref",
+    "segment_histogram_ref",
+    "approx_log2",
+]
 
 
 @dataclass(frozen=True)
@@ -125,3 +131,40 @@ def histogram_ref(
     idx = bucket_index(jnp.where(mask, x, 1.0), spec)
     contrib = jnp.where(mask, w, 0.0)
     return jnp.zeros(spec.num_buckets, jnp.float32).at[idx].add(contrib)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "spec"))
+def segment_histogram_ref(
+    values: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    num_segments: int,
+    spec: BucketSpec,
+) -> jnp.ndarray:
+    """Oracle: per-segment bucket counts, shape ``(num_segments, m)``.
+
+    Row ``k`` is exactly ``histogram_ref(values[segment_ids == k])`` — one
+    fixed-geometry DDSketch bucket array per segment, flattened into a single
+    scatter-add so K sketches cost one XLA dispatch.  Entries whose segment
+    id falls outside ``[0, num_segments)`` contribute nothing (same contract
+    as the non-positive / non-finite masking).
+    """
+    x = values.reshape(-1).astype(jnp.float32)
+    s = segment_ids.reshape(-1).astype(jnp.int32)
+    w = (
+        jnp.ones_like(x)
+        if weights is None
+        else weights.reshape(-1).astype(jnp.float32)
+    )
+    mask = (
+        jnp.isfinite(x)
+        & (x > spec.min_indexable)
+        & (s >= 0)
+        & (s < num_segments)
+    )
+    idx = bucket_index(jnp.where(mask, x, 1.0), spec)
+    contrib = jnp.where(mask, w, 0.0)
+    flat = jnp.clip(s, 0, num_segments - 1) * spec.num_buckets + idx
+    out = jnp.zeros(num_segments * spec.num_buckets, jnp.float32).at[flat].add(contrib)
+    return out.reshape(num_segments, spec.num_buckets)

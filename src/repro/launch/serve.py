@@ -5,6 +5,12 @@ the service is the model itself.  Each decode step's wall time goes into a
 DDSketch; per-request end-to-end latencies go into another; the server
 reports p50/p95/p99 — the numbers the paper argues means cannot give you.
 
+Requests carry an ``endpoint`` tag (the paper's per-metric-key setting) and
+per-endpoint request latencies land in a device ``SketchBank`` via
+``telemetry.KeyedWindow`` — one segmented insert per flush regardless of how
+many endpoints are live.  ``Server.endpoint_quantiles`` answers rollup
+queries per endpoint from the host-tier ``KeyedAggregator``.
+
 Continuous batching (slot-based): a fixed decode batch of B slots; finished
 sequences (EOS or max_len) release their slot, queued requests prefill into
 it.  For the CPU smoke runs, prefill is per-request and sequential — slot
@@ -27,7 +33,9 @@ import numpy as np
 
 from repro import configs
 from repro.core.ddsketch import DDSketch
+from repro.core.jax_sketch import BucketSpec
 from repro.launch.mesh import make_local_mesh
+from repro.telemetry.keyed import KeyedAggregator, KeyedWindow
 from repro.launch.steps import StepConfig, build_serve_step
 from repro.models.common import init_params
 from repro.models.model import init_cache, prefill
@@ -40,13 +48,23 @@ class Request:
     rid: int
     prompt: np.ndarray  # (P,) int32
     max_new: int
+    endpoint: str = "default"
     t_submit: float = field(default_factory=time.time)
     t_done: float | None = None
     output: list = field(default_factory=list)
 
 
 class Server:
-    def __init__(self, cfg, *, batch_slots: int, max_len: int, model_axis: int = 1):
+    def __init__(
+        self,
+        cfg,
+        *,
+        batch_slots: int,
+        max_len: int,
+        model_axis: int = 1,
+        max_endpoints: int = 64,
+        flush_every: int = 64,
+    ):
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
@@ -60,6 +78,11 @@ class Server:
         # telemetry: the paper's Figure 2 setting, measured on ourselves
         self.step_latency = DDSketch(0.01)
         self.request_latency = DDSketch(0.01)
+        # per-endpoint latencies: one SketchBank row per endpoint, windowed
+        self.endpoint_window = KeyedWindow(BucketSpec(), capacity=max_endpoints)
+        self.endpoint_agg = KeyedAggregator(self.endpoint_window.spec)
+        self.flush_every = flush_every
+        self._pending: list[tuple[str, float]] = []
         ctx_len = cfg.encoder_seq or cfg.n_cross_tokens
         self.cache = init_cache(cfg, batch_slots, max_len, ctx_len)
         self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
@@ -125,9 +148,36 @@ class Server:
                 if self.remaining[slot] <= 0:
                     req.t_done = time.time()
                     self.request_latency.add(req.t_done - req.t_submit)
+                    self._pending.append((req.endpoint, req.t_done - req.t_submit))
+                    if len(self._pending) >= self.flush_every:
+                        self._flush_endpoints()
                     done.append(req)
                     self.active[slot] = None
+        self._flush_endpoints()
         return done
+
+    # ------------------------------------------------------------------ #
+    def _flush_endpoints(self) -> None:
+        """Batch pending per-endpoint latencies into the bank (one segmented
+        insert), then roll the window into the host aggregator."""
+        if not self._pending:
+            return
+        keys = [k for k, _ in self._pending]
+        vals = np.asarray([v for _, v in self._pending], np.float32)
+        self._pending.clear()
+        self.endpoint_window.record(keys, vals)
+        self.endpoint_agg.flush(self.endpoint_window)
+
+    def endpoint_quantiles(self, endpoint: str, qs=(0.5, 0.95, 0.99)) -> list[float]:
+        """Rollup request-latency quantiles for one endpoint (host tier)."""
+        return self.endpoint_agg.quantiles(endpoint, qs)
+
+    def endpoint_report(self, qs=(0.5, 0.95, 0.99)) -> dict:
+        """Per-endpoint latency quantiles in ms, for every endpoint seen."""
+        return {
+            ep: [v * 1e3 for v in self.endpoint_agg.quantiles(ep, qs)]
+            for ep in sorted(self.endpoint_agg.keys())
+        }
 
     def latency_report(self) -> dict:
         qs = [0.5, 0.95, 0.99]
@@ -147,6 +197,7 @@ def main() -> None:
     p.add_argument("--batch-slots", type=int, default=4)
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--prompt-len", type=int, default=8)
+    p.add_argument("--endpoints", type=int, default=3)
     args = p.parse_args()
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     rng = np.random.default_rng(0)
@@ -159,6 +210,7 @@ def main() -> None:
             rid=i,
             prompt=rng.integers(0, cfg.vocab_size, args.prompt_len),
             max_new=int(rng.integers(2, args.max_new + 1)),
+            endpoint=f"/v1/ep{int(rng.integers(args.endpoints))}",
         )
         for i in range(args.requests)
     ]
@@ -170,6 +222,9 @@ def main() -> None:
         f"request ms p50/p95/p99 = "
         f"{rep['request_ms'][0]:.1f}/{rep['request_ms'][1]:.1f}/{rep['request_ms'][2]:.1f}"
     )
+    for ep, q in server.endpoint_report().items():
+        print(f"[serve]   {ep}: request ms p50/p95/p99 = "
+              f"{q[0]:.1f}/{q[1]:.1f}/{q[2]:.1f}")
 
 
 if __name__ == "__main__":

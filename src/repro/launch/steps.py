@@ -218,7 +218,9 @@ def build_train_step(
                 return aux_out, g_hat, err_new
 
             batch_axis = P(compress_axis)
-            fn = jax.shard_map(
+            from repro.compat import shard_map
+
+            fn = shard_map(
                 inner,
                 mesh=mesh,
                 in_specs=(P(), jax.tree.map(lambda _: batch_axis, batch), P(compress_axis)),

@@ -512,7 +512,7 @@ def _sp_decode_attn(x, attn, layer, pos, cfg: ModelConfig, shard: ShardCtx):
     """
     from jax.sharding import PartitionSpec as P
 
-    shard_map = jax.shard_map
+    from repro.compat import shard_map
 
     from repro.sharding.rules import dp_axes as _dp_axes
 

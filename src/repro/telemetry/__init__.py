@@ -6,4 +6,9 @@ from repro.telemetry.device import (  # noqa: F401
     telemetry_shardings,
 )
 from repro.telemetry.host import HostAggregator, WindowStats  # noqa: F401
+from repro.telemetry.keyed import (  # noqa: F401
+    OVERFLOW_KEY,
+    KeyedAggregator,
+    KeyedWindow,
+)
 from repro.telemetry.watchdog import LossSpikeGuard, StragglerWatchdog  # noqa: F401

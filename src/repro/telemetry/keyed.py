@@ -1,0 +1,136 @@
+"""Keyed telemetry: per-metric-key windows backed by one device SketchBank.
+
+This is the paper's multi-tenant setting (one sketch per endpoint / customer
+/ host) joined with the agent -> aggregator pipeline of ``telemetry.host``:
+
+* on device, a window is a ``SketchBank`` — K rows, one per active key,
+  filled by a *single* segmented-histogram dispatch per ``record`` call no
+  matter how many keys are live;
+* on the host, ``KeyedAggregator`` keeps one exact, unbounded ``DDSketch``
+  per key and merges flushed windows in (Algorithm 4), so any-horizon
+  rollups per key stay exact-after-merge.
+
+Key -> row assignment is a host-side dict (tracing never sees strings).
+When more distinct keys arrive than the bank has rows, the surplus collapses
+into the reserved ``OVERFLOW_KEY`` row — mirroring how the static bucket
+range collapses out-of-range values rather than failing, and keeping the
+device state shape static for jit.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import sketch_bank as sbank
+from repro.core.ddsketch import DDSketch
+from repro.core.jax_sketch import BucketSpec
+
+__all__ = ["OVERFLOW_KEY", "KeyedWindow", "KeyedAggregator"]
+
+OVERFLOW_KEY = "__other__"
+
+
+class KeyedWindow:
+    """One flush interval of per-key device sketches (a SketchBank + key map).
+
+    ``capacity`` counts usable key rows; row 0 is reserved for
+    ``OVERFLOW_KEY`` so an overfull window degrades gracefully instead of
+    raising mid-stream.
+    """
+
+    def __init__(self, spec: BucketSpec, capacity: int, *, use_kernel: bool = False):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.spec = spec
+        self.capacity = capacity
+        self.use_kernel = use_kernel
+        self.key_to_row: dict[str, int] = {OVERFLOW_KEY: 0}
+        self.bank = sbank.empty(spec, capacity + 1)
+
+    # ------------------------------------------------------------------ #
+    def row_id(self, key: str) -> int:
+        """Row for ``key``, allocating on first sight (overflow row if full)."""
+        rid = self.key_to_row.get(key)
+        if rid is None:
+            if len(self.key_to_row) > self.capacity:
+                return 0  # bank full: collapse into the OVERFLOW_KEY row
+            rid = len(self.key_to_row)
+            self.key_to_row[key] = rid
+        return rid
+
+    def record(self, keys, values, weights=None) -> None:
+        """Insert ``(key, value)`` pairs; one bank dispatch for the batch.
+
+        ``keys`` is either a sequence of strings (one per value) or a single
+        string applied to every value.
+        """
+        values = np.asarray(values, np.float32).reshape(-1)
+        if isinstance(keys, str):
+            ids = np.full(values.shape, self.row_id(keys), np.int32)
+        else:
+            ids = np.fromiter(
+                (self.row_id(k) for k in keys), np.int32, count=len(values)
+            )
+        w = None if weights is None else jnp.asarray(weights)
+        self.bank = sbank.add(
+            self.bank,
+            jnp.asarray(values),
+            jnp.asarray(ids),
+            w,
+            spec=self.spec,
+            use_kernel=self.use_kernel,
+        )
+
+    # ------------------------------------------------------------------ #
+    def quantiles(self, key: str, qs) -> list[float]:
+        """Window-local per-key quantiles straight off the device bank."""
+        rid = self.key_to_row.get(key)
+        if rid is None:
+            raise KeyError(f"no values recorded for key {key!r}")
+        sub = sbank.row(self.bank, rid)
+        from repro.core import jax_sketch
+
+        return [float(jax_sketch.quantile(sub, q, spec=self.spec)) for q in qs]
+
+    def keys(self) -> list[str]:
+        return [k for k in self.key_to_row if k != OVERFLOW_KEY]
+
+    def reset(self) -> None:
+        """Start the next window (cheap: O(K*m) zeros; key map survives so
+        stable keys keep stable rows across windows)."""
+        self.bank = sbank.empty(self.spec, self.capacity + 1)
+
+
+class KeyedAggregator:
+    """Host-tier rollups: one exact DDSketch per key, merged across windows."""
+
+    def __init__(self, spec: BucketSpec):
+        self.spec = spec
+        self.totals: dict[str, DDSketch] = {}
+        self.windows_flushed = 0
+
+    def flush(self, window: KeyedWindow) -> None:
+        """Merge a device window into the per-key totals and reset it.
+
+        Lossless per row (same bucket geometry); Algorithm 4 makes the
+        per-key rollup exactly equal to a sketch that saw all the data.
+        """
+        counts = np.asarray(window.bank.counts)
+        for key, rid in window.key_to_row.items():
+            if counts[rid] == 0:
+                continue
+            host = sbank.to_host(window.bank, window.spec, rid)
+            if key in self.totals:
+                self.totals[key].merge(host)
+            else:
+                self.totals[key] = host
+        self.windows_flushed += 1
+        window.reset()
+
+    def quantiles(self, key: str, qs) -> list[float]:
+        return self.totals[key].quantiles(qs)
+
+    def keys(self) -> list[str]:
+        return [k for k in self.totals if k != OVERFLOW_KEY]

@@ -1,0 +1,55 @@
+"""Optional-hypothesis shim: keep property-test modules collectable without it.
+
+CI installs hypothesis from the manifest and runs the full property sweeps.
+Local environments without it must still *collect and run* every non-property
+test in those modules (a bare ``import hypothesis`` at module scope used to
+abort collection of the whole file).  Importing from this module instead
+yields the real API when available and inert stand-ins otherwise:
+
+* ``given(...)`` decorates the test with ``pytest.mark.skip`` (skips are
+  evaluated before fixture resolution, so the strategy-named parameters
+  never need filling);
+* ``settings(...)`` / ``assume`` become no-ops;
+* ``st`` is an object whose attributes/calls/operators all return opaque
+  placeholders, so module-level strategy expressions still evaluate.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import assume, given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Absorbs any strategy-building expression without evaluating it."""
+
+        def __call__(self, *args, **kwargs):
+            return _Strategy()
+
+        def __getattr__(self, name):
+            return _Strategy()
+
+        def __or__(self, other):
+            return _Strategy()
+
+        def map(self, fn):
+            return _Strategy()
+
+        def filter(self, fn):
+            return _Strategy()
+
+    st = _Strategy()
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    def assume(_condition):
+        return True

@@ -13,7 +13,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import assume, given, settings, strategies as st
+from _hypothesis_compat import assume, given, settings, st  # noqa: F401
 
 from repro.core.ddsketch import DDSketch
 from repro.core.oracle import exact_quantile, exact_quantiles, relative_error

@@ -8,7 +8,7 @@ plain '+' that makes it all-reducible (tested for real under shard_map on
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp
@@ -89,6 +89,66 @@ def test_overflow_counted():
     assert float(sk.overflow) == 1
 
 
+# --------------------------------------------------------------------- #
+# host <-> device round-trip semantics for the two lossy corners:
+# the overflow counter and float32 count rounding (intended behaviour,
+# pinned here so changes are deliberate)
+# --------------------------------------------------------------------- #
+def test_overflow_not_roundtripped_but_values_are():
+    """``overflow`` is device-only diagnostics: the overflowing VALUE is
+    still counted (clamped into the top bucket, so it flushes to the host
+    sketch and survives a round-trip), but the host tier has no overflow
+    notion, so ``from_host`` restarts the counter at zero."""
+    vals = jnp.asarray([2.0, 1e30], jnp.float32)
+    sk = js.add(js.empty(SPEC), vals, spec=SPEC)
+    assert float(sk.overflow) == 1
+    assert float(sk.count) == 2  # the clamped value is still in pos
+
+    host = js.to_host(sk, SPEC)
+    assert host.count == 2  # flush keeps the clamped count...
+    back = js.from_host(host, SPEC)
+    assert float(back.count) == 2
+    assert float(back.overflow) == 0  # ...but the overflow tally resets
+    # the clamped mass sits in the top bucket after the round-trip
+    assert float(back.pos[-1]) == float(sk.pos[-1]) == 1
+
+
+def test_to_host_rounds_float32_counts_to_int():
+    """Fractional float32 window counts round to the nearest int on flush:
+    the host store is integer-valued (paper counters).  Weights summing to
+    an integer are exact; a lone 0.5-weight rounds away (0.5 -> 0 via
+    banker's rounding on `round`)."""
+    w = jnp.asarray([0.25, 0.25, 0.5, 1.0], jnp.float32)
+    v = jnp.asarray([2.0, 2.0, 2.0, 2.0], jnp.float32)
+    sk = js.add(js.empty(SPEC), v, w, spec=SPEC)
+    assert float(sk.count) == 2.0  # device keeps exact float mass
+    host = js.to_host(sk, SPEC)
+    assert host.count == 2  # integer on host (same bucket: 2.0 total)
+
+    lone = js.add(js.empty(SPEC), jnp.asarray([3.0]), jnp.asarray([0.5]), spec=SPEC)
+    host2 = js.to_host(lone, SPEC)
+    assert host2.count == 0  # sub-half mass vanishes on flush — by design
+    assert float(lone.count) == 0.5  # ...while the device window keeps it
+
+
+def test_bank_row_overflow_roundtrip_matches_single():
+    """Bank rows obey the same to_host/from_host semantics as singles."""
+    from repro.core import sketch_bank as sb
+
+    vals = jnp.asarray([2.0, 1e30, 5.0, -3.0], jnp.float32)
+    ids = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    bank = sb.add(sb.empty(SPEC, 2), vals, ids, spec=SPEC)
+    assert float(bank.overflow[0]) == 1 and float(bank.overflow[1]) == 0
+
+    hosts = [sb.to_host(bank, SPEC, k) for k in range(2)]
+    assert hosts[0].count == 2 and hosts[1].count == 2
+    back = sb.from_host(hosts, SPEC)
+    np.testing.assert_array_equal(np.asarray(back.pos), np.asarray(bank.pos))
+    np.testing.assert_array_equal(np.asarray(back.neg), np.asarray(bank.neg))
+    assert float(back.overflow.sum()) == 0  # device-only counter resets
+    assert float(back.vmin[1]) == -3.0 and float(back.vmax[1]) == 5.0
+
+
 def test_to_host_from_host_roundtrip(rng):
     data = np.concatenate(
         [rng.pareto(1.0, 500) + 1, -(rng.pareto(1.0, 300) + 1), np.zeros(11)]
@@ -129,6 +189,7 @@ def test_psum_merge_across_devices():
     script = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.core import jax_sketch as js
 from repro.core.ddsketch import DDSketch
 from repro.kernels.ref import BucketSpec
@@ -142,7 +203,7 @@ def per_device(vals):  # vals: (500,) local shard
     sk = js.add(js.empty(SPEC), vals, spec=SPEC)
     return js.allreduce(sk, "d")
 
-fn = jax.shard_map(per_device, mesh=mesh, in_specs=P("d"), out_specs=P(), check_vma=False)
+fn = shard_map(per_device, mesh=mesh, in_specs=P("d"), out_specs=P(), check_vma=False)
 merged = jax.jit(fn)(jnp.asarray(data))
 
 host = DDSketch(SPEC.relative_accuracy, max_bins=None)

@@ -9,7 +9,7 @@ full float range for all three mapping kinds.
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.mapping import (
     CubicInterpolatedMapping,

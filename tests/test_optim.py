@@ -113,6 +113,7 @@ def test_compressed_psum_error_feedback():
     script = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.optim.compression import compressed_psum, compress_state_init
 mesh = jax.make_mesh((8,), ("pod",))
 
@@ -121,7 +122,7 @@ def step(g_all, err):
         e0 = jax.tree.map(lambda x: x[0], e)
         out, e2 = compressed_psum(g, e0, "pod")
         return out, jax.tree.map(lambda x: x[None], e2)
-    return jax.shard_map(inner, mesh=mesh,
+    return shard_map(inner, mesh=mesh,
         in_specs=(P("pod"), P("pod")), out_specs=(P(), P("pod")),
         axis_names={"pod"}, check_vma=False)(g_all, err)
 

@@ -1,0 +1,155 @@
+"""Segmented Pallas kernel vs pure-jnp oracle: exact agreement across
+mappings, tile configurations, segment counts, weights, and hostile inputs
+(interpret mode on CPU), plus the ops-dispatch contract."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ddsketch_seg_hist import segment_histogram_pallas
+from repro.kernels.ops import ddsketch_histogram, segment_histogram
+from repro.kernels.ref import BucketSpec, histogram_ref, segment_histogram_ref
+
+MAPPINGS = ["log", "linear", "cubic"]
+
+
+def _data(n, rng):
+    x = (rng.pareto(1.0, n) + 1.0).astype(np.float32)
+    specials = np.array([np.nan, np.inf, -np.inf, -1.0, 0.0, 1e-38, 1e38])
+    idx = rng.choice(n, size=min(7, n), replace=False)
+    x[idx] = specials[: len(idx)].astype(np.float32)
+    return x
+
+
+@pytest.mark.parametrize("num_segments", [1, 3, 37, 64])
+@pytest.mark.parametrize("mapping", MAPPINGS)
+def test_seg_kernel_matches_ref(num_segments, mapping, rng):
+    spec = BucketSpec(mapping=mapping)
+    n = 4000
+    x = jnp.asarray(_data(n, rng))
+    # include out-of-range ids on both sides: they must contribute nothing
+    s = jnp.asarray(rng.integers(-2, num_segments + 3, n).astype(np.int32))
+    ref = segment_histogram_ref(x, s, num_segments=num_segments, spec=spec)
+    ker = segment_histogram_pallas(
+        x, s, num_segments=num_segments, spec=spec, interpret=True
+    )
+    assert ker.shape == (num_segments, spec.num_buckets)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+    assert float(ref.sum()) > 0
+
+
+def test_seg_rows_equal_per_segment_histograms(rng):
+    """Row k of the segmented histogram == plain histogram of segment k."""
+    spec = BucketSpec()
+    n, k = 3000, 11
+    x = _data(n, rng)
+    s = rng.integers(0, k, n).astype(np.int32)
+    seg = np.asarray(
+        segment_histogram_ref(
+            jnp.asarray(x), jnp.asarray(s), num_segments=k, spec=spec
+        )
+    )
+    for i in range(k):
+        only_i = np.where(s == i, x, -1.0).astype(np.float32)
+        np.testing.assert_array_equal(
+            seg[i], np.asarray(histogram_ref(jnp.asarray(only_i), spec=spec))
+        )
+
+
+@pytest.mark.parametrize(
+    "value_tile,row_tile,bucket_tile",
+    [(256, 8, 128), (512, 16, 2048), (2048, 4, 256), (1024, 128, 512)],
+)
+def test_seg_kernel_tilings(value_tile, row_tile, bucket_tile, rng):
+    spec = BucketSpec()
+    n, k = 3000, 19  # k deliberately not a row_tile multiple (pad rows)
+    x = jnp.asarray(_data(n, rng))
+    s = jnp.asarray(rng.integers(0, k, n).astype(np.int32))
+    w = jnp.asarray(rng.integers(0, 5, n).astype(np.float32))
+    ref = segment_histogram_ref(x, s, w, num_segments=k, spec=spec)
+    ker = segment_histogram_pallas(
+        x,
+        s,
+        w,
+        num_segments=k,
+        spec=spec,
+        value_tile=value_tile,
+        row_tile=row_tile,
+        bucket_tile=bucket_tile,
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+
+
+def test_seg_kernel_rejects_bad_shapes():
+    spec = BucketSpec(num_buckets=2048)
+    with pytest.raises(ValueError, match="bucket_tile"):
+        segment_histogram_pallas(
+            jnp.ones(8), jnp.zeros(8, jnp.int32), num_segments=4, spec=spec,
+            bucket_tile=1000, interpret=True,
+        )
+    with pytest.raises(ValueError, match="same size"):
+        segment_histogram_pallas(
+            jnp.ones(8), jnp.zeros(9, jnp.int32), num_segments=4, spec=spec,
+            interpret=True,
+        )
+
+
+def test_seg_kernel_empty_and_all_masked():
+    spec = BucketSpec()
+    x = jnp.asarray([-1.0, 0.0, jnp.nan, 5.0], jnp.float32)
+    s = jnp.asarray([0, 1, 2, -1], jnp.int32)  # the only positive has id -1
+    ker = segment_histogram_pallas(x, s, num_segments=3, spec=spec, interpret=True)
+    assert float(ker.sum()) == 0.0
+
+
+def test_kernels_zero_length_input_returns_zeros():
+    """Regression: an empty batch used to build a zero-length value grid
+    (nv=0), crashing pallas_call and skipping the output-tile init."""
+    from repro.kernels.ddsketch_hist import histogram_pallas
+
+    spec = BucketSpec()
+    empty_vals = jnp.zeros((0,), jnp.float32)
+    seg = segment_histogram_pallas(
+        empty_vals, jnp.zeros((0,), jnp.int32), num_segments=5, spec=spec,
+        interpret=True,
+    )
+    assert seg.shape == (5, spec.num_buckets) and float(seg.sum()) == 0.0
+    single = histogram_pallas(empty_vals, spec=spec, interpret=True)
+    assert single.shape == (spec.num_buckets,) and float(single.sum()) == 0.0
+
+
+def test_ops_seg_dispatch_ref_on_cpu(rng):
+    spec = BucketSpec()
+    x = jnp.asarray(_data(512, rng))
+    s = jnp.asarray(rng.integers(0, 5, 512).astype(np.int32))
+    out = segment_histogram(x, s, num_segments=5, spec=spec)  # auto -> ref
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(segment_histogram_ref(x, s, num_segments=5, spec=spec)),
+    )
+    out2 = segment_histogram(x, s, num_segments=5, spec=spec, force="interpret")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_force_pallas_raises_off_tpu(rng):
+    """Regression: force="pallas" used to compile the TPU kernel on CPU
+    (interpret=False) and die mid-lowering; now it raises up front."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("on TPU force='pallas' is the real compiled path")
+    spec = BucketSpec()
+    x = jnp.asarray(rng.pareto(1.0, 64).astype(np.float32) + 1.0)
+    with pytest.raises(RuntimeError, match="pallas"):
+        ddsketch_histogram(x, spec=spec, force="pallas")
+    with pytest.raises(RuntimeError, match="pallas"):
+        segment_histogram(
+            x, jnp.zeros(64, jnp.int32), num_segments=2, spec=spec, force="pallas"
+        )
+
+
+def test_force_rejects_unknown_value(rng):
+    x = jnp.ones(8, jnp.float32)
+    with pytest.raises(ValueError, match="force"):
+        ddsketch_histogram(x, spec=BucketSpec(), force="jit")

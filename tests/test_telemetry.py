@@ -1,4 +1,5 @@
-"""Telemetry: device recorder, host aggregator rollups, watchdog guards."""
+"""Telemetry: device recorder, host aggregator rollups, keyed per-metric
+windows, watchdog guards."""
 
 import math
 
@@ -9,7 +10,10 @@ import jax.numpy as jnp
 
 from repro.core.ddsketch import DDSketch
 from repro.telemetry import (
+    OVERFLOW_KEY,
     HostAggregator,
+    KeyedAggregator,
+    KeyedWindow,
     LossSpikeGuard,
     StragglerWatchdog,
     TelemetryConfig,
@@ -78,6 +82,58 @@ def test_aggregator_state_roundtrip(rng):
     assert agg2.totals["token_loss"].quantile(0.5) == agg.totals[
         "token_loss"
     ].quantile(0.5)
+
+
+# --------------------------------------------------------------------- #
+# keyed per-metric windows (SketchBank-backed)
+# --------------------------------------------------------------------- #
+def test_keyed_window_flush_matches_direct_per_key(rng):
+    tcfg = TelemetryConfig()
+    window = KeyedWindow(tcfg.spec, capacity=8)
+    agg = KeyedAggregator(tcfg.spec)
+    keys = ["/chat", "/embed", "/rank"]
+    direct = {k: DDSketch(tcfg.spec.relative_accuracy, max_bins=None) for k in keys}
+    for _ in range(3):  # three flush intervals
+        ks = [keys[i] for i in rng.integers(0, 3, 500)]
+        vals = (rng.pareto(1.0, 500) + 1.0).astype(np.float32)
+        for k, v in zip(ks, vals):
+            direct[k].add(float(v))
+        window.record(ks, vals)
+        agg.flush(window)
+    assert sorted(agg.keys()) == sorted(keys)
+    for k in keys:
+        for q in (0.5, 0.95, 0.99):
+            assert agg.quantiles(k, [q])[0] == pytest.approx(
+                direct[k].quantile(q), rel=1e-6
+            )
+        assert agg.totals[k].count == direct[k].count
+
+
+def test_keyed_window_single_key_and_local_query(rng):
+    window = KeyedWindow(TelemetryConfig().spec, capacity=4)
+    vals = (rng.pareto(1.0, 300) + 1.0).astype(np.float32)
+    window.record("gpu0", vals)  # single string key broadcast to the batch
+    p50 = window.quantiles("gpu0", [0.5])[0]
+    assert p50 == pytest.approx(float(np.quantile(vals, 0.5, method="lower")), rel=0.011)
+    with pytest.raises(KeyError):
+        window.quantiles("never-seen", [0.5])
+
+
+def test_keyed_window_overflow_collapses_not_raises(rng):
+    """More distinct keys than capacity: the surplus lands in OVERFLOW_KEY
+    (static bank shape survives), nothing is dropped or raised."""
+    window = KeyedWindow(TelemetryConfig().spec, capacity=2)
+    agg = KeyedAggregator(window.spec)
+    for i in range(5):
+        window.record(f"key{i}", np.full(10, float(i + 1), np.float32))
+    assert sorted(window.keys()) == ["key0", "key1"]
+    agg.flush(window)
+    assert agg.totals[OVERFLOW_KEY].count == 30  # key2..key4 collapsed
+    assert agg.totals["key0"].count == 10
+    # stable keys keep their rows across windows after flush/reset
+    window.record("key1", np.ones(7, np.float32))
+    agg.flush(window)
+    assert agg.totals["key1"].count == 17
 
 
 def test_straggler_watchdog(rng):
