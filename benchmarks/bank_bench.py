@@ -86,6 +86,69 @@ def bench_bank_insert(
     return rows
 
 
+def bench_fold_pairs(ks=(1, 64, 1024), iters: int = 10) -> list[dict]:
+    """Uniform-collapse fold over a whole bank (one XLA/Pallas dispatch).
+
+    This is the per-collapse overhead a hot row pays when its stream
+    outgrows the bucket range: a (K, m) pair-fold, independent of how much
+    mass the bank holds.
+    """
+    from repro.kernels.ref import fold_pairs_ref
+
+    spec = BucketSpec()
+    rng = np.random.default_rng(0)
+    rows = []
+    for k in ks:
+        counts = jnp.asarray(
+            rng.integers(0, 9, (k, spec.num_buckets)).astype(np.float32)
+        )
+        fn = jax.jit(lambda c: fold_pairs_ref(c, spec=spec))
+        secs = _time(fn, counts, iters=iters)
+        rows.append(
+            {
+                "bench": "fold_pairs",
+                "K": k,
+                "us_per_fold": round(secs * 1e6, 2),
+                "ns_per_row": round(secs / k * 1e9, 2),
+                "impl": "xla_ref",
+            }
+        )
+    return rows
+
+
+def bench_collapse_insert(n: int = 200_000, iters: int = 5) -> list[dict]:
+    """Collapse-heavy insert: a 24-decade stream that cannot fit at level 0.
+
+    ``auto_collapse=True`` pays the needed-level scan plus the in-loop
+    folds; the plain path clamps (silently losing the tails).  The ratio is
+    the price of keeping the alpha guarantee on long-tailed streams.
+    """
+    spec = BucketSpec()
+    rng = np.random.default_rng(0)
+    wide = jnp.asarray(
+        (10.0 ** rng.uniform(-15.0, 9.0, n)).astype(np.float32)
+    )
+    rows = []
+    for auto in (False, True):
+        fn = jax.jit(
+            lambda v, auto=auto: js.add(
+                js.empty(spec), v, spec=spec, auto_collapse=auto
+            )
+        )
+        secs = _time(fn, wide, iters=iters)
+        rows.append(
+            {
+                "bench": "collapse_insert",
+                "n": n,
+                "auto_collapse": auto,
+                "ms_per_insert": round(secs * 1e3, 3),
+                "ns_per_value": round(secs / n * 1e9, 3),
+                "impl": "xla_ref",
+            }
+        )
+    return rows
+
+
 def bench_bank_quantiles(k: int = 4096, n: int = 500_000, iters: int = 10) -> list[dict]:
     """Vectorized Algorithm 2 over all K rows at once (single query pass)."""
     spec = BucketSpec()

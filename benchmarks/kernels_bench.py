@@ -54,7 +54,7 @@ def bench_device_merge(iters=50) -> list[dict]:
     rng = np.random.default_rng(0)
     a = js.add(js.empty(spec), jnp.asarray(rng.pareto(1.0, 10000).astype(np.float32) + 1), spec=spec)
     b = js.add(js.empty(spec), jnp.asarray(rng.pareto(1.0, 10000).astype(np.float32) + 1), spec=spec)
-    fn = jax.jit(js.merge)
+    fn = jax.jit(lambda u, v: js.merge(u, v, spec=spec))
     secs = _time(fn, a, b, iters=iters)
     return [
         {

@@ -88,6 +88,12 @@ def main() -> None:
             "bank_quantiles": lambda: bank_bench.bench_bank_quantiles(
                 k=256, n=50_000, iters=3
             ),
+            "fold_pairs": lambda: bank_bench.bench_fold_pairs(
+                ks=(1, 64, 256), iters=3
+            ),
+            "collapse_insert": lambda: bank_bench.bench_collapse_insert(
+                n=50_000, iters=3
+            ),
             "roofline": roofline_rows,
         }
     elif args.quick:
@@ -107,6 +113,10 @@ def main() -> None:
             "bank_quantiles": lambda: bank_bench.bench_bank_quantiles(
                 k=1024, n=200_000, iters=5
             ),
+            "fold_pairs": lambda: bank_bench.bench_fold_pairs(iters=5),
+            "collapse_insert": lambda: bank_bench.bench_collapse_insert(
+                n=100_000, iters=5
+            ),
             "roofline": roofline_rows,
         }
     else:
@@ -122,6 +132,8 @@ def main() -> None:
             "kernel_quantile": kernels_bench.bench_quantile_query,
             "bank_insert": bank_bench.bench_bank_insert,
             "bank_quantiles": bank_bench.bench_bank_quantiles,
+            "fold_pairs": bank_bench.bench_fold_pairs,
+            "collapse_insert": bank_bench.bench_collapse_insert,
             "roofline": roofline_rows,
         }
 

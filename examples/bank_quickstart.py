@@ -46,7 +46,7 @@ def bank_tier():
                 jnp.asarray(tenant[:half]), spec=spec)
     b2 = sb.add(sb.empty(spec, K), jnp.asarray(latencies[half:]),
                 jnp.asarray(tenant[half:]), spec=spec)
-    merged = sb.merge(b1, b2)
+    merged = sb.merge(b1, b2, spec=spec)
     assert np.array_equal(np.asarray(merged.pos), np.asarray(bank.pos))
     print(f"  merged bank == single bank for all {K} tenants "
           f"(total n={float(merged.counts.sum()):.0f})")

@@ -57,7 +57,7 @@ def device_tier():
 
     # merging device sketches is elementwise '+' -> psum-able across a mesh
     sk2 = sketch_batch(values * 2.0)
-    merged = js.merge(sk, sk2)
+    merged = js.merge(sk, sk2, spec=spec)
     print(f"  merged count: {float(merged.count):.0f}")
 
     # lossless flush into the host tier for rollups / checkpointing

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import math
 
-import numpy as np
 
 __all__ = ["GKArray"]
 

@@ -22,8 +22,6 @@ contains the vectorized jnp twins which are cross-checked in tests.
 from __future__ import annotations
 
 import math
-import struct
-from dataclasses import dataclass
 
 __all__ = [
     "KeyMapping",
@@ -98,6 +96,37 @@ class KeyMapping:
 
     def max_key(self) -> int:
         return self.key(self.max_indexable)
+
+    # -- uniform-collapse (level-L) bucket values --------------------------
+    def upper_bound_safe(self, key: int) -> float:
+        """``upper_bound`` with float overflow mapped to +inf (level keys
+        scale as 2**L * key, which escapes float64 at high levels)."""
+        try:
+            return self.upper_bound(key)
+        except OverflowError:
+            return math.inf
+
+    def value_at_level(self, key: int, level: int) -> float:
+        """Relative-error midpoint estimate of level-``level`` bucket ``key``.
+
+        The level-L bucket k is the union of base buckets with keys in
+        (2**L*(k-1), 2**L*k]; its bounds are base upper bounds and the
+        estimate their harmonic midpoint 2/(1/lo + 1/hi) (Lemma 2
+        generalized to arbitrary bucket bounds; worst-case relative error
+        alpha_L = (g-1)/(g+1) with g = gamma**(2**L)).  This is the single
+        source of truth for both tiers — the host quantile path and the
+        device bucket-value tables must stay bit-identical for lossless
+        host<->device round-trips.
+        """
+        if level == 0:
+            return self.value(key)
+        s = 1 << level
+        lo = self.upper_bound_safe(s * (key - 1))
+        hi = self.upper_bound_safe(s * key)
+        inv = (1.0 / lo if lo > 0.0 else math.inf) + (
+            1.0 / hi if hi > 0.0 else math.inf
+        )
+        return 2.0 / inv if inv > 0.0 else math.inf
 
     def __eq__(self, other) -> bool:
         return (

@@ -8,16 +8,22 @@ data-independent, a bank of K fixed-geometry sketches is just a dense
 K launches of ``jax_sketch.add``.  Everything else the single sketch enjoys
 lifts row-wise:
 
-* ``merge`` / ``allreduce`` stay per-bucket '+' (Algorithm 4), now over
-  ``(K, m)`` — the bank is psum-able exactly like one sketch;
+* ``merge`` / ``allreduce`` stay per-bucket '+' (Algorithm 4) after the
+  rows align their collapse levels, now over ``(K, m)`` — the bank is
+  psum-able exactly like one sketch;
 * ``quantiles`` runs Algorithm 2 vectorized over all K rows at once (one
   cumsum + searchsorted over a (K, 2m+1) value line, no Python loop);
 * ``row`` / ``to_host`` / ``from_host`` move single rows across tiers
-  losslessly (same bucket geometry as ``DeviceSketch``).
+  losslessly (same bucket geometry as ``DeviceSketch``);
+* **resolution is per-row**: each row carries its own uniform-collapse
+  ``level`` (UDDSketch), so one hot tenant with a 20-decade stream can
+  degrade to alpha' while its neighbours keep full resolution.  ``collapse``
+  folds selected rows, ``auto_collapse`` reacts to clamped mass, and
+  ``add(..., auto_collapse=True)`` pre-collapses rows so nothing clamps.
 
-Per-row auxiliary stats (zero / overflow / sum / min / max) are maintained
-with ``jax.ops.segment_*`` reductions, mirroring ``jax_sketch.add``'s
-scalar counters.
+Per-row auxiliary stats (zero / overflow / underflow / sum / min / max) are
+maintained with ``jax.ops.segment_*`` reductions, mirroring
+``jax_sketch.add``'s scalar counters.
 """
 
 from __future__ import annotations
@@ -27,12 +33,16 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import jax_sketch
 from repro.core.ddsketch import DDSketch
 from repro.core.jax_sketch import DeviceSketch
-from repro.kernels.ref import BucketSpec, approx_log2, segment_histogram_ref
+from repro.kernels.ref import (
+    MAX_COLLAPSE_LEVEL,
+    BucketSpec,
+    segment_histogram_ref,
+    shift_key,
+)
 
 __all__ = [
     "SketchBank",
@@ -40,6 +50,9 @@ __all__ = [
     "add",
     "merge",
     "allreduce",
+    "collapse",
+    "collapse_to",
+    "auto_collapse",
     "row",
     "set_row",
     "quantile",
@@ -50,15 +63,21 @@ __all__ = [
 
 
 class SketchBank(NamedTuple):
-    """K stacked DDSketch states (all float32; leading axis = sketch id)."""
+    """K stacked DDSketch states (leading axis = sketch id).
+
+    Field order mirrors ``DeviceSketch`` exactly, so ``DeviceSketch(*bank)``
+    is a bank-of-rows view suitable for vmapping row-wise operations.
+    """
 
     pos: jnp.ndarray  # (K, m) bucket counts for positive values
     neg: jnp.ndarray  # (K, m) bucket counts for negative values (keys of |x|)
     zero: jnp.ndarray  # (K,) counts of |x| <= min_indexable
     overflow: jnp.ndarray  # (K,) counts of |x| clamped into the top bucket
+    underflow: jnp.ndarray  # (K,) counts of |x| clamped into bucket 0
     summ: jnp.ndarray  # (K,) running sums
     vmin: jnp.ndarray  # (K,) exact running mins
     vmax: jnp.ndarray  # (K,) exact running maxs
+    level: jnp.ndarray  # (K,) int32 per-row uniform-collapse levels
 
     @property
     def num_sketches(self) -> int:
@@ -77,25 +96,27 @@ def empty(spec: BucketSpec, num_sketches: int) -> SketchBank:
         neg=jnp.zeros((k, m), jnp.float32),
         zero=jnp.zeros(k, jnp.float32),
         overflow=jnp.zeros(k, jnp.float32),
+        underflow=jnp.zeros(k, jnp.float32),
         summ=jnp.zeros(k, jnp.float32),
         vmin=jnp.full(k, jnp.inf, jnp.float32),
         vmax=jnp.full(k, -jnp.inf, jnp.float32),
+        level=jnp.zeros(k, jnp.int32),
     )
 
 
-def _segment_histogram(values, segment_ids, weights, k, spec, use_kernel):
+def _segment_histogram(values, segment_ids, weights, levels, k, spec, use_kernel):
     if use_kernel:
         from repro.kernels import ops
 
         return ops.segment_histogram(
-            values, segment_ids, weights, num_segments=k, spec=spec
+            values, segment_ids, weights, levels, num_segments=k, spec=spec
         )
     return segment_histogram_ref(
-        values, segment_ids, weights, num_segments=k, spec=spec
+        values, segment_ids, weights, levels, num_segments=k, spec=spec
     )
 
 
-@partial(jax.jit, static_argnames=("spec", "use_kernel"))
+@partial(jax.jit, static_argnames=("spec", "use_kernel", "auto_collapse"))
 def add(
     bank: SketchBank,
     values: jnp.ndarray,
@@ -104,13 +125,17 @@ def add(
     *,
     spec: BucketSpec,
     use_kernel: bool = False,
+    auto_collapse: bool = False,
 ) -> SketchBank:
     """Vectorized Algorithm 1 over ``(value, sketch_id)`` pairs (any shape).
 
     One segmented-histogram dispatch updates all K rows; there is no Python
     loop over sketches anywhere.  Non-finite values and out-of-range ids are
     ignored; positive / negative / near-zero routing matches
-    ``jax_sketch.add`` exactly.
+    ``jax_sketch.add`` exactly.  Each value is keyed at its *row's* collapse
+    level (per-value levels gathered once, outside the kernel).  With
+    ``auto_collapse=True`` every touched row first collapses to the smallest
+    level at which all of its batch values are indexable, so nothing clamps.
     """
     k = bank.num_sketches
     x = values.reshape(-1).astype(jnp.float32)
@@ -124,19 +149,26 @@ def add(
     is_neg = valid & (x < -spec.min_indexable)
     is_zero = valid & ~is_pos & ~is_neg
 
+    k0 = jax_sketch._raw_keys(x, is_pos | is_neg, spec)
+    if auto_collapse:
+        needed = jnp.where(is_pos | is_neg, jax_sketch._needed_levels(k0, spec), 0)
+        per_row = jax.ops.segment_max(needed, sc, num_segments=k)
+        target = jnp.maximum(bank.level, jnp.maximum(per_row, 0))
+        bank = collapse_to(bank, target, spec=spec)
+    shifts = bank.level[sc]  # per-value levels for the segmented kernels
+
     pos_hist = _segment_histogram(
-        jnp.where(is_pos, x, -1.0), s, w, k, spec, use_kernel
+        jnp.where(is_pos, x, -1.0), s, w, shifts, k, spec, use_kernel
     )
     neg_hist = _segment_histogram(
-        jnp.where(is_neg, -x, -1.0), s, w, k, spec, use_kernel
+        jnp.where(is_neg, -x, -1.0), s, w, shifts, k, spec, use_kernel
     )
 
-    top_key = jnp.float32(spec.offset + spec.num_buckets - 1)
-    raw_key = jnp.ceil(
-        approx_log2(jnp.abs(jnp.where(valid, x, 1.0)), spec.mapping)
-        * jnp.float32(spec.multiplier)
-    )
-    over = (is_pos | is_neg) & (raw_key > top_key)
+    # clamp accounting: shifted keys that escape [offset, offset + m - 1]
+    top_key = spec.offset + spec.num_buckets - 1
+    k_lev = shift_key(k0, shifts)
+    over = (is_pos | is_neg) & (k_lev > top_key)
+    under = (is_pos | is_neg) & (k_lev < spec.offset)
 
     seg_sum = partial(jax.ops.segment_sum, num_segments=k)
     wx = w * jnp.where(valid, x, 0.0)
@@ -153,35 +185,128 @@ def add(
         neg=bank.neg + neg_hist,
         zero=bank.zero + seg_sum(w * is_zero, sc),
         overflow=bank.overflow + seg_sum(w * over, sc),
+        underflow=bank.underflow + seg_sum(w * under, sc),
         summ=bank.summ + seg_sum(wx, sc),
         vmin=jnp.minimum(bank.vmin, vmin_new),
         vmax=jnp.maximum(bank.vmax, vmax_new),
+        level=bank.level,
     )
 
 
-def merge(a: SketchBank, b: SketchBank) -> SketchBank:
-    """Algorithm 4 over all K rows: still a per-bucket '+' (hence psum-able)."""
+# --------------------------------------------------------------------- #
+# per-row uniform collapse (UDDSketch lifted over the bank axis)
+# --------------------------------------------------------------------- #
+_fold = jax_sketch._fold  # same (m,)/(K, m) fold dispatch on both tiers
+
+
+def collapse(
+    bank: SketchBank,
+    rows: jnp.ndarray | None = None,
+    *,
+    spec: BucketSpec,
+    use_kernel: bool = False,
+) -> SketchBank:
+    """One uniform-collapse step on the selected rows (all rows if None).
+
+    ``rows`` is a (K,) boolean mask.  Selected rows fold their pos/neg
+    bucket pairs and bump their level; unselected rows are untouched —
+    count / sum / min / max are preserved exactly either way.
+    """
+    mask = (
+        jnp.ones(bank.num_sketches, bool)
+        if rows is None
+        else jnp.asarray(rows, bool)
+    )
+    pos_f = _fold(bank.pos, spec, use_kernel)
+    neg_f = _fold(bank.neg, spec, use_kernel)
+    return bank._replace(
+        pos=jnp.where(mask[:, None], pos_f, bank.pos),
+        neg=jnp.where(mask[:, None], neg_f, bank.neg),
+        level=jnp.where(mask, bank.level + 1, bank.level),
+    )
+
+
+def collapse_to(
+    bank: SketchBank, target, *, spec: BucketSpec, use_kernel: bool = False
+) -> SketchBank:
+    """Fold each row until its level reaches ``target`` (scalar or (K,)).
+
+    Clamped to ``MAX_COLLAPSE_LEVEL``; a fixed-shape ``while_loop`` over
+    the laggard rows, so mixed-level alignment composes with jit/shard_map.
+    """
+    target = jnp.broadcast_to(
+        jnp.clip(jnp.asarray(target, jnp.int32), 0, MAX_COLLAPSE_LEVEL),
+        bank.level.shape,
+    )
+    return jax.lax.while_loop(
+        lambda b: (b.level < target).any(),
+        lambda b: collapse(b, b.level < target, spec=spec, use_kernel=use_kernel),
+        bank,
+    )
+
+
+def auto_collapse(
+    bank: SketchBank,
+    *,
+    spec: BucketSpec,
+    threshold: float = 0.0,
+    use_kernel: bool = False,
+) -> SketchBank:
+    """Reactive collapse: fold rows whose clamped mass exceeds ``threshold``.
+
+    Row semantics match ``jax_sketch.auto_collapse``: fires on
+    ``overflow + underflow > threshold`` (level cap permitting), resets the
+    firing rows' clamp counters, leaves the rest untouched.
+    """
+    fire = (bank.overflow + bank.underflow > threshold) & (
+        bank.level < MAX_COLLAPSE_LEVEL
+    )
+    folded = collapse(bank, fire, spec=spec, use_kernel=use_kernel)
+    return folded._replace(
+        overflow=jnp.where(fire, 0.0, bank.overflow),
+        underflow=jnp.where(fire, 0.0, bank.underflow),
+    )
+
+
+def merge(a: SketchBank, b: SketchBank, *, spec: BucketSpec) -> SketchBank:
+    """Algorithm 4 over all K rows, generalized to mixed resolutions.
+
+    Each row pair aligns to the coarser of the two levels (the finer row
+    collapses first — Cafaro et al. 2021), then sums per bucket; rows at
+    equal levels reduce to the plain '+'."""
+    target = jnp.maximum(a.level, b.level)
+    a = collapse_to(a, target, spec=spec)
+    b = collapse_to(b, target, spec=spec)
     return SketchBank(
         pos=a.pos + b.pos,
         neg=a.neg + b.neg,
         zero=a.zero + b.zero,
         overflow=a.overflow + b.overflow,
+        underflow=a.underflow + b.underflow,
         summ=a.summ + b.summ,
         vmin=jnp.minimum(a.vmin, b.vmin),
         vmax=jnp.maximum(a.vmax, b.vmax),
+        level=a.level,
     )
 
 
-def allreduce(bank: SketchBank, axis_name) -> SketchBank:
-    """Cross-device Algorithm 4 for the whole bank in one psum per field."""
+def allreduce(bank: SketchBank, axis_name, *, spec: BucketSpec) -> SketchBank:
+    """Cross-device Algorithm 4 for the whole bank.
+
+    Rows first collapse to the fleet-max level per row (pmax), then one
+    psum per field combines the commensurate bucket arrays."""
+    target = jax.lax.pmax(bank.level, axis_name)
+    bank = collapse_to(bank, target, spec=spec)
     return SketchBank(
         pos=jax.lax.psum(bank.pos, axis_name),
         neg=jax.lax.psum(bank.neg, axis_name),
         zero=jax.lax.psum(bank.zero, axis_name),
         overflow=jax.lax.psum(bank.overflow, axis_name),
+        underflow=jax.lax.psum(bank.underflow, axis_name),
         summ=jax.lax.psum(bank.summ, axis_name),
         vmin=jax.lax.pmin(bank.vmin, axis_name),
         vmax=jax.lax.pmax(bank.vmax, axis_name),
+        level=target,
     )
 
 
@@ -190,41 +315,29 @@ def allreduce(bank: SketchBank, axis_name) -> SketchBank:
 # --------------------------------------------------------------------- #
 def row(bank: SketchBank, k: int) -> DeviceSketch:
     """Row ``k`` as a standalone DeviceSketch (shares the bucket geometry)."""
-    return DeviceSketch(
-        pos=bank.pos[k],
-        neg=bank.neg[k],
-        zero=bank.zero[k],
-        overflow=bank.overflow[k],
-        summ=bank.summ[k],
-        vmin=bank.vmin[k],
-        vmax=bank.vmax[k],
-    )
+    return DeviceSketch(*(field[k] for field in bank))
 
 
 def set_row(bank: SketchBank, k: int, sketch: DeviceSketch) -> SketchBank:
     """Functional update: replace row ``k`` with a DeviceSketch's state."""
     return SketchBank(
-        pos=bank.pos.at[k].set(sketch.pos),
-        neg=bank.neg.at[k].set(sketch.neg),
-        zero=bank.zero.at[k].set(sketch.zero),
-        overflow=bank.overflow.at[k].set(sketch.overflow),
-        summ=bank.summ.at[k].set(sketch.summ),
-        vmin=bank.vmin.at[k].set(sketch.vmin),
-        vmax=bank.vmax.at[k].set(sketch.vmax),
+        *(bf.at[k].set(sf) for bf, sf in zip(bank, sketch))
     )
 
 
 def to_host(bank: SketchBank, spec: BucketSpec, k: int) -> DDSketch:
     """Flush row ``k`` into the exact, unbounded host sketch (lossless for
-    integer-weight counts below 2^24; see ``jax_sketch.to_host``)."""
+    integer-weight counts below 2^24; see ``jax_sketch.to_host``).  The
+    row's collapse level transfers as the host ``collapse_level``."""
     return jax_sketch.to_host(row(bank, k), spec)
 
 
 def from_host(hosts: Sequence[DDSketch], spec: BucketSpec) -> SketchBank:
     """Stack host sketches into a bank, one per row (keys clamp into range).
 
-    Like ``jax_sketch.from_host``, the device-only ``overflow`` counter has
-    no host-tier equivalent and restarts at zero.
+    Like ``jax_sketch.from_host``, the device-only ``overflow`` /
+    ``underflow`` counters have no host-tier equivalent and restart at zero;
+    per-row levels come from each host's ``collapse_level``.
     """
     rows = [jax_sketch.from_host(h, spec) for h in hosts]
     if not rows:
@@ -240,12 +353,14 @@ def quantiles(bank: SketchBank, qs: jnp.ndarray, *, spec: BucketSpec) -> jnp.nda
     """Per-row quantile estimates, shape ``(K, len(qs))``.
 
     ``jax_sketch.quantile`` (Algorithm 2 as one cumsum + searchsorted over
-    the concatenated neg/zero/pos value line) vmapped over the K rows — a
-    single batched pass, no Python loop over rows or qs, and bit-identical
-    semantics to querying each row as a standalone DeviceSketch.
+    the concatenated neg/zero/pos value line, at each row's own collapse
+    level) vmapped over the K rows — a single batched pass, no Python loop
+    over rows or qs, and bit-identical semantics to querying each row as a
+    standalone DeviceSketch.  All-empty rows answer NaN, matching
+    ``jax_sketch.quantile`` on an empty sketch.
     """
     qf = jnp.atleast_1d(jnp.asarray(qs, jnp.float32))
-    rows_as_sketch = DeviceSketch(*bank[:7])  # leading axis K on every leaf
+    rows_as_sketch = DeviceSketch(*bank)  # leading axis K on every leaf
     return jax.vmap(
         lambda sk: jax_sketch.quantiles(sk, qf, spec=spec)
     )(rows_as_sketch)
@@ -253,5 +368,5 @@ def quantiles(bank: SketchBank, qs: jnp.ndarray, *, spec: BucketSpec) -> jnp.nda
 
 @partial(jax.jit, static_argnames=("spec",))
 def quantile(bank: SketchBank, q, *, spec: BucketSpec) -> jnp.ndarray:
-    """One quantile for every row, shape ``(K,)``."""
+    """One quantile for every row, shape ``(K,)`` (NaN for empty rows)."""
     return quantiles(bank, jnp.asarray([q]), spec=spec)[:, 0]

@@ -1,9 +1,11 @@
 """DDSketch device kernels: Pallas TPU implementations + pure-XLA oracles.
 
-Hot spots the paper optimizes (Algorithm 1's insert loop), TPU-native:
+Hot spots the paper optimizes (Algorithm 1's insert loop) plus the
+UDDSketch uniform-collapse fold, TPU-native:
 
 * ``ddsketch_hist``     — single-sketch histogram insert,
 * ``ddsketch_seg_hist`` — segmented insert for a bank of K sketches,
+* ``fold_pairs``        — uniform-collapse resolution fold (gamma -> gamma^2),
 * ``ref``               — pure-jnp semantic oracles / XLA fallback,
 * ``ops``               — backend dispatch (``force=`` pins a path).
 """
@@ -11,6 +13,12 @@ Hot spots the paper optimizes (Algorithm 1's insert loop), TPU-native:
 from repro.kernels.ops import (  # noqa: F401
     BucketSpec,
     ddsketch_histogram,
+    fold_pairs,
     segment_histogram,
 )
-from repro.kernels.ref import histogram_ref, segment_histogram_ref  # noqa: F401
+from repro.kernels.ref import (  # noqa: F401
+    MAX_COLLAPSE_LEVEL,
+    fold_pairs_ref,
+    histogram_ref,
+    segment_histogram_ref,
+)

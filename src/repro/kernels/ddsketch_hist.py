@@ -34,24 +34,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import BucketSpec, approx_log2
+from repro.kernels.ref import BucketSpec, approx_log2, shift_key
 
 __all__ = ["histogram_pallas"]
 
 
-def _hist_kernel(vals_ref, w_ref, out_ref, *, spec: BucketSpec, bucket_tile: int):
+def _hist_kernel(
+    vals_ref, w_ref, lev_ref, out_ref, *, spec: BucketSpec, bucket_tile: int
+):
     i = pl.program_id(0)  # bucket-tile index (parallel)
     j = pl.program_id(1)  # value-tile index (sequential reduction)
 
     x = vals_ref[...]  # (1, TV) float32
     w = w_ref[...]  # (1, TV) float32
+    lev = lev_ref[...]  # (1, TV) int32 per-value collapse levels
 
     mask = jnp.isfinite(x) & (x > spec.min_indexable)
     safe = jnp.where(mask, x, 1.0)
     # ceil(log_gamma(x)) == ceil(approx_log2(x) * multiplier); float32 math
     # identical to ref.bucket_index so host/device/kernel agree exactly.
     key = jnp.ceil(approx_log2(safe, spec.mapping) * jnp.float32(spec.multiplier))
-    idx = jnp.clip(key.astype(jnp.int32) - spec.offset, 0, spec.num_buckets - 1)
+    k0 = shift_key(key.astype(jnp.int32), lev)  # collapse-level key shift
+    idx = jnp.clip(k0 - spec.offset, 0, spec.num_buckets - 1)
     w = jnp.where(mask, w, 0.0)
 
     # one-hot match: bucket ids for this tile as rows, values as lanes
@@ -74,6 +78,7 @@ def _hist_kernel(vals_ref, w_ref, out_ref, *, spec: BucketSpec, bucket_tile: int
 def histogram_pallas(
     values: jnp.ndarray,
     weights: jnp.ndarray | None = None,
+    levels: jnp.ndarray | None = None,
     *,
     spec: BucketSpec,
     value_tile: int = 2048,
@@ -83,7 +88,9 @@ def histogram_pallas(
     """Bucket-count vector (m,) for the positive finite entries of ``values``.
 
     Matches ``ref.histogram_ref`` exactly (same masking, same float32 index
-    math); non-positive / non-finite entries contribute nothing.
+    math); non-positive / non-finite entries contribute nothing.  ``levels``
+    holds per-value collapse levels (int32, same size as ``values``); omitted
+    it defaults to level 0, reproducing the uncollapsed indexing bit-for-bit.
     """
     if spec.num_buckets % bucket_tile:
         raise ValueError(
@@ -98,15 +105,22 @@ def histogram_pallas(
         if weights is None
         else weights.reshape(-1).astype(jnp.float32)
     )
+    lev = (
+        jnp.zeros_like(x, dtype=jnp.int32)
+        if levels is None
+        else levels.reshape(-1).astype(jnp.int32)
+    )
     n = x.shape[0]
     pad = (-n) % value_tile
     if pad:
         x = jnp.pad(x, (0, pad), constant_values=-1.0)  # masked out in-kernel
         w = jnp.pad(w, (0, pad), constant_values=0.0)
+        lev = jnp.pad(lev, (0, pad), constant_values=0)
     nv = x.shape[0] // value_tile
     nb = spec.num_buckets // bucket_tile
     x = x.reshape(nv, value_tile)
     w = w.reshape(nv, value_tile)
+    lev = lev.reshape(nv, value_tile)
 
     out = pl.pallas_call(
         functools.partial(_hist_kernel, spec=spec, bucket_tile=bucket_tile),
@@ -114,9 +128,10 @@ def histogram_pallas(
         in_specs=[
             pl.BlockSpec((1, value_tile), lambda i, j: (j, 0)),
             pl.BlockSpec((1, value_tile), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, value_tile), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((1, bucket_tile), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, bucket_tile), jnp.float32),
         interpret=interpret,
-    )(x, w)
+    )(x, w, lev)
     return out.reshape(spec.num_buckets)

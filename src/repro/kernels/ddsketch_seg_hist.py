@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import BucketSpec, approx_log2
+from repro.kernels.ref import BucketSpec, approx_log2, shift_key
 
 __all__ = ["segment_histogram_pallas"]
 
@@ -48,6 +48,7 @@ def _seg_hist_kernel(
     vals_ref,
     w_ref,
     seg_ref,
+    lev_ref,
     out_ref,
     *,
     spec: BucketSpec,
@@ -62,6 +63,7 @@ def _seg_hist_kernel(
     x = vals_ref[...]  # (1, TV) float32
     w = w_ref[...]  # (1, TV) float32
     seg = seg_ref[...]  # (1, TV) int32
+    lev = lev_ref[...]  # (1, TV) int32 per-value collapse levels
 
     mask = (
         jnp.isfinite(x)
@@ -73,7 +75,8 @@ def _seg_hist_kernel(
     # ceil(log_gamma(x)) == ceil(approx_log2(x) * multiplier); float32 math
     # identical to ref.bucket_index so ref/kernel agree exactly.
     key = jnp.ceil(approx_log2(safe, spec.mapping) * jnp.float32(spec.multiplier))
-    idx = jnp.clip(key.astype(jnp.int32) - spec.offset, 0, spec.num_buckets - 1)
+    k0 = shift_key(key.astype(jnp.int32), lev)  # collapse-level key shift
+    idx = jnp.clip(k0 - spec.offset, 0, spec.num_buckets - 1)
     w = jnp.where(mask, w, 0.0)
 
     tv = x.shape[1]
@@ -118,6 +121,7 @@ def segment_histogram_pallas(
     values: jnp.ndarray,
     segment_ids: jnp.ndarray,
     weights: jnp.ndarray | None = None,
+    levels: jnp.ndarray | None = None,
     *,
     num_segments: int,
     spec: BucketSpec,
@@ -132,7 +136,9 @@ def segment_histogram_pallas(
     float32 index math); non-positive / non-finite values and out-of-range
     segment ids contribute nothing.  ``num_segments`` is padded up to a
     ``row_tile`` multiple internally; the pad rows are dropped before
-    returning.
+    returning.  ``levels`` holds *per-value* int32 collapse levels (callers
+    with per-row levels gather ``row_levels[segment_ids]`` once outside);
+    omitted it defaults to level 0, matching the uncollapsed indexing.
     """
     if spec.num_buckets % bucket_tile:
         raise ValueError(
@@ -153,12 +159,18 @@ def segment_histogram_pallas(
         if weights is None
         else weights.reshape(-1).astype(jnp.float32)
     )
+    lev = (
+        jnp.zeros_like(s)
+        if levels is None
+        else levels.reshape(-1).astype(jnp.int32)
+    )
     n = x.shape[0]
     pad = (-n) % value_tile
     if pad:
         x = jnp.pad(x, (0, pad), constant_values=-1.0)  # masked out in-kernel
         s = jnp.pad(s, (0, pad), constant_values=-1)
         w = jnp.pad(w, (0, pad), constant_values=0.0)
+        lev = jnp.pad(lev, (0, pad), constant_values=0)
     rows_padded = num_segments + ((-num_segments) % row_tile)
     nv = x.shape[0] // value_tile
     nr = rows_padded // row_tile
@@ -166,6 +178,7 @@ def segment_histogram_pallas(
     x = x.reshape(nv, value_tile)
     s = s.reshape(nv, value_tile)
     w = w.reshape(nv, value_tile)
+    lev = lev.reshape(nv, value_tile)
 
     out = pl.pallas_call(
         functools.partial(
@@ -180,9 +193,10 @@ def segment_histogram_pallas(
             pl.BlockSpec((1, value_tile), lambda i, j, k: (k, 0)),
             pl.BlockSpec((1, value_tile), lambda i, j, k: (k, 0)),
             pl.BlockSpec((1, value_tile), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((1, value_tile), lambda i, j, k: (k, 0)),
         ],
         out_specs=pl.BlockSpec((row_tile, bucket_tile), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((rows_padded, spec.num_buckets), jnp.float32),
         interpret=interpret,
-    )(x, w, s)
+    )(x, w, s, lev)
     return out[:num_segments]

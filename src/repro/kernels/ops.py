@@ -1,11 +1,11 @@
 """Public jit'd entry points for the DDSketch kernels.
 
-``ddsketch_histogram`` (one sketch) and ``segment_histogram`` (a bank of K
-sketches) dispatch to the compiled Pallas kernels on TPU and to the pure-XLA
-reference elsewhere.  The semantics contracts are
-``repro.kernels.ref.histogram_ref`` / ``ref.segment_histogram_ref``; tests
-sweep shapes, dtypes, mappings and tile configurations asserting exact
-agreement.
+``ddsketch_histogram`` (one sketch), ``segment_histogram`` (a bank of K
+sketches) and ``fold_pairs`` (the uniform-collapse resolution fold) dispatch
+to the compiled Pallas kernels on TPU and to the pure-XLA reference
+elsewhere.  The semantics contracts are ``repro.kernels.ref.histogram_ref``
+/ ``ref.segment_histogram_ref`` / ``ref.fold_pairs_ref``; tests sweep
+shapes, dtypes, mappings and tile configurations asserting exact agreement.
 
 ``force`` pins an implementation:
 
@@ -24,9 +24,15 @@ import jax.numpy as jnp
 
 from repro.kernels.ddsketch_hist import histogram_pallas
 from repro.kernels.ddsketch_seg_hist import segment_histogram_pallas
-from repro.kernels.ref import BucketSpec, histogram_ref, segment_histogram_ref
+from repro.kernels.fold_pairs import fold_pairs_pallas
+from repro.kernels.ref import (
+    BucketSpec,
+    fold_pairs_ref,
+    histogram_ref,
+    segment_histogram_ref,
+)
 
-__all__ = ["ddsketch_histogram", "segment_histogram", "BucketSpec"]
+__all__ = ["ddsketch_histogram", "segment_histogram", "fold_pairs", "BucketSpec"]
 
 _FORCE_VALUES = (None, "pallas", "interpret", "ref")
 
@@ -49,19 +55,23 @@ def _check_force(force: str | None) -> None:
 def ddsketch_histogram(
     values: jnp.ndarray,
     weights: jnp.ndarray | None = None,
+    levels: jnp.ndarray | None = None,
     *,
     spec: BucketSpec,
     value_tile: int = 2048,
     bucket_tile: int = 512,
     force: str | None = None,  # "pallas" | "interpret" | "ref" | None(auto)
 ) -> jnp.ndarray:
-    """Bucket counts (m,) of the positive finite entries of ``values``."""
+    """Bucket counts (m,) of the positive finite entries of ``values``.
+
+    ``levels`` holds per-value int32 collapse levels; omitted = level 0."""
     _check_force(force)
     if force == "ref" or (force is None and not _on_tpu()):
-        return histogram_ref(values, weights, spec=spec)
+        return histogram_ref(values, weights, levels, spec=spec)
     return histogram_pallas(
         values,
         weights,
+        levels,
         spec=spec,
         value_tile=value_tile,
         bucket_tile=bucket_tile,
@@ -73,6 +83,7 @@ def segment_histogram(
     values: jnp.ndarray,
     segment_ids: jnp.ndarray,
     weights: jnp.ndarray | None = None,
+    levels: jnp.ndarray | None = None,
     *,
     num_segments: int,
     spec: BucketSpec,
@@ -82,19 +93,45 @@ def segment_histogram(
     force: str | None = None,  # "pallas" | "interpret" | "ref" | None(auto)
 ) -> jnp.ndarray:
     """Per-segment bucket counts ``(num_segments, m)`` — one dispatch for a
-    whole bank of K sketches regardless of K."""
+    whole bank of K sketches regardless of K.  ``levels`` holds *per-value*
+    int32 collapse levels (gather per-row levels outside); omitted = level 0."""
     _check_force(force)
     if force == "ref" or (force is None and not _on_tpu()):
         return segment_histogram_ref(
-            values, segment_ids, weights, num_segments=num_segments, spec=spec
+            values, segment_ids, weights, levels, num_segments=num_segments, spec=spec
         )
     return segment_histogram_pallas(
         values,
         segment_ids,
         weights,
+        levels,
         num_segments=num_segments,
         spec=spec,
         value_tile=value_tile,
+        row_tile=row_tile,
+        bucket_tile=bucket_tile,
+        interpret=force == "interpret",
+    )
+
+
+def fold_pairs(
+    counts: jnp.ndarray,
+    *,
+    spec: BucketSpec,
+    row_tile: int = 8,
+    bucket_tile: int = 512,
+    force: str | None = None,  # "pallas" | "interpret" | "ref" | None(auto)
+) -> jnp.ndarray:
+    """One uniform-collapse fold of ``counts`` (``(K, m)`` or ``(m,)``):
+    bucket pairs with keys (2j-1, 2j) merge into key j, halving the sketch
+    resolution (gamma -> gamma**2).  Exact: every destination bucket sums at
+    most two sources, so Pallas and XLA paths agree bit-for-bit."""
+    _check_force(force)
+    if force == "ref" or (force is None and not _on_tpu()):
+        return fold_pairs_ref(counts, spec=spec)
+    return fold_pairs_pallas(
+        counts,
+        spec=spec,
         row_tile=row_tile,
         bucket_tile=bucket_tile,
         interpret=force == "interpret",

@@ -17,11 +17,22 @@ import jax.numpy as jnp
 
 __all__ = [
     "BucketSpec",
+    "MAX_COLLAPSE_LEVEL",
     "bucket_index",
     "histogram_ref",
     "segment_histogram_ref",
+    "fold_pairs_ref",
+    "fold_destination_range",
     "approx_log2",
+    "shift_key",
 ]
+
+# Hard ceiling on the uniform-collapse level (UDDSketch, Epicoco et al. 2020).
+# At level L every bucket covers gamma**(2**L); with the default geometry
+# (alpha=0.01, m=2048, offset=-1024) level 3 already indexes every float32
+# normal, so 6 leaves ample headroom while keeping the per-level
+# bucket-value tables small trace-time constants.
+MAX_COLLAPSE_LEVEL = 6
 
 
 @dataclass(frozen=True)
@@ -102,24 +113,46 @@ def approx_log2(x: jnp.ndarray, mapping: str) -> jnp.ndarray:
     return e.astype(jnp.float32) + poly
 
 
-def bucket_index(x: jnp.ndarray, spec: BucketSpec) -> jnp.ndarray:
-    """Clamped bucket index for positive values (callers pre-mask others)."""
+def shift_key(key: jnp.ndarray, levels: jnp.ndarray) -> jnp.ndarray:
+    """Base (level-0) integer key -> collapse-level key: ceil(key / 2**level).
+
+    Uniform collapse folds bucket pairs (2j-1, 2j) -> j, so the level-L key
+    of a value is ceil(key_0 / 2**L) (ceil(ceil(y)/n) == ceil(y/n)).  The
+    arithmetic right shift computes the floor for either sign, so the ceil
+    is two negations — exact int32 math shared by ref and Pallas paths.
+    """
+    return -((-key) >> levels)
+
+
+def bucket_index(
+    x: jnp.ndarray, spec: BucketSpec, levels: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Clamped bucket index for positive values (callers pre-mask others).
+
+    ``levels`` (per-value int32 collapse levels, broadcastable against x)
+    shifts keys into the collapsed geometry instead of clamping base keys.
+    """
     key = jnp.ceil(approx_log2(x, spec.mapping) * jnp.float32(spec.multiplier))
-    idx = key.astype(jnp.int32) - spec.offset
-    return jnp.clip(idx, 0, spec.num_buckets - 1)
+    k = key.astype(jnp.int32)
+    if levels is not None:
+        k = shift_key(k, levels)
+    return jnp.clip(k - spec.offset, 0, spec.num_buckets - 1)
 
 
 @partial(jax.jit, static_argnames=("spec",))
 def histogram_ref(
     values: jnp.ndarray,
     weights: jnp.ndarray | None = None,
+    levels: jnp.ndarray | None = None,
     *,
     spec: BucketSpec,
 ) -> jnp.ndarray:
     """Oracle: bucket-count vector for positive finite values.
 
     Non-positive / non-finite entries contribute nothing (the jax_sketch
-    wrapper routes them to the zero/negative/nan counters).
+    wrapper routes them to the zero/negative/nan counters).  ``levels``
+    (per-value int32 collapse levels) indexes values in the collapsed
+    geometry — level 0 reproduces the base behaviour bit-for-bit.
     """
     x = values.reshape(-1).astype(jnp.float32)
     w = (
@@ -127,8 +160,9 @@ def histogram_ref(
         if weights is None
         else weights.reshape(-1).astype(jnp.float32)
     )
+    lev = None if levels is None else levels.reshape(-1).astype(jnp.int32)
     mask = jnp.isfinite(x) & (x > spec.min_indexable)
-    idx = bucket_index(jnp.where(mask, x, 1.0), spec)
+    idx = bucket_index(jnp.where(mask, x, 1.0), spec, lev)
     contrib = jnp.where(mask, w, 0.0)
     return jnp.zeros(spec.num_buckets, jnp.float32).at[idx].add(contrib)
 
@@ -138,6 +172,7 @@ def segment_histogram_ref(
     values: jnp.ndarray,
     segment_ids: jnp.ndarray,
     weights: jnp.ndarray | None = None,
+    levels: jnp.ndarray | None = None,
     *,
     num_segments: int,
     spec: BucketSpec,
@@ -148,7 +183,9 @@ def segment_histogram_ref(
     fixed-geometry DDSketch bucket array per segment, flattened into a single
     scatter-add so K sketches cost one XLA dispatch.  Entries whose segment
     id falls outside ``[0, num_segments)`` contribute nothing (same contract
-    as the non-positive / non-finite masking).
+    as the non-positive / non-finite masking).  ``levels`` holds *per-value*
+    collapse levels — callers with per-row levels gather ``row_levels[s]``
+    once outside (so the kernel twin needs no in-kernel gather).
     """
     x = values.reshape(-1).astype(jnp.float32)
     s = segment_ids.reshape(-1).astype(jnp.int32)
@@ -157,14 +194,56 @@ def segment_histogram_ref(
         if weights is None
         else weights.reshape(-1).astype(jnp.float32)
     )
+    lev = None if levels is None else levels.reshape(-1).astype(jnp.int32)
     mask = (
         jnp.isfinite(x)
         & (x > spec.min_indexable)
         & (s >= 0)
         & (s < num_segments)
     )
-    idx = bucket_index(jnp.where(mask, x, 1.0), spec)
+    idx = bucket_index(jnp.where(mask, x, 1.0), spec, lev)
     contrib = jnp.where(mask, w, 0.0)
     flat = jnp.clip(s, 0, num_segments - 1) * spec.num_buckets + idx
     out = jnp.zeros(num_segments * spec.num_buckets, jnp.float32).at[flat].add(contrib)
     return out.reshape(num_segments, spec.num_buckets)
+
+
+# --------------------------------------------------------------------- #
+# uniform collapse: fold adjacent bucket pairs (UDDSketch Algorithm 2)
+# --------------------------------------------------------------------- #
+def fold_destination_range(spec: BucketSpec) -> tuple[int, int]:
+    """(lowest, highest) destination index of one uniform-collapse fold.
+
+    Bucket i holds key ``offset + i``; the fold sends key k to ceil(k/2),
+    i.e. index ``(offset + i + 1) // 2 - offset``.  Raises if any
+    destination falls outside [0, m) — with the shipped geometries
+    (offset <= 0 <= offset + m - 1) destinations always land inside.
+    """
+    lo = (spec.offset + 1) // 2 - spec.offset
+    hi = (spec.offset + spec.num_buckets) // 2 - spec.offset
+    if lo < 0 or hi > spec.num_buckets - 1:
+        raise ValueError(
+            f"fold_pairs destinations [{lo}, {hi}] escape the bucket array "
+            f"[0, {spec.num_buckets - 1}] for offset={spec.offset}; uniform "
+            "collapse needs offset <= 0 <= offset + num_buckets - 1"
+        )
+    return lo, hi
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def fold_pairs_ref(counts: jnp.ndarray, *, spec: BucketSpec) -> jnp.ndarray:
+    """Oracle: one uniform-collapse step over the bucket axis.
+
+    ``counts`` is ``(..., m)``; output has the same shape with
+    ``out[..., ceil((offset+i)/2) - offset] += counts[..., i]``.  Every
+    destination receives at most two sources, so the result is exact in
+    float32 regardless of accumulation order (the Pallas twin must match
+    bit-for-bit).
+    """
+    fold_destination_range(spec)  # static geometry check
+    m = spec.num_buckets
+    keys = jnp.arange(m, dtype=jnp.int32) + spec.offset
+    dst = ((keys + 1) >> 1) - spec.offset  # ceil(k/2) - offset, in [0, m)
+    flat = counts.reshape(-1, m)
+    out = jnp.zeros_like(flat).at[:, dst].add(flat)
+    return out.reshape(counts.shape)

@@ -21,18 +21,18 @@ Usage:
   python -m repro.launch.dryrun --all --mesh multi       # 2-pod, 512 chips
 """
 
-import argparse
-import json
-import time
-import traceback
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
 
-import jax
+import jax  # noqa: E402
 
-from repro import configs
-from repro.configs.shapes import SHAPES, shapes_for
-from repro.launch import roofline
-from repro.launch.mesh import HW, make_production_mesh
-from repro.launch.steps import StepConfig, build_cell
+from repro import configs  # noqa: E402
+from repro.configs.shapes import SHAPES, shapes_for  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import StepConfig, build_cell  # noqa: E402
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
 
@@ -147,7 +147,9 @@ def run_cell(
             arch, shape_name, mesh, base_cfg.replace(n_layers=2 * cycle), scfg
         )
         n_cycles = base_cfg.n_cycles
-        extrap = lambda b, c: b + (n_cycles - 1) * (c - b)
+
+        def extrap(b, c):
+            return b + (n_cycles - 1) * (c - b)
         mem = A["mem"]
         flops = extrap(B["flops"], C["flops"])
         hbm_bytes = extrap(B["hbm_bytes"], C["hbm_bytes"])

@@ -22,7 +22,6 @@ and the iota [g,n]<=[N] forms are parsed).
 
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 

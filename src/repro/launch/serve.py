@@ -172,10 +172,23 @@ class Server:
         """Rollup request-latency quantiles for one endpoint (host tier)."""
         return self.endpoint_agg.quantiles(endpoint, qs)
 
+    def endpoint_alpha(self, endpoint: str) -> float:
+        """Effective relative-error guarantee for one endpoint's rollup.
+
+        Starts at the configured alpha and degrades (2a/(1+a^2) per
+        uniform-collapse step) only if that endpoint's latency stream
+        outgrew the device bucket range and its window rows collapsed.
+        """
+        return self.endpoint_agg.totals[endpoint].effective_alpha
+
     def endpoint_report(self, qs=(0.5, 0.95, 0.99)) -> dict:
-        """Per-endpoint latency quantiles in ms, for every endpoint seen."""
+        """Per-endpoint latency quantiles (ms) + effective alpha, for every
+        endpoint seen."""
         return {
-            ep: [v * 1e3 for v in self.endpoint_agg.quantiles(ep, qs)]
+            ep: {
+                "quantiles_ms": [v * 1e3 for v in self.endpoint_agg.quantiles(ep, qs)],
+                "alpha": self.endpoint_alpha(ep),
+            }
             for ep in sorted(self.endpoint_agg.keys())
         }
 
@@ -222,9 +235,10 @@ def main() -> None:
         f"request ms p50/p95/p99 = "
         f"{rep['request_ms'][0]:.1f}/{rep['request_ms'][1]:.1f}/{rep['request_ms'][2]:.1f}"
     )
-    for ep, q in server.endpoint_report().items():
+    for ep, rep_ep in server.endpoint_report().items():
+        q = rep_ep["quantiles_ms"]
         print(f"[serve]   {ep}: request ms p50/p95/p99 = "
-              f"{q[0]:.1f}/{q[1]:.1f}/{q[2]:.1f}")
+              f"{q[0]:.1f}/{q[1]:.1f}/{q[2]:.1f} (alpha {rep_ep['alpha']:.4f})")
 
 
 if __name__ == "__main__":

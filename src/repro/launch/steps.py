@@ -23,31 +23,27 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import configs
-from repro.configs.shapes import SHAPES, ShapeSpec, input_specs
-from repro.core import jax_sketch
+from repro.configs.shapes import SHAPES, input_specs
 from repro.models.common import ModelConfig, param_shapes
-from repro.models.model import decode_step, init_cache, loss_fn, prefill
+from repro.models.model import decode_step, loss_fn, prefill
 from repro.optim import (
     AdamWConfig,
     adamw_init,
     adamw_update,
     clip_by_global_norm,
-    compress_state_init,
     compressed_psum,
     cosine_schedule,
     opt_shardings,
 )
 from repro.sharding import rules
 from repro.telemetry import TelemetryConfig, init_telemetry, record, telemetry_shardings
-from repro.telemetry.device import SERVE_STREAMS, grad_rms_stream
+from repro.telemetry.device import grad_rms_stream
 
 __all__ = [
     "StepConfig",
@@ -417,11 +413,13 @@ def build_cell(
         specs = input_specs(cfg, shape)
         b_shard = _batch_shardings(specs, mesh, cfg.sharding_profile)
         if "ctx" in specs:
-            fn = lambda params, tokens, ctx: pf(params, tokens, ctx)
+            def fn(params, tokens, ctx):
+                return pf(params, tokens, ctx)
             args = (param_shapes(cfg), specs["tokens"], specs["ctx"])
             in_shardings = (pshard, b_shard["tokens"], b_shard["ctx"])
         else:
-            fn = lambda params, tokens: pf(params, tokens)
+            def fn(params, tokens):
+                return pf(params, tokens)
             args = (param_shapes(cfg), specs["tokens"])
             in_shardings = (pshard, b_shard["tokens"])
         return fn, args, in_shardings, None, ()

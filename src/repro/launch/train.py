@@ -28,11 +28,9 @@ import signal
 import time
 
 import jax
-import numpy as np
 
 from repro import configs
 from repro.checkpoint import CheckpointManager
-from repro.core import jax_sketch
 from repro.data import PrefetchLoader, SyntheticLM
 from repro.launch.mesh import make_local_mesh
 from repro.launch.steps import StepConfig, _batch_shardings, build_train_step

@@ -11,7 +11,6 @@ loop unrolled into the HLO.  ``q_block`` bounds the live logits tensor to
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -77,7 +77,8 @@ def _scan_chunked(dt, a, b_t, c_t, u, h0, chunk: int, use_scan: bool = False):
 
     if use_scan and S > chunk and S % chunk == 0:
         nb = S // chunk
-        blk = lambda t: jnp.moveaxis(t.reshape((B, nb, chunk) + t.shape[2:]), 1, 0)
+        def blk(t):
+            return jnp.moveaxis(t.reshape((B, nb, chunk) + t.shape[2:]), 1, 0)
 
         def body(h, xs):
             y_c, h_new = one(h, *xs)

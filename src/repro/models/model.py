@@ -17,9 +17,8 @@ Sharding is injected via ``ShardCtx`` (a callable applying
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

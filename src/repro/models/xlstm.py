@@ -91,9 +91,8 @@ def mlstm_mixer(x, p, cfg: ModelConfig, *, chunk: int = 256, shard=None,
     qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
     if cfg.scan_layers and S > chunk and S % chunk == 0:
         nb = S // chunk
-        blocked = lambda t, d: jnp.moveaxis(
-            t.reshape((B, nb, chunk) + t.shape[2:]), 1, 0
-        )
+        def blocked(t, d):
+            return jnp.moveaxis(t.reshape((B, nb, chunk) + t.shape[2:]), 1, 0)
         xs = tuple(blocked(t, 0) for t in (qf, kf, vf, f, i))
 
         def body(c, chunk_xs):
@@ -185,7 +184,8 @@ def slstm_mixer(x, p, cfg: ModelConfig, *, chunk: int = 256, shard=None,
     )
     if cfg.scan_layers and S > chunk and S % chunk == 0:
         nb = S // chunk
-        blocked = lambda t: jnp.moveaxis(t.reshape(B, nb, chunk, D), 1, 0)
+        def blocked(t):
+            return jnp.moveaxis(t.reshape(B, nb, chunk, D), 1, 0)
 
         def body(cc, xs):
             return one(cc, *xs)

@@ -19,7 +19,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["AdamWConfig", "adamw_init", "adamw_update", "opt_shardings"]
@@ -37,7 +36,8 @@ class AdamWConfig:
 
 
 def adamw_init(params, cfg: AdamWConfig = AdamWConfig()):
-    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, cfg.moment_dtype)
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

@@ -20,11 +20,8 @@ term drops ~4x on the compressed axis (validated in the §Perf log).
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["compress_state_init", "compressed_psum", "compressed_allreduce"]
 
@@ -53,7 +50,8 @@ def compressed_psum(grads, err, axis_name: str):
     the backward pass's implicit reduction never covers the compressed axis
     (you cannot compress a reduction the partitioner already performed)."""
     out = jax.tree.map(lambda g, e: _one(g, e, axis_name), grads, err)
-    is_pair = lambda x: isinstance(x, tuple)
+    def is_pair(x):
+        return isinstance(x, tuple)
     return (
         jax.tree.map(lambda o: o[0], out, is_leaf=is_pair),
         jax.tree.map(lambda o: o[1], out, is_leaf=is_pair),

@@ -19,7 +19,6 @@ padding.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Sequence
 
 import jax

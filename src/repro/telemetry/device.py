@@ -24,7 +24,7 @@ the host tier (``jax_sketch.to_host``) for windowed aggregation.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import NamedTuple
 
 import jax
@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import jax_sketch
-from repro.core.jax_sketch import BucketSpec, DeviceSketch
+from repro.core.jax_sketch import BucketSpec
 
 __all__ = [
     "TelemetryConfig",
@@ -52,6 +52,10 @@ class TelemetryConfig:
     spec: BucketSpec = BucketSpec(relative_accuracy=0.01, num_buckets=2048, offset=-1024)
     streams: tuple = TRAIN_STREAMS
     enabled: bool = True
+    # Uniform-collapse the sketch *before* each insert so streams spanning
+    # more decades than the static bucket range (e.g. exploding grads)
+    # degrade alpha instead of clamping into the edge buckets.
+    auto_collapse: bool = False
 
 
 class TelemetryState(NamedTuple):
@@ -93,7 +97,7 @@ def record(
         if values.size == 0:  # stream not produced (e.g. non-MoE router_load)
             continue
         sketches[name] = jax_sketch.add(
-            sketches[name], values, spec=tcfg.spec
+            sketches[name], values, spec=tcfg.spec, auto_collapse=tcfg.auto_collapse
         )
     return TelemetryState(sketches=sketches)
 

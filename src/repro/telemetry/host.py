@@ -11,13 +11,11 @@ operational claim.
 
 from __future__ import annotations
 
-import json
-import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core.ddsketch import DDSketch
-from repro.core.jax_sketch import BucketSpec, DeviceSketch, to_host
+from repro.core.jax_sketch import BucketSpec, to_host
 
 __all__ = ["WindowStats", "HostAggregator"]
 

@@ -7,14 +7,23 @@ This is the paper's multi-tenant setting (one sketch per endpoint / customer
   filled by a *single* segmented-histogram dispatch per ``record`` call no
   matter how many keys are live;
 * on the host, ``KeyedAggregator`` keeps one exact, unbounded ``DDSketch``
-  per key and merges flushed windows in (Algorithm 4), so any-horizon
-  rollups per key stay exact-after-merge.
+  per key and merges flushed windows in (Algorithm 4 — mixed collapse
+  levels included), so any-horizon rollups per key stay exact-after-merge.
 
 Key -> row assignment is a host-side dict (tracing never sees strings).
-When more distinct keys arrive than the bank has rows, the surplus collapses
-into the reserved ``OVERFLOW_KEY`` row — mirroring how the static bucket
-range collapses out-of-range values rather than failing, and keeping the
-device state shape static for jit.
+Rows are *recycled*: a key idle for ``evict_after`` or more consecutive
+whole windows is evicted at the next reset, its row returned to a free
+pool, so long-tailed key sets don't permanently exhaust capacity.  If the pool runs
+dry mid-window, surplus keys collapse into the reserved ``OVERFLOW_KEY``
+row — degrading gracefully while the device state shape stays static for
+jit.
+
+Resolution adapts per row (UDDSketch uniform collapse): after each
+``record`` the window auto-collapses rows whose clamped mass exceeded
+``collapse_threshold``, and the per-row levels *survive* window resets —
+a hot key that needed gamma^2 keeps it for the next window, so at most one
+window's tails are ever clamped.  ``levels()`` / ``alphas()`` report the
+per-key resolution; evicted rows reset to level 0 before reuse.
 """
 
 from __future__ import annotations
@@ -23,6 +32,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.core import jax_sketch
 from repro.core import sketch_bank as sbank
 from repro.core.ddsketch import DDSketch
 from repro.core.jax_sketch import BucketSpec
@@ -37,34 +47,59 @@ class KeyedWindow:
 
     ``capacity`` counts usable key rows; row 0 is reserved for
     ``OVERFLOW_KEY`` so an overfull window degrades gracefully instead of
-    raising mid-stream.
+    raising mid-stream.  ``collapse_threshold`` (float mass; None disables)
+    controls the post-record auto-collapse: the default 0.0 folds a row as
+    soon as *any* mass clamps (over- or underflow), trading up to half the
+    row's resolution for covering its true range — raise it if occasional
+    out-of-range outliers should be tolerated instead.  ``evict_after`` is
+    the idle-window count at which a key's row is reclaimed.
     """
 
-    def __init__(self, spec: BucketSpec, capacity: int, *, use_kernel: bool = False):
+    def __init__(
+        self,
+        spec: BucketSpec,
+        capacity: int,
+        *,
+        use_kernel: bool = False,
+        collapse_threshold: float | None = 0.0,
+        evict_after: int = 1,
+    ):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if evict_after < 1:
+            raise ValueError("evict_after must be >= 1")
         self.spec = spec
         self.capacity = capacity
         self.use_kernel = use_kernel
+        self.collapse_threshold = collapse_threshold
+        self.evict_after = evict_after
         self.key_to_row: dict[str, int] = {OVERFLOW_KEY: 0}
         self.bank = sbank.empty(spec, capacity + 1)
+        self._free = list(range(capacity, 0, -1))  # pop() hands out 1, 2, ...
+        self._last_seen: dict[str, int] = {}
+        self._window = 0
 
     # ------------------------------------------------------------------ #
     def row_id(self, key: str) -> int:
-        """Row for ``key``, allocating on first sight (overflow row if full)."""
+        """Row for ``key``, allocating from the free pool on first sight
+        (overflow row if the pool is dry)."""
         rid = self.key_to_row.get(key)
         if rid is None:
-            if len(self.key_to_row) > self.capacity:
+            if not self._free:
                 return 0  # bank full: collapse into the OVERFLOW_KEY row
-            rid = len(self.key_to_row)
+            rid = self._free.pop()
             self.key_to_row[key] = rid
+        if key != OVERFLOW_KEY:
+            self._last_seen[key] = self._window
         return rid
 
     def record(self, keys, values, weights=None) -> None:
         """Insert ``(key, value)`` pairs; one bank dispatch for the batch.
 
         ``keys`` is either a sequence of strings (one per value) or a single
-        string applied to every value.
+        string applied to every value.  Afterwards, rows whose inserts
+        clamped more than ``collapse_threshold`` mass fold once (uniform
+        collapse), so subsequent inserts land at the adapted resolution.
         """
         values = np.asarray(values, np.float32).reshape(-1)
         if isinstance(keys, str):
@@ -82,6 +117,13 @@ class KeyedWindow:
             spec=self.spec,
             use_kernel=self.use_kernel,
         )
+        if self.collapse_threshold is not None:
+            self.bank = sbank.auto_collapse(
+                self.bank,
+                spec=self.spec,
+                threshold=self.collapse_threshold,
+                use_kernel=self.use_kernel,
+            )
 
     # ------------------------------------------------------------------ #
     def quantiles(self, key: str, qs) -> list[float]:
@@ -90,21 +132,54 @@ class KeyedWindow:
         if rid is None:
             raise KeyError(f"no values recorded for key {key!r}")
         sub = sbank.row(self.bank, rid)
-        from repro.core import jax_sketch
-
         return [float(jax_sketch.quantile(sub, q, spec=self.spec)) for q in qs]
 
     def keys(self) -> list[str]:
         return [k for k in self.key_to_row if k != OVERFLOW_KEY]
 
+    def levels(self) -> dict[str, int]:
+        """Per-key uniform-collapse level (0 = full resolution)."""
+        lv = np.asarray(self.bank.level)
+        return {k: int(lv[r]) for k, r in self.key_to_row.items()}
+
+    def alphas(self) -> dict[str, float]:
+        """Per-key effective relative-error guarantee at the live level."""
+        return {
+            k: jax_sketch.effective_alpha(self.spec, lv)
+            for k, lv in self.levels().items()
+        }
+
     def reset(self) -> None:
-        """Start the next window (cheap: O(K*m) zeros; key map survives so
-        stable keys keep stable rows across windows)."""
-        self.bank = sbank.empty(self.spec, self.capacity + 1)
+        """Start the next window.
+
+        Cheap (O(K*m) zeros).  Keys idle for ``evict_after`` or more
+        whole windows are evicted — their rows rejoin the free pool at
+        level 0 — while live keys keep both their rows *and* their adapted
+        collapse levels, so stable hot keys stay stable across windows.
+        """
+        self._window += 1
+        levels = np.asarray(self.bank.level).copy()
+        for key in list(self.key_to_row):
+            if key == OVERFLOW_KEY:
+                continue
+            if self._window - self._last_seen.get(key, self._window) > self.evict_after:
+                rid = self.key_to_row.pop(key)
+                self._last_seen.pop(key, None)
+                self._free.append(rid)
+                levels[rid] = 0  # fresh tenants start at full resolution
+        self.bank = sbank.empty(self.spec, self.capacity + 1)._replace(
+            level=jnp.asarray(levels)
+        )
 
 
 class KeyedAggregator:
-    """Host-tier rollups: one exact DDSketch per key, merged across windows."""
+    """Host-tier rollups: one exact DDSketch per key, merged across windows.
+
+    Window rows arrive at whatever collapse level they adapted to; the
+    host-tier merge aligns mixed levels (collapsing the finer operand), so
+    per-key totals stay exact-after-merge and ``alphas()`` reports the
+    effective guarantee each rollup currently offers.
+    """
 
     def __init__(self, spec: BucketSpec):
         self.spec = spec
@@ -114,8 +189,9 @@ class KeyedAggregator:
     def flush(self, window: KeyedWindow) -> None:
         """Merge a device window into the per-key totals and reset it.
 
-        Lossless per row (same bucket geometry); Algorithm 4 makes the
-        per-key rollup exactly equal to a sketch that saw all the data.
+        Lossless per row (same bucket geometry at the row's level);
+        Algorithm 4 makes the per-key rollup exactly equal to a sketch that
+        saw all the data at the coarsest level the key ever reached.
         """
         counts = np.asarray(window.bank.counts)
         for key, rid in window.key_to_row.items():
@@ -131,6 +207,10 @@ class KeyedAggregator:
 
     def quantiles(self, key: str, qs) -> list[float]:
         return self.totals[key].quantiles(qs)
+
+    def alphas(self) -> dict[str, float]:
+        """Per-key effective relative-error guarantee of the rollups."""
+        return {k: sk.effective_alpha for k, sk in self.totals.items()}
 
     def keys(self) -> list[str]:
         return [k for k in self.totals if k != OVERFLOW_KEY]

@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import math
 from collections import deque
-from dataclasses import dataclass, field
 
 from repro.core.ddsketch import DDSketch
 

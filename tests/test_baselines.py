@@ -6,7 +6,6 @@ exactness — and the contrasts the paper draws (HDR bounded range raises;
 GK one-way merge degrades; Moments relative error blows up on heavy tails).
 """
 
-import math
 
 import numpy as np
 import pytest

@@ -1,10 +1,8 @@
 """Checkpointing: atomicity, keep-k, async, auto-resume, corruption safety."""
 
 import os
-import shutil
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ import pytest
 from _hypothesis_compat import assume, given, settings, st  # noqa: F401
 
 from repro.core.ddsketch import DDSketch
-from repro.core.oracle import exact_quantile, exact_quantiles, relative_error
+from repro.core.oracle import exact_quantile, relative_error
 
 ALPHA = 0.01
 

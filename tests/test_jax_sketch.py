@@ -64,7 +64,7 @@ def test_merge_is_elementwise_sum(rng):
     b = (rng.lognormal(0, 1, 1000)).astype(np.float32)
     sa = js.add(js.empty(SPEC), jnp.asarray(a), spec=SPEC)
     sb = js.add(js.empty(SPEC), jnp.asarray(b), spec=SPEC)
-    merged = js.merge(sa, sb)
+    merged = js.merge(sa, sb, spec=SPEC)
     both = js.add(sa, jnp.asarray(b), spec=SPEC)
     assert np.array_equal(np.asarray(merged.pos), np.asarray(both.pos))
     assert float(merged.count) == 2000
@@ -201,7 +201,7 @@ data = (rng.pareto(1.0, 8 * 500) + 1.0).astype(np.float32)
 
 def per_device(vals):  # vals: (500,) local shard
     sk = js.add(js.empty(SPEC), vals, spec=SPEC)
-    return js.allreduce(sk, "d")
+    return js.allreduce(sk, "d", spec=SPEC)
 
 fn = shard_map(per_device, mesh=mesh, in_specs=P("d"), out_specs=P(), check_vma=False)
 merged = jax.jit(fn)(jnp.asarray(data))

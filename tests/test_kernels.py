@@ -4,7 +4,6 @@ mappings, weights, and tile configurations (interpret mode on CPU)."""
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.ddsketch_hist import histogram_pallas

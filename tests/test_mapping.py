@@ -81,7 +81,8 @@ def test_interpolated_overheads():
     log_m = LogarithmicMapping(0.01)
     lin = LinearInterpolatedMapping(0.01)
     cub = CubicInterpolatedMapping(0.01)
-    span = lambda m: m.key(1e9) - m.key(1e-9)
+    def span(m):
+        return m.key(1e9) - m.key(1e-9)
     assert span(lin) / span(log_m) == pytest.approx(1 / math.log(2), rel=0.02)
     assert span(cub) / span(log_m) == pytest.approx(1.0, rel=0.02)
 

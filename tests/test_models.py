@@ -61,7 +61,7 @@ def test_smoke_forward_and_loss(arch):
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_train_step(arch):
     """One full train step (grads + AdamW + telemetry) on the 1-device mesh."""
-    from repro.launch.steps import StepConfig, _batch_shardings, build_train_step
+    from repro.launch.steps import StepConfig, build_train_step
     cfg = configs.smoke(arch)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     scfg = StepConfig(remat=False, ssm_chunk=16, q_block=32, warmup_steps=2,

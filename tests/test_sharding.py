@@ -3,10 +3,8 @@ multi-device steps for both profiles (subprocess, 8 fake devices)."""
 
 import pytest
 
-import jax
 from jax.sharding import PartitionSpec as P
 
-from repro import configs
 from repro.models.common import PSpec
 from repro.sharding import rules
 

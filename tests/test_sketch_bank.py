@@ -105,7 +105,7 @@ def test_bank_merge_is_elementwise_sum(rng):
         jnp.asarray(s[n // 2 :]),
         spec=SPEC,
     )
-    merged = sb.merge(b1, b2)
+    merged = sb.merge(b1, b2, spec=SPEC)
     both = sb.add(b1, jnp.asarray(x[n // 2 :]), jnp.asarray(s[n // 2 :]), spec=SPEC)
     np.testing.assert_array_equal(np.asarray(merged.pos), np.asarray(both.pos))
     np.testing.assert_array_equal(np.asarray(merged.neg), np.asarray(both.neg))
@@ -200,7 +200,7 @@ ids = rng.integers(0, K, 8 * 500).astype(np.int32)
 
 def per_device(vals, sids):  # local shards
     bank = sb.add(sb.empty(SPEC, K), vals, sids, spec=SPEC)
-    return sb.allreduce(bank, "d")
+    return sb.allreduce(bank, "d", spec=SPEC)
 
 fn = shard_map(per_device, mesh=mesh, in_specs=(P("d"), P("d")), out_specs=P(),
                check_vma=False)

@@ -1,6 +1,5 @@
 """Bucket stores: growth, collapse (Algorithm 3), merge (Algorithm 4)."""
 
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
@@ -8,7 +7,6 @@ from repro.core.store import (
     CollapsingHighestDenseStore,
     CollapsingLowestDenseStore,
     DenseStore,
-    SparseStore,
     make_store,
 )
 

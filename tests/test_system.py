@@ -1,18 +1,12 @@
 """End-to-end system behaviour: train loop with checkpoint/restart +
 preemption, elastic sketch merge, and the serving loop."""
 
-import os
-import signal
-
 import numpy as np
 import pytest
-
-import jax
 
 from repro import configs
 from repro.core.ddsketch import DDSketch
 from repro.launch.serve import Request, Server
-from repro.launch.steps import StepConfig
 from repro.launch.train import TrainLoop
 
 

@@ -1,7 +1,6 @@
 """Telemetry: device recorder, host aggregator rollups, keyed per-metric
 windows, watchdog guards."""
 
-import math
 
 import numpy as np
 import pytest
