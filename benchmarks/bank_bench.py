@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import jax_sketch as js
 from repro.core import sketch_bank as sb
+from repro.kernels import ops
 from repro.kernels.ref import BucketSpec
 
 
@@ -83,6 +84,60 @@ def bench_bank_insert(
                 "impl": "xla_ref",
             }
         )
+    return rows
+
+
+def bench_insert_methods(
+    configs=((1_000_000, 128, 4096), (200_000, 64, 2048)), iters: int = 3
+) -> list[dict]:
+    """Head-to-head matmul-histogram vs sort–reduce–scatter over (N, K, m).
+
+    The tentpole claim: the matmul formulation pays for every (row, bucket)
+    output tile per value — O(K·m·N) — while the ingest pipeline pays one
+    O(N log N) sort plus a scatter of U <= min(N, 2·K·m) compacted triples.
+    CPU wall-clock of the jit'd ref paths (``force="ref"``), which is what
+    the auto heuristic dispatches between off-TPU; the ``dup`` axis sweeps
+    the duplicate ratio — "high" concentrates the stream into a few hundred
+    live buckets per row (the post-collapse regime of UDDSketch streams),
+    "low" spreads it across the full bucket range.  ``live_buckets`` counts
+    distinct (row, bucket, sign) cells actually hit, so ``n / live_buckets``
+    is the measured duplicate ratio.
+    """
+    rows = []
+    for n, k, m in configs:
+        spec = BucketSpec(num_buckets=m, offset=-m // 2)
+        rng = np.random.default_rng(0)
+        ids = jnp.asarray(rng.integers(0, k, n).astype(np.int32))
+        for dup, decades in (("high", 1.3), ("low", 14.0)):
+            sgn = np.where(rng.random(n) < 0.3, -1.0, 1.0)
+            vals = jnp.asarray(
+                (10.0 ** rng.uniform(0.0, decades, n) * sgn).astype(np.float32)
+            )
+            pos, neg = ops.bank_histograms(
+                vals, ids, num_segments=k, spec=spec, method="matmul", force="ref"
+            )
+            live = int((np.asarray(pos) > 0).sum() + (np.asarray(neg) > 0).sum())
+            for method in ("matmul", "sort"):
+                fn = jax.jit(
+                    lambda v, s, method=method: ops.bank_histograms(
+                        v, s, num_segments=k, spec=spec, method=method, force="ref"
+                    )
+                )
+                secs = _time(fn, vals, ids, iters=iters)
+                rows.append(
+                    {
+                        "bench": "insert_methods",
+                        "n": n,
+                        "K": k,
+                        "m": m,
+                        "dup": dup,
+                        "live_buckets": live,
+                        "method": method,
+                        "ms": round(secs * 1e3, 3),
+                        "mvals_per_s": round(n / secs / 1e6, 1),
+                        "impl": "xla_ref",
+                    }
+                )
     return rows
 
 
@@ -150,7 +205,7 @@ def bench_collapse_insert(n: int = 200_000, iters: int = 5) -> list[dict]:
 
 
 def bench_bank_quantiles(k: int = 4096, n: int = 500_000, iters: int = 10) -> list[dict]:
-    """Vectorized Algorithm 2 over all K rows at once (single query pass)."""
+    """Fused Algorithm 2 over all K rows and all qs (single query pass)."""
     spec = BucketSpec()
     rng = np.random.default_rng(0)
     values = jnp.asarray((rng.pareto(1.0, n) + 1.0).astype(np.float32))
@@ -168,6 +223,6 @@ def bench_bank_quantiles(k: int = 4096, n: int = 500_000, iters: int = 10) -> li
             "qs": 3,
             "ms_per_query_pass": round(secs * 1e3, 3),
             "us_per_sketch": round(secs / k * 1e6, 3),
-            "impl": "device_searchsorted",
+            "impl": "fused_cumsum_searchsorted",
         }
     ]

@@ -1,0 +1,160 @@
+"""Perf-trajectory regression gate: compare two ``run.py --json`` files.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.compare BENCH_baseline.json NEW.json \
+      --factor 2.0
+
+Rows are matched within each bench by their identity fields (every
+non-timing field: sizes, method, dup ratio, impl tag, ...); timing fields
+are any key carrying a unit token (``ms`` / ``us`` / ``ns``), normalized to
+milliseconds.  A row regresses when a timing grows by more than ``factor``
+vs the committed baseline.
+
+CI runners are not the machine the baseline was measured on, so by default
+the candidate is first *calibrated*: every ratio is divided by the median
+ratio across all compared timings.  A uniformly slower machine then sits at
+1.0 and only benches that regressed relative to the rest of the suite trip
+the gate (``--no-calibrate`` compares raw wall-clock).  Absolute timings
+below ``--min-ms`` in the baseline are noise-dominated and skipped —
+per-element metrics (``*_per_*`` keys: ns_per_value, us_per_query, ...)
+are averages over long timed runs, so they are always compared no matter
+how small; benches contributing zero compared timings are called out.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_UNIT_MS = {"ms": 1.0, "us": 1e-3, "ns": 1e-6}
+
+# measured outputs (as opposed to configuration): they drift with the code
+# under test, so keying row identity on them would silently unmatch rows
+# and let regressions slip past the gate
+_MEASURED_FIELDS = {"live_buckets", "speedup", "loop_measured_K"}
+
+
+def _timing_unit(key: str) -> float | None:
+    for tok in key.split("_"):
+        if tok in _UNIT_MS:
+            return _UNIT_MS[tok]
+    return None
+
+
+def _identity(row: dict) -> tuple:
+    return tuple(
+        sorted(
+            (k, v)
+            for k, v in row.items()
+            if _timing_unit(k) is None
+            and k not in _MEASURED_FIELDS
+            and isinstance(v, (str, int, bool))
+        )
+    )
+
+
+def compare(
+    baseline: dict,
+    candidate: dict,
+    *,
+    factor: float = 2.0,
+    min_ms: float = 0.05,
+    calibrate: bool = True,
+) -> tuple[list[str], list[str]]:
+    """Return (regressions, notes); empty regressions == gate passes."""
+    pairs = []  # (label, base_ms, cand_ms)
+    unmatched = 0
+    uncovered: list[str] = []
+    for bench, base_rows in baseline.items():
+        cand_rows = {_identity(r): r for r in candidate.get(bench, [])}
+        covered = 0
+        for row in base_rows:
+            other = cand_rows.get(_identity(row))
+            if other is None:
+                unmatched += 1
+                continue
+            for key, val in row.items():
+                unit = _timing_unit(key)
+                if unit is None or not isinstance(val, (int, float)):
+                    continue
+                new = other.get(key)
+                if not isinstance(new, (int, float)):
+                    continue
+                base_ms, new_ms = val * unit, new * unit
+                if base_ms <= 0:
+                    continue
+                # per-element metrics are averages over long runs, not
+                # noise: exempt them from the absolute-timing cutoff
+                if base_ms < min_ms and "_per_" not in key:
+                    continue
+                label = f"{bench} {dict(_identity(row))} {key}"
+                pairs.append((label, base_ms, new_ms))
+                covered += 1
+        if base_rows and not covered:
+            uncovered.append(bench)
+    notes: list[str] = []
+    if unmatched:
+        notes.append(
+            f"{unmatched} baseline row(s) had no candidate match (renamed or "
+            "reconfigured benches?) and were skipped"
+        )
+    if uncovered:
+        notes.append(
+            "benches with NO compared timings (gate blind spots): "
+            + ", ".join(sorted(uncovered))
+        )
+    if not pairs:
+        notes.append("no comparable timings found (new bench set?); gate passes")
+        return [], notes
+    ratios = sorted(new / base for _, base, new in pairs)
+    median = ratios[len(ratios) // 2]
+    scale = median if calibrate and median > 0 else 1.0
+    if calibrate:
+        notes.append(
+            f"machine calibration: median ratio {median:.2f}x across "
+            f"{len(pairs)} timings (ratios divided by it)"
+        )
+    regressions = []
+    for label, base_ms, new_ms in pairs:
+        ratio = (new_ms / base_ms) / scale
+        if ratio > factor:
+            regressions.append(
+                f"{label}: {base_ms:.3f} ms -> {new_ms:.3f} ms "
+                f"({ratio:.2f}x calibrated, factor {factor}x)"
+            )
+    return regressions, notes
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("baseline")
+    p.add_argument("candidate")
+    p.add_argument("--factor", type=float, default=2.0)
+    p.add_argument("--min-ms", type=float, default=0.05)
+    p.add_argument("--no-calibrate", action="store_true",
+                   help="compare raw wall-clock (same-machine runs only)")
+    args = p.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+    regressions, notes = compare(
+        baseline,
+        candidate,
+        factor=args.factor,
+        min_ms=args.min_ms,
+        calibrate=not args.no_calibrate,
+    )
+    for note in notes:
+        print(f"[compare] {note}")
+    if regressions:
+        print(f"[compare] {len(regressions)} regression(s) over {args.factor}x:")
+        for r in regressions:
+            print(f"[compare]   {r}")
+        sys.exit(1)
+    print("[compare] no regressions; perf trajectory holds")
+
+
+if __name__ == "__main__":
+    main()

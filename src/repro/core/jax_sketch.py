@@ -56,7 +56,6 @@ from repro.kernels.ref import (
     BucketSpec,
     approx_log2,
     fold_pairs_ref,
-    histogram_ref,
     shift_key,
 )
 
@@ -79,6 +78,24 @@ __all__ = [
     "bucket_value_table",
     "effective_alpha",
 ]
+
+
+def _counts_dtype(counts_dtype) -> jnp.dtype:
+    """Validate a requested counter dtype against the live jax config.
+
+    With ``jax_enable_x64`` off (the default) jax silently canonicalizes
+    int64 -> int32; for a *counter* dtype that would silently halve the
+    advertised headroom and wrap past ~2.1e9 — so refuse rather than
+    degrade."""
+    requested = jnp.dtype(counts_dtype)
+    resolved = jax.dtypes.canonicalize_dtype(requested)
+    if resolved != requested:
+        raise ValueError(
+            f"counts_dtype={requested} resolves to {resolved} under the "
+            "current jax config; enable jax_enable_x64 for 64-bit counters "
+            "or request int32 explicitly"
+        )
+    return resolved
 
 
 class DeviceSketch(NamedTuple):
@@ -106,14 +123,23 @@ class DeviceSketch(NamedTuple):
         return self.pos.sum() + self.neg.sum() + self.zero
 
 
-def empty(spec: BucketSpec) -> DeviceSketch:
+def empty(spec: BucketSpec, counts_dtype=jnp.float32) -> DeviceSketch:
+    """Fresh sketch state.  ``counts_dtype`` is the bucket/counter dtype:
+    float32 (default) is exact to 2^24 per window; int32/int64 raise that
+    ceiling for long-horizon on-device accumulation (integer weights
+    assumed — fractional weights truncate on accumulate).  Per-``add``
+    batch histograms stay float32 (exact to 2^24 per call); the accumulator
+    is what crosses the ceiling.  int64 requires ``jax_enable_x64`` (raises
+    otherwise rather than silently degrading to int32).  ``summ`` and the
+    extrema stay float32 either way."""
     m = spec.num_buckets
+    cd = _counts_dtype(counts_dtype)
     return DeviceSketch(
-        pos=jnp.zeros(m, jnp.float32),
-        neg=jnp.zeros(m, jnp.float32),
-        zero=jnp.zeros((), jnp.float32),
-        overflow=jnp.zeros((), jnp.float32),
-        underflow=jnp.zeros((), jnp.float32),
+        pos=jnp.zeros(m, cd),
+        neg=jnp.zeros(m, cd),
+        zero=jnp.zeros((), cd),
+        overflow=jnp.zeros((), cd),
+        underflow=jnp.zeros((), cd),
         summ=jnp.zeros((), jnp.float32),
         vmin=jnp.asarray(jnp.inf, jnp.float32),
         vmax=jnp.asarray(-jnp.inf, jnp.float32),
@@ -131,12 +157,21 @@ def effective_alpha(spec: BucketSpec, level: int) -> float:
     return (g - 1.0) / (g + 1.0)
 
 
-def _histogram(values, weights, levels, spec: BucketSpec, use_kernel: bool):
-    if use_kernel:
-        from repro.kernels import ops
+def _bank_histograms(values, weights, levels, spec, use_kernel, method):
+    """Both sign stores via the ops front door (matmul vs sort–scatter)."""
+    from repro.kernels import ops
 
-        return ops.ddsketch_histogram(values, weights, levels, spec=spec)
-    return histogram_ref(values, weights, levels, spec=spec)
+    pos, neg = ops.bank_histograms(
+        values,
+        None,
+        weights,
+        levels,
+        num_segments=1,
+        spec=spec,
+        method=method,
+        force=None if use_kernel else "ref",
+    )
+    return pos[0], neg[0]
 
 
 def _raw_keys(x: jnp.ndarray, valid: jnp.ndarray, spec: BucketSpec) -> jnp.ndarray:
@@ -162,7 +197,7 @@ def _needed_levels(k0: jnp.ndarray, spec: BucketSpec) -> jnp.ndarray:
     return jnp.where(fits.any(axis=1), first, 0)
 
 
-@partial(jax.jit, static_argnames=("spec", "use_kernel", "auto_collapse"))
+@partial(jax.jit, static_argnames=("spec", "use_kernel", "auto_collapse", "method"))
 def add(
     sketch: DeviceSketch,
     values: jnp.ndarray,
@@ -171,6 +206,7 @@ def add(
     spec: BucketSpec,
     use_kernel: bool = False,
     auto_collapse: bool = False,
+    method: str | None = None,
 ) -> DeviceSketch:
     """Vectorized Algorithm 1 over a batch of values (any shape).
 
@@ -180,10 +216,14 @@ def add(
     value is indexable (capped at ``MAX_COLLAPSE_LEVEL``), so nothing is
     clamped and the level-adjusted alpha guarantee holds for the whole
     stream; without it, out-of-range keys clamp into the edge buckets and
-    are tallied in ``overflow`` / ``underflow``.
+    are tallied in ``overflow`` / ``underflow``.  ``method`` pins the insert
+    pipeline (``"matmul"`` / ``"sort"``; None auto-selects from the batch
+    and geometry sizes — see ``kernels.ops.bank_histograms``); both produce
+    identical bucket counts.
     """
     x = values.reshape(-1).astype(jnp.float32)
-    w = jnp.ones_like(x) if weights is None else weights.reshape(-1).astype(jnp.float32)
+    raw_w = None if weights is None else weights.reshape(-1).astype(jnp.float32)
+    w = jnp.ones_like(x) if raw_w is None else raw_w
     finite = jnp.isfinite(x)
     w = jnp.where(finite, w, 0.0)
 
@@ -199,8 +239,7 @@ def add(
     lev = sketch.level
     shifts = jnp.broadcast_to(lev, x.shape)
 
-    pos_hist = _histogram(jnp.where(is_pos, x, -1.0), w, shifts, spec, use_kernel)
-    neg_hist = _histogram(jnp.where(is_neg, -x, -1.0), w, shifts, spec, use_kernel)
+    pos_hist, neg_hist = _bank_histograms(x, raw_w, shifts, spec, use_kernel, method)
 
     # clamp accounting: shifted keys that escape [offset, offset + m - 1]
     top_key = spec.offset + spec.num_buckets - 1
@@ -214,12 +253,13 @@ def add(
     xmasked = jnp.where(finite & (w > 0), x, -jnp.inf)
     vmax = jnp.maximum(sketch.vmax, jnp.where(any_valid, xmasked.max(), -jnp.inf))
 
+    cd = sketch.pos.dtype
     return DeviceSketch(
-        pos=sketch.pos + pos_hist,
-        neg=sketch.neg + neg_hist,
-        zero=sketch.zero + (w * is_zero).sum(),
-        overflow=sketch.overflow + (w * over).sum(),
-        underflow=sketch.underflow + (w * under).sum(),
+        pos=sketch.pos + pos_hist.astype(cd),
+        neg=sketch.neg + neg_hist.astype(cd),
+        zero=sketch.zero + (w * is_zero).sum().astype(cd),
+        overflow=sketch.overflow + (w * over).sum().astype(cd),
+        underflow=sketch.underflow + (w * under).sum().astype(cd),
         summ=sketch.summ + (w * jnp.where(finite, x, 0.0)).sum(),
         vmin=vmin,
         vmax=vmax,
@@ -231,7 +271,10 @@ def add(
 # uniform collapse (UDDSketch): resolution as a dynamic property
 # --------------------------------------------------------------------- #
 def _fold(counts, spec: BucketSpec, use_kernel: bool):
-    if use_kernel:
+    # integer-count banks always fold on the exact XLA path: the Pallas fold
+    # accumulates in float32, which would silently round counts above 2^24 —
+    # the very regime integer counts_dtype exists for.
+    if use_kernel and counts.dtype == jnp.float32:
         from repro.kernels import ops
 
         return ops.fold_pairs(counts, spec=spec)
@@ -389,7 +432,7 @@ def quantile(sketch: DeviceSketch, q, *, spec: BucketSpec) -> jnp.ndarray:
     line_vals = jnp.concatenate([-vals[::-1], jnp.zeros((1,), jnp.float32), vals])
     line_counts = jnp.concatenate(
         [sketch.neg[::-1], sketch.zero[None], sketch.pos]
-    )
+    ).astype(jnp.float32)  # integer counts_dtype: rank math stays f32
     n = line_counts.sum()
     qf = jnp.asarray(q, jnp.float32)
     rank = qf * jnp.maximum(n - 1.0, 0.0)
@@ -440,15 +483,19 @@ def to_host(sketch: DeviceSketch, spec: BucketSpec) -> DDSketch:
     return host
 
 
-def from_host(host: DDSketch, spec: BucketSpec) -> DeviceSketch:
+def from_host(
+    host: DDSketch, spec: BucketSpec, counts_dtype=jnp.float32
+) -> DeviceSketch:
     """Load host-sketch counts into device geometry (keys clamp into range).
 
     The host's ``collapse_level`` becomes the device level; store keys are
     already level-keys on both tiers, so in-range keys round-trip
-    bit-exactly.  The host tier has no level cap, so a host sketch beyond
-    ``MAX_COLLAPSE_LEVEL`` cannot be represented on device — reinterpreting
-    its keys at a lower level would silently corrupt every bucket, so this
-    raises instead.
+    bit-exactly.  ``counts_dtype`` restores into a chosen counter dtype
+    (host counts are exact int64 — an int32/int64 device target keeps them
+    exact past float32's 2^24 ceiling).  The host tier has no level cap, so
+    a host sketch beyond ``MAX_COLLAPSE_LEVEL`` cannot be represented on
+    device — reinterpreting its keys at a lower level would silently
+    corrupt every bucket, so this raises instead.
     """
     if int(host.collapse_level) > MAX_COLLAPSE_LEVEL:
         raise ValueError(
@@ -456,18 +503,19 @@ def from_host(host: DDSketch, spec: BucketSpec) -> DeviceSketch:
             f"the device cap MAX_COLLAPSE_LEVEL={MAX_COLLAPSE_LEVEL}; its "
             "level-keys cannot be represented in device geometry"
         )
-    sk = empty(spec)
+    cd = _counts_dtype(counts_dtype)
+    sk = empty(spec, counts_dtype=cd)
     level = int(host.collapse_level)
-    pos = np.zeros(spec.num_buckets, np.float32)
-    neg = np.zeros(spec.num_buckets, np.float32)
+    pos = np.zeros(spec.num_buckets, np.float64)
+    neg = np.zeros(spec.num_buckets, np.float64)
     for key, cnt in host.store.items_ascending():
         pos[np.clip(key - spec.offset, 0, spec.num_buckets - 1)] += cnt
     for key, cnt in host.negative_store.items_ascending():
         neg[np.clip(key - spec.offset, 0, spec.num_buckets - 1)] += cnt
     return DeviceSketch(
-        pos=jnp.asarray(pos),
-        neg=jnp.asarray(neg),
-        zero=jnp.asarray(float(host.zero_count), jnp.float32),
+        pos=jnp.asarray(pos, cd),
+        neg=jnp.asarray(neg, cd),
+        zero=jnp.asarray(host.zero_count, cd),
         overflow=sk.overflow,
         underflow=sk.underflow,
         summ=jnp.asarray(float(host.sum), jnp.float32),

@@ -5,14 +5,18 @@ endpoint, per customer, per host).  Because DDSketch bucket boundaries are
 data-independent, a bank of K fixed-geometry sketches is just a dense
 ``(K, m)`` array, and inserting a stream of ``(value, sketch_id)`` pairs is a
 *segmented* histogram — one kernel/ref dispatch regardless of K, instead of
-K launches of ``jax_sketch.add``.  Everything else the single sketch enjoys
-lifts row-wise:
+K launches of ``jax_sketch.add``.  Large batches take the sort–reduce–
+scatter ingest pipeline instead (compact duplicate ``(row, bucket)`` keys
+on device, then scatter U <= min(N, 2·K·m) unique triples), so insert cost
+stops growing multiplicatively with the bank size; ``add(..., method=...)``
+pins a pipeline.  Everything else the single sketch enjoys lifts row-wise:
 
 * ``merge`` / ``allreduce`` stay per-bucket '+' (Algorithm 4) after the
   rows align their collapse levels, now over ``(K, m)`` — the bank is
   psum-able exactly like one sketch;
-* ``quantiles`` runs Algorithm 2 vectorized over all K rows at once (one
-  cumsum + searchsorted over a (K, 2m+1) value line, no Python loop);
+* ``quantiles`` runs Algorithm 2 fused over all K rows *and* all qs at once
+  (each row tile builds its (2m+1) value line and cumsum once — the Pallas
+  ``bank_quantiles`` kernel on TPU, its XLA twin elsewhere);
 * ``row`` / ``to_host`` / ``from_host`` move single rows across tiers
   losslessly (same bucket geometry as ``DeviceSketch``);
 * **resolution is per-row**: each row carries its own uniform-collapse
@@ -40,7 +44,6 @@ from repro.core.jax_sketch import DeviceSketch
 from repro.kernels.ref import (
     MAX_COLLAPSE_LEVEL,
     BucketSpec,
-    segment_histogram_ref,
     shift_key,
 )
 
@@ -89,14 +92,20 @@ class SketchBank(NamedTuple):
         return self.pos.sum(axis=1) + self.neg.sum(axis=1) + self.zero
 
 
-def empty(spec: BucketSpec, num_sketches: int) -> SketchBank:
+def empty(spec: BucketSpec, num_sketches: int, counts_dtype=jnp.float32) -> SketchBank:
+    """Fresh bank state.  ``counts_dtype`` is the bucket/counter dtype:
+    float32 (default) is exact to 2^24 per window; int32/int64 raise that
+    ceiling for long-horizon on-device accumulation (integer weights
+    assumed; int64 requires ``jax_enable_x64`` — raises otherwise).
+    ``summ`` and the extrema stay float32 either way."""
     k, m = num_sketches, spec.num_buckets
+    cd = jax_sketch._counts_dtype(counts_dtype)
     return SketchBank(
-        pos=jnp.zeros((k, m), jnp.float32),
-        neg=jnp.zeros((k, m), jnp.float32),
-        zero=jnp.zeros(k, jnp.float32),
-        overflow=jnp.zeros(k, jnp.float32),
-        underflow=jnp.zeros(k, jnp.float32),
+        pos=jnp.zeros((k, m), cd),
+        neg=jnp.zeros((k, m), cd),
+        zero=jnp.zeros(k, cd),
+        overflow=jnp.zeros(k, cd),
+        underflow=jnp.zeros(k, cd),
         summ=jnp.zeros(k, jnp.float32),
         vmin=jnp.full(k, jnp.inf, jnp.float32),
         vmax=jnp.full(k, -jnp.inf, jnp.float32),
@@ -104,19 +113,7 @@ def empty(spec: BucketSpec, num_sketches: int) -> SketchBank:
     )
 
 
-def _segment_histogram(values, segment_ids, weights, levels, k, spec, use_kernel):
-    if use_kernel:
-        from repro.kernels import ops
-
-        return ops.segment_histogram(
-            values, segment_ids, weights, levels, num_segments=k, spec=spec
-        )
-    return segment_histogram_ref(
-        values, segment_ids, weights, levels, num_segments=k, spec=spec
-    )
-
-
-@partial(jax.jit, static_argnames=("spec", "use_kernel", "auto_collapse"))
+@partial(jax.jit, static_argnames=("spec", "use_kernel", "auto_collapse", "method"))
 def add(
     bank: SketchBank,
     values: jnp.ndarray,
@@ -126,21 +123,32 @@ def add(
     spec: BucketSpec,
     use_kernel: bool = False,
     auto_collapse: bool = False,
+    method: str | None = None,
 ) -> SketchBank:
     """Vectorized Algorithm 1 over ``(value, sketch_id)`` pairs (any shape).
 
-    One segmented-histogram dispatch updates all K rows; there is no Python
-    loop over sketches anywhere.  Non-finite values and out-of-range ids are
+    One bank-histogram dispatch updates all K rows; there is no Python loop
+    over sketches anywhere.  Non-finite values and out-of-range ids are
     ignored; positive / negative / near-zero routing matches
     ``jax_sketch.add`` exactly.  Each value is keyed at its *row's* collapse
     level (per-value levels gathered once, outside the kernel).  With
     ``auto_collapse=True`` every touched row first collapses to the smallest
     level at which all of its batch values are indexable, so nothing clamps.
+
+    ``method`` pins the insert pipeline: ``"matmul"`` runs the segmented
+    one-hot histogram per sign, ``"sort"`` compacts a combined composite-key
+    stream (sort–reduce) and scatters U <= min(N, 2·K·m) unique triples —
+    the input-stationary path whose cost stops growing with the bank size.
+    ``None`` auto-selects from (N, K, m); both pipelines produce identical
+    counts — bit-for-bit except fractional float weights on the Pallas sort
+    path, where duplicate-key accumulation order differs (see
+    ``kernels.ops.bank_histograms``).
     """
     k = bank.num_sketches
     x = values.reshape(-1).astype(jnp.float32)
     s = sketch_ids.reshape(-1).astype(jnp.int32)
-    w = jnp.ones_like(x) if weights is None else weights.reshape(-1).astype(jnp.float32)
+    raw_w = None if weights is None else weights.reshape(-1).astype(jnp.float32)
+    w = jnp.ones_like(x) if raw_w is None else raw_w
     valid = jnp.isfinite(x) & (s >= 0) & (s < k)
     w = jnp.where(valid, w, 0.0)
     sc = jnp.clip(s, 0, k - 1)  # safe ids; invalid lanes carry zero weight
@@ -157,11 +165,17 @@ def add(
         bank = collapse_to(bank, target, spec=spec)
     shifts = bank.level[sc]  # per-value levels for the segmented kernels
 
-    pos_hist = _segment_histogram(
-        jnp.where(is_pos, x, -1.0), s, w, shifts, k, spec, use_kernel
-    )
-    neg_hist = _segment_histogram(
-        jnp.where(is_neg, -x, -1.0), s, w, shifts, k, spec, use_kernel
+    from repro.kernels import ops
+
+    pos_hist, neg_hist = ops.bank_histograms(
+        x,
+        s,
+        raw_w,
+        shifts,
+        num_segments=k,
+        spec=spec,
+        method=method,
+        force=None if use_kernel else "ref",
     )
 
     # clamp accounting: shifted keys that escape [offset, offset + m - 1]
@@ -180,12 +194,13 @@ def add(
         jnp.where(contributes, x, -jnp.inf), sc, num_segments=k
     )
 
+    cd = bank.pos.dtype
     return SketchBank(
-        pos=bank.pos + pos_hist,
-        neg=bank.neg + neg_hist,
-        zero=bank.zero + seg_sum(w * is_zero, sc),
-        overflow=bank.overflow + seg_sum(w * over, sc),
-        underflow=bank.underflow + seg_sum(w * under, sc),
+        pos=bank.pos + pos_hist.astype(cd),
+        neg=bank.neg + neg_hist.astype(cd),
+        zero=bank.zero + seg_sum(w * is_zero, sc).astype(cd),
+        overflow=bank.overflow + seg_sum(w * over, sc).astype(cd),
+        underflow=bank.underflow + seg_sum(w * under, sc).astype(cd),
         summ=bank.summ + seg_sum(wx, sc),
         vmin=jnp.minimum(bank.vmin, vmin_new),
         vmax=jnp.maximum(bank.vmax, vmax_new),
@@ -332,41 +347,63 @@ def to_host(bank: SketchBank, spec: BucketSpec, k: int) -> DDSketch:
     return jax_sketch.to_host(row(bank, k), spec)
 
 
-def from_host(hosts: Sequence[DDSketch], spec: BucketSpec) -> SketchBank:
+def from_host(
+    hosts: Sequence[DDSketch], spec: BucketSpec, counts_dtype=jnp.float32
+) -> SketchBank:
     """Stack host sketches into a bank, one per row (keys clamp into range).
 
     Like ``jax_sketch.from_host``, the device-only ``overflow`` /
     ``underflow`` counters have no host-tier equivalent and restart at zero;
     per-row levels come from each host's ``collapse_level``.
+    ``counts_dtype`` restores counts into a chosen counter dtype (int32 /
+    int64 keep exact host counts past float32's 2^24 ceiling).
     """
-    rows = [jax_sketch.from_host(h, spec) for h in hosts]
+    rows = [jax_sketch.from_host(h, spec, counts_dtype=counts_dtype) for h in hosts]
     if not rows:
-        return empty(spec, 0)
+        return empty(spec, 0, counts_dtype=counts_dtype)
     return SketchBank(*(jnp.stack(f) for f in zip(*rows)))
 
 
 # --------------------------------------------------------------------- #
-# queries: Algorithm 2 vectorized over all K rows at once
+# queries: Algorithm 2 fused over all K rows and all qs at once
 # --------------------------------------------------------------------- #
-@partial(jax.jit, static_argnames=("spec",))
-def quantiles(bank: SketchBank, qs: jnp.ndarray, *, spec: BucketSpec) -> jnp.ndarray:
+@partial(jax.jit, static_argnames=("spec", "use_kernel"))
+def quantiles(
+    bank: SketchBank,
+    qs: jnp.ndarray,
+    *,
+    spec: BucketSpec,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
     """Per-row quantile estimates, shape ``(K, len(qs))``.
 
-    ``jax_sketch.quantile`` (Algorithm 2 as one cumsum + searchsorted over
-    the concatenated neg/zero/pos value line, at each row's own collapse
-    level) vmapped over the K rows — a single batched pass, no Python loop
-    over rows or qs, and bit-identical semantics to querying each row as a
-    standalone DeviceSketch.  All-empty rows answer NaN, matching
-    ``jax_sketch.quantile`` on an empty sketch.
+    The fused bank query (``kernels.ops.bank_quantiles``): each row tile
+    materializes its ``(2m+1)`` neg/zero/pos value line and cumulative
+    counts *once* and answers every q off that cumsum — no per-(row, q)
+    rebuilds, no Python loop anywhere.  Bit-identical to querying each row
+    as a standalone DeviceSketch at its own collapse level; all-empty rows
+    answer NaN.  ``use_kernel=True`` routes to the Pallas row-tile kernel
+    (TPU; elsewhere it falls back to the fused XLA twin).
     """
     qf = jnp.atleast_1d(jnp.asarray(qs, jnp.float32))
-    rows_as_sketch = DeviceSketch(*bank)  # leading axis K on every leaf
-    return jax.vmap(
-        lambda sk: jax_sketch.quantiles(sk, qf, spec=spec)
-    )(rows_as_sketch)
+    from repro.kernels import ops
+
+    return ops.bank_quantiles(
+        bank.pos,
+        bank.neg,
+        bank.zero,
+        bank.vmin,
+        bank.vmax,
+        bank.level,
+        qf,
+        spec=spec,
+        force=None if use_kernel else "ref",
+    )
 
 
-@partial(jax.jit, static_argnames=("spec",))
-def quantile(bank: SketchBank, q, *, spec: BucketSpec) -> jnp.ndarray:
+@partial(jax.jit, static_argnames=("spec", "use_kernel"))
+def quantile(
+    bank: SketchBank, q, *, spec: BucketSpec, use_kernel: bool = False
+) -> jnp.ndarray:
     """One quantile for every row, shape ``(K,)`` (NaN for empty rows)."""
-    return quantiles(bank, jnp.asarray([q]), spec=spec)[:, 0]
+    return quantiles(bank, jnp.asarray([q]), spec=spec, use_kernel=use_kernel)[:, 0]

@@ -5,20 +5,31 @@ UDDSketch uniform-collapse fold, TPU-native:
 
 * ``ddsketch_hist``     — single-sketch histogram insert,
 * ``ddsketch_seg_hist`` — segmented insert for a bank of K sketches,
+* ``ddsketch_scatter``  — input-stationary scatter over compacted triples
+  (the back end of the sort–reduce–scatter ingest pipeline),
+* ``bank_quantiles``    — fused cumsum + searchsorted bank query,
 * ``fold_pairs``        — uniform-collapse resolution fold (gamma -> gamma^2),
 * ``ref``               — pure-jnp semantic oracles / XLA fallback,
-* ``ops``               — backend dispatch (``force=`` pins a path).
+* ``ops``               — backend dispatch (``force=`` pins a path,
+  ``method=`` pins an insert pipeline).
 """
 
 from repro.kernels.ops import (  # noqa: F401
     BucketSpec,
+    bank_histograms,
+    bank_quantiles,
     ddsketch_histogram,
+    ddsketch_scatter,
     fold_pairs,
+    insert_method,
     segment_histogram,
 )
 from repro.kernels.ref import (  # noqa: F401
     MAX_COLLAPSE_LEVEL,
+    bank_quantiles_ref,
+    compact_triples,
     fold_pairs_ref,
     histogram_ref,
+    scatter_histogram_ref,
     segment_histogram_ref,
 )

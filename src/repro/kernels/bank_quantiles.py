@@ -1,0 +1,110 @@
+"""Pallas TPU kernel for the fused bank quantile query (Algorithm 2, batched).
+
+The read side of the multi-tenant bank: answer Q quantiles for all K rows in
+one launch.  The vmapped formulation rebuilt each row's ``(2m+1)``-lane
+value line and cumulative counts once per (row, q) pair; here the grid runs
+over row tiles, each step materializes the line and its cumsum *once* in
+VMEM, and every q is answered off that cumsum with a lane-wise
+compare-and-count (``#{cum <= rank}`` == right-searchsorted) plus a one-hot
+value select — no gathers, no per-q rebuilds.
+
+Per-row collapse levels select the bucket-value row from the trace-time
+``(MAX_COLLAPSE_LEVEL + 1, m)`` table with a level one-hot, so mixed-level
+banks query correctly in a single pass.
+
+Grid = (row_tiles,); VMEM per step (defaults TR=8, m=2048, Q<=8, f32):
+  pos+neg (TR, m) 128 KiB + table 56 KiB + line/cumsum (TR, 2m+1) 256 KiB
+  << 16 MiB.
+
+Bit-identical to ``ref.bank_quantiles_ref`` (they share the formulation in
+``ref._bank_quantiles_math``); validated in interpret mode across mappings,
+levels, weights, and row tiles in ``tests/test_bank_quantiles_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import _bank_quantiles_math
+
+__all__ = ["bank_quantiles_pallas"]
+
+
+def _bankq_kernel(pos_ref, neg_ref, zero_ref, vmin_ref, vmax_ref, lev_ref,
+                  q_ref, table_ref, out_ref):
+    out_ref[...] = _bank_quantiles_math(
+        pos_ref[...],  # (TR, m)
+        neg_ref[...],  # (TR, m)
+        zero_ref[...],  # (TR, 1)
+        vmin_ref[...],  # (TR, 1)
+        vmax_ref[...],  # (TR, 1)
+        lev_ref[...],  # (TR, 1) int32
+        q_ref[...],  # (1, Q)
+        table_ref[...],  # (L+1, m)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
+def bank_quantiles_pallas(
+    pos: jnp.ndarray,
+    neg: jnp.ndarray,
+    zero: jnp.ndarray,
+    vmin: jnp.ndarray,
+    vmax: jnp.ndarray,
+    level: jnp.ndarray,
+    qs: jnp.ndarray,
+    table: jnp.ndarray,
+    *,
+    row_tile: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Per-row quantile estimates ``(K, len(qs))`` in one launch.
+
+    Matches ``ref.bank_quantiles_ref`` bit-for-bit (empty rows answer NaN,
+    extremes answer vmin/vmax exactly).  Rows are padded to a ``row_tile``
+    multiple internally (pad rows are empty -> NaN) and sliced off.
+    """
+    k, m = pos.shape
+    qf = jnp.atleast_1d(jnp.asarray(qs, jnp.float32)).reshape(1, -1)
+    nq = qf.shape[1]
+    if k == 0:
+        return jnp.zeros((0, nq), jnp.float32)
+    rows_padded = k + ((-k) % row_tile)
+    pad = rows_padded - k
+
+    def rows(a, fill=0.0):
+        a = a.astype(jnp.float32).reshape(k, -1)
+        return jnp.pad(a, ((0, pad), (0, 0)), constant_values=fill)
+
+    nr = rows_padded // row_tile
+    out = pl.pallas_call(
+        _bankq_kernel,
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((row_tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, nq), lambda i: (0, 0)),
+            pl.BlockSpec(table.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, nq), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_padded, nq), jnp.float32),
+        interpret=interpret,
+    )(
+        rows(pos),
+        rows(neg),
+        rows(zero),
+        rows(vmin, fill=jnp.inf),
+        rows(vmax, fill=-jnp.inf),
+        jnp.pad(level.astype(jnp.int32).reshape(k, 1), ((0, pad), (0, 0))),
+        qf,
+        table.astype(jnp.float32),
+    )
+    return out[:k]

@@ -135,16 +135,13 @@ def segment_histogram_pallas(
     Matches ``ref.segment_histogram_ref`` exactly (same masking, same
     float32 index math); non-positive / non-finite values and out-of-range
     segment ids contribute nothing.  ``num_segments`` is padded up to a
-    ``row_tile`` multiple internally; the pad rows are dropped before
-    returning.  ``levels`` holds *per-value* int32 collapse levels (callers
-    with per-row levels gather ``row_levels[segment_ids]`` once outside);
-    omitted it defaults to level 0, matching the uncollapsed indexing.
+    ``row_tile`` multiple and the bucket axis up to a ``bucket_tile``
+    multiple internally (pad buckets match no index, so they stay zero);
+    both pads are dropped before returning.  ``levels`` holds *per-value*
+    int32 collapse levels (callers with per-row levels gather
+    ``row_levels[segment_ids]`` once outside); omitted it defaults to level
+    0, matching the uncollapsed indexing.
     """
-    if spec.num_buckets % bucket_tile:
-        raise ValueError(
-            f"num_buckets={spec.num_buckets} must be a multiple of "
-            f"bucket_tile={bucket_tile}"
-        )
     if values.size != segment_ids.size:
         raise ValueError(
             f"values ({values.size} elements) and segment_ids "
@@ -172,9 +169,10 @@ def segment_histogram_pallas(
         w = jnp.pad(w, (0, pad), constant_values=0.0)
         lev = jnp.pad(lev, (0, pad), constant_values=0)
     rows_padded = num_segments + ((-num_segments) % row_tile)
+    buckets_padded = spec.num_buckets + ((-spec.num_buckets) % bucket_tile)
     nv = x.shape[0] // value_tile
     nr = rows_padded // row_tile
-    nb = spec.num_buckets // bucket_tile
+    nb = buckets_padded // bucket_tile
     x = x.reshape(nv, value_tile)
     s = s.reshape(nv, value_tile)
     w = w.reshape(nv, value_tile)
@@ -196,7 +194,7 @@ def segment_histogram_pallas(
             pl.BlockSpec((1, value_tile), lambda i, j, k: (k, 0)),
         ],
         out_specs=pl.BlockSpec((row_tile, bucket_tile), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((rows_padded, spec.num_buckets), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rows_padded, buckets_padded), jnp.float32),
         interpret=interpret,
     )(x, w, s, lev)
-    return out[:num_segments]
+    return out[:num_segments, : spec.num_buckets]

@@ -1,10 +1,11 @@
 """Public jit'd entry points for the DDSketch kernels.
 
 ``ddsketch_histogram`` (one sketch), ``segment_histogram`` (a bank of K
-sketches) and ``fold_pairs`` (the uniform-collapse resolution fold) dispatch
-to the compiled Pallas kernels on TPU and to the pure-XLA reference
-elsewhere.  The semantics contracts are ``repro.kernels.ref.histogram_ref``
-/ ``ref.segment_histogram_ref`` / ``ref.fold_pairs_ref``; tests sweep
+sketches), ``fold_pairs`` (the uniform-collapse resolution fold),
+``ddsketch_scatter`` (the scatter stage of the sort–reduce–scatter ingest)
+and ``bank_quantiles`` (the fused bank query) dispatch to the compiled
+Pallas kernels on TPU and to the pure-XLA reference elsewhere.  The
+semantics contracts are the ``repro.kernels.ref`` oracles; tests sweep
 shapes, dtypes, mappings and tile configurations asserting exact agreement.
 
 ``force`` pins an implementation:
@@ -14,27 +15,54 @@ shapes, dtypes, mappings and tile configurations asserting exact agreement.
 * ``"pallas"``     — the compiled Mosaic kernel; **TPU only** (the kernel
   targets TPU tiling/VMEM — compiling it on CPU/GPU fails mid-lowering, so
   requesting it off-TPU raises immediately instead),
-* ``None``         — auto: compiled kernel on TPU, reference elsewhere.
+* ``None``         — auto: compiled kernel on TPU *when the batch fills at
+  least one tile* (padding a sub-tile batch to ``value_tile`` costs more
+  than the XLA scatter it replaces), reference elsewhere.
+
+``bank_histograms`` is the bank-insert front door: it routes a batch of
+``(value, segment)`` pairs to the matmul-histogram formulation (work
+O(K·m·N): every output tile streams the whole batch) or to the
+sort–reduce–scatter pipeline (O(N log N) sort + compaction to
+U <= min(N, 2·K·m) triples) based on the ``(N, K, m)`` arithmetic-intensity
+ratio; ``method=`` pins a pipeline the same way ``force=`` pins a backend.
 """
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.bank_quantiles import bank_quantiles_pallas
 from repro.kernels.ddsketch_hist import histogram_pallas
+from repro.kernels.ddsketch_scatter import MAX_RESIDENT_ROWS, ddsketch_scatter_pallas
 from repro.kernels.ddsketch_seg_hist import segment_histogram_pallas
 from repro.kernels.fold_pairs import fold_pairs_pallas
 from repro.kernels.ref import (
     BucketSpec,
+    bank_quantiles_ref,
+    compact_triples,
+    composite_keys,
     fold_pairs_ref,
     histogram_ref,
+    scatter_histogram_ref,
     segment_histogram_ref,
 )
 
-__all__ = ["ddsketch_histogram", "segment_histogram", "fold_pairs", "BucketSpec"]
+__all__ = [
+    "ddsketch_histogram",
+    "segment_histogram",
+    "fold_pairs",
+    "ddsketch_scatter",
+    "bank_histograms",
+    "bank_quantiles",
+    "insert_method",
+    "BucketSpec",
+]
 
 _FORCE_VALUES = (None, "pallas", "interpret", "ref")
+_METHOD_VALUES = (None, "matmul", "sort")
 
 
 def _on_tpu() -> bool:
@@ -52,6 +80,62 @@ def _check_force(force: str | None) -> None:
         )
 
 
+def _impl(force: str | None, n: int, tile: int) -> str:
+    """Resolve ``force=None`` to a concrete implementation, size-aware.
+
+    Pinned values pass through.  Auto picks the compiled kernel only on TPU
+    *and* only when the streamed axis fills at least one tile (``n >=
+    tile``): below that, padding to the tile dominates the launch and the
+    XLA reference is strictly cheaper.  The crossover is pinned by a unit
+    test in ``tests/test_sort_scatter.py``.
+    """
+    if force is not None:
+        return force
+    if not _on_tpu() or n < tile:
+        return "ref"
+    return "pallas"
+
+
+def insert_method(
+    n: int,
+    num_segments: int,
+    num_buckets: int,
+    unit_weights: bool = True,
+    on_tpu: bool | None = None,
+) -> str:
+    """Pick ``"matmul"`` or ``"sort"`` for a bank insert from (N, K, m).
+
+    On TPU the matmul-histogram kernel streams all N lanes through every
+    ``(row_tile, bucket_tile)`` output tile — work grows with
+    ``ceil(2K/TR) * ceil(m/TB)`` — while the sort pipeline pays N·log2(N)
+    once and then streams only U <= 2·K·m compacted triples, so sort wins
+    when the output-tile count outgrows log2(N).  Banks taller than the
+    scatter kernel's resident-row ceiling stay on matmul.
+
+    On the XLA reference tier the pipeline's sort + reduce fold into the
+    reducing scatter-add, so it costs one key pass + one scatter where the
+    matmul path costs two of each — a ~2x win for any batch big enough to
+    amortize the extra dispatch plumbing (crossover measured on CPU in
+    ``benchmarks/bank_bench.bench_insert_methods``; ``unit_weights`` does
+    not change the ref-tier cost and is kept for the TPU heuristic, where
+    weighted streams must payload-sort).
+    """
+    if on_tpu is None:
+        on_tpu = _on_tpu()
+    if n == 0:
+        return "matmul"
+    logn = max(math.log2(n), 1.0)
+    if on_tpu:
+        if 2 * num_segments > MAX_RESIDENT_ROWS:
+            return "matmul"
+        out_tiles = math.ceil(2 * num_segments / 8) * math.ceil(num_buckets / 512)
+        # weighted streams payload-sort (keys + weights move together),
+        # roughly doubling the sort stage the pipeline must amortize
+        sort_cost = (4.0 if unit_weights else 8.0) * logn
+        return "sort" if out_tiles > sort_cost else "matmul"
+    return "sort" if n >= (1 << 14) else "matmul"
+
+
 def ddsketch_histogram(
     values: jnp.ndarray,
     weights: jnp.ndarray | None = None,
@@ -66,7 +150,8 @@ def ddsketch_histogram(
 
     ``levels`` holds per-value int32 collapse levels; omitted = level 0."""
     _check_force(force)
-    if force == "ref" or (force is None and not _on_tpu()):
+    impl = _impl(force, values.size, value_tile)
+    if impl == "ref":
         return histogram_ref(values, weights, levels, spec=spec)
     return histogram_pallas(
         values,
@@ -75,7 +160,7 @@ def ddsketch_histogram(
         spec=spec,
         value_tile=value_tile,
         bucket_tile=bucket_tile,
-        interpret=force == "interpret",
+        interpret=impl == "interpret",
     )
 
 
@@ -96,7 +181,8 @@ def segment_histogram(
     whole bank of K sketches regardless of K.  ``levels`` holds *per-value*
     int32 collapse levels (gather per-row levels outside); omitted = level 0."""
     _check_force(force)
-    if force == "ref" or (force is None and not _on_tpu()):
+    impl = _impl(force, values.size, value_tile)
+    if impl == "ref":
         return segment_histogram_ref(
             values, segment_ids, weights, levels, num_segments=num_segments, spec=spec
         )
@@ -110,7 +196,7 @@ def segment_histogram(
         value_tile=value_tile,
         row_tile=row_tile,
         bucket_tile=bucket_tile,
-        interpret=force == "interpret",
+        interpret=impl == "interpret",
     )
 
 
@@ -135,4 +221,186 @@ def fold_pairs(
         row_tile=row_tile,
         bucket_tile=bucket_tile,
         interpret=force == "interpret",
+    )
+
+
+def ddsketch_scatter(
+    keys: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    num_rows: int,
+    num_buckets: int,
+    triple_tile: int = 2048,
+    bucket_tile: int = 512,
+    force: str | None = None,  # "pallas" | "interpret" | "ref" | None(auto)
+) -> jnp.ndarray:
+    """Accumulate composite-key triples into ``(num_rows, num_buckets)``.
+
+    The scatter stage of the ingest pipeline; keys outside
+    ``[0, num_rows * num_buckets)`` (the compaction sentinels) contribute
+    nothing.  Bit-exact vs ``ref.scatter_histogram_ref`` for unique keys —
+    what ``ref.compact_triples`` emits."""
+    _check_force(force)
+    impl = _impl(force, keys.size, triple_tile)
+    if impl != "ref" and num_rows > MAX_RESIDENT_ROWS and force is None:
+        impl = "ref"  # auto never hands a too-tall bank to the resident kernel
+    if impl == "ref":
+        return scatter_histogram_ref(
+            keys, weights, num_rows=num_rows, num_buckets=num_buckets
+        )
+    return ddsketch_scatter_pallas(
+        keys,
+        weights,
+        num_rows=num_rows,
+        num_buckets=num_buckets,
+        triple_tile=triple_tile,
+        bucket_tile=bucket_tile,
+        interpret=impl == "interpret",
+    )
+
+
+def bank_histograms(
+    values: jnp.ndarray,
+    segment_ids: jnp.ndarray | None = None,
+    weights: jnp.ndarray | None = None,
+    levels: jnp.ndarray | None = None,
+    *,
+    num_segments: int,
+    spec: BucketSpec,
+    method: str | None = None,  # "matmul" | "sort" | None(auto)
+    force: str | None = None,  # "pallas" | "interpret" | "ref" | None(auto)
+    value_tile: int = 2048,
+    row_tile: int = 8,
+    bucket_tile: int = 512,
+    triple_tile: int = 2048,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Both sign stores of a bank insert: ``(pos, neg)``, each ``(K, m)``.
+
+    The single entry point behind ``DeviceSketch.add`` / ``SketchBank.add``:
+    sign routing (positives keyed on x, negatives on ``|x|``, everything
+    else contributing nothing) happens here, and ``method`` picks the
+    pipeline — ``"matmul"`` masks each sign and runs the segmented
+    histogram twice; ``"sort"`` is the sort–reduce–scatter ingest pipeline
+    over one combined composite-key stream into the stacked ``(2K, m)``
+    layout.  On the Pallas tiers the pipeline is materialized literally —
+    ``ref.compact_triples`` (sort + segment-sum) feeds the
+    ``ddsketch_scatter`` kernel U <= min(N, 2·K·m) unique triples — while
+    the XLA twin folds the sort+reduce *into* the reducing scatter-add
+    (order-free exact accumulation needs no physical sort), so the ref tier
+    pays one key pass + one scatter where matmul pays two of each.
+
+    ``method=None`` auto-selects via ``insert_method``; both pipelines
+    produce identical results.  On the XLA tier the match is bit-for-bit
+    for *arbitrary* weights (per output bucket the contributing lanes
+    accumulate in the same order as the matmul path); on the Pallas tiers
+    the unstable compaction sort reorders duplicate-key accumulation, so
+    bit-exactness there holds for unit or integer-valued weights (fractional
+    weights may differ in final ulps).  ``segment_ids=None`` is the
+    single-sketch case (requires ``num_segments == 1``).
+    """
+    _check_force(force)
+    if method not in _METHOD_VALUES:
+        raise ValueError(f"method must be one of {_METHOD_VALUES}, got {method!r}")
+    if segment_ids is None and num_segments != 1:
+        raise ValueError(
+            "segment_ids may be omitted only for a single-row bank "
+            f"(num_segments=1), got num_segments={num_segments}"
+        )
+    n = int(values.size)
+    if method is None:
+        method = insert_method(
+            n, num_segments, spec.num_buckets, unit_weights=weights is None
+        )
+    if method == "matmul":
+        x = values.reshape(-1).astype(jnp.float32)
+        pos_vals = jnp.where(x > spec.min_indexable, x, -1.0)
+        neg_vals = jnp.where(x < -spec.min_indexable, -x, -1.0)
+        if segment_ids is None:
+            kw = dict(spec=spec, value_tile=value_tile, bucket_tile=bucket_tile,
+                      force=force)
+            pos = ddsketch_histogram(pos_vals, weights, levels, **kw)[None]
+            neg = ddsketch_histogram(neg_vals, weights, levels, **kw)[None]
+        else:
+            kw = dict(num_segments=num_segments, spec=spec, value_tile=value_tile,
+                      row_tile=row_tile, bucket_tile=bucket_tile, force=force)
+            pos = segment_histogram(pos_vals, segment_ids, weights, levels, **kw)
+            neg = segment_histogram(neg_vals, segment_ids, weights, levels, **kw)
+        return pos, neg
+    impl = _impl(force, n, triple_tile)
+    if impl != "ref" and 2 * num_segments > MAX_RESIDENT_ROWS and force is None:
+        impl = "ref"  # bank too tall for the resident-row scatter kernel
+    if impl == "ref":
+        # XLA twin of the pipeline: scatter-add already reduces by key, so
+        # the sort + segment-sum stages are the identity here — one
+        # composite-key pass and one reducing scatter replace the matmul
+        # path's two masked key passes and two scatters.
+        keys = composite_keys(
+            values, segment_ids, levels, num_segments=num_segments, spec=spec
+        )
+        wts = (
+            jnp.ones(keys.shape, jnp.float32)
+            if weights is None
+            else weights.reshape(-1).astype(jnp.float32)
+        )
+        both = scatter_histogram_ref(
+            keys, wts, num_rows=2 * num_segments, num_buckets=spec.num_buckets
+        )
+    else:
+        keys, wts = compact_triples(
+            values, segment_ids, weights, levels, num_segments=num_segments, spec=spec
+        )
+        # the runs are packed to the front, so the streamed axis shrinks to
+        # the compacted bound min(N, 2Km + 1) — this slice is the whole
+        # point of the pipeline on the kernel tiers: the scatter kernel
+        # streams U-ish lanes per bucket tile, not N
+        cap = min(n, 2 * num_segments * spec.num_buckets + 1)
+        both = ddsketch_scatter_pallas(
+            keys[:cap],
+            wts[:cap],
+            num_rows=2 * num_segments,
+            num_buckets=spec.num_buckets,
+            triple_tile=triple_tile,
+            bucket_tile=bucket_tile,
+            interpret=impl == "interpret",
+        )
+    return both[:num_segments], both[num_segments:]
+
+
+def bank_quantiles(
+    pos: jnp.ndarray,
+    neg: jnp.ndarray,
+    zero: jnp.ndarray,
+    vmin: jnp.ndarray,
+    vmax: jnp.ndarray,
+    level: jnp.ndarray,
+    qs: jnp.ndarray,
+    *,
+    spec: BucketSpec,
+    row_tile: int = 8,
+    force: str | None = None,  # "pallas" | "interpret" | "ref" | None(auto)
+) -> jnp.ndarray:
+    """Fused Algorithm 2 over all K rows and all qs: ``(K, len(qs))``.
+
+    One cumsum + lane-count searchsorted per row tile answers every q; per
+    row collapse levels select the bucket-value line from the trace-time
+    table.  Pallas and XLA paths share the formulation and agree
+    bit-for-bit; counts of any dtype are cast to float32 for rank math."""
+    _check_force(force)
+    from repro.core.jax_sketch import bucket_value_table  # deferred: no cycle
+
+    table = jnp.asarray(bucket_value_table(spec), jnp.float32)
+    impl = _impl(force, pos.shape[0], row_tile)
+    if impl == "ref":
+        return bank_quantiles_ref(pos, neg, zero, vmin, vmax, level, qs, table)
+    return bank_quantiles_pallas(
+        pos,
+        neg,
+        zero,
+        vmin,
+        vmax,
+        level,
+        qs,
+        table,
+        row_tile=row_tile,
+        interpret=impl == "interpret",
     )

@@ -25,6 +25,10 @@ __all__ = [
     "fold_destination_range",
     "approx_log2",
     "shift_key",
+    "composite_keys",
+    "compact_triples",
+    "scatter_histogram_ref",
+    "bank_quantiles_ref",
 ]
 
 # Hard ceiling on the uniform-collapse level (UDDSketch, Epicoco et al. 2020).
@@ -206,6 +210,200 @@ def segment_histogram_ref(
     flat = jnp.clip(s, 0, num_segments - 1) * spec.num_buckets + idx
     out = jnp.zeros(num_segments * spec.num_buckets, jnp.float32).at[flat].add(contrib)
     return out.reshape(num_segments, spec.num_buckets)
+
+
+# --------------------------------------------------------------------- #
+# sort–reduce front end of the input-stationary ingest pipeline
+# --------------------------------------------------------------------- #
+def composite_keys(
+    values: jnp.ndarray,
+    segment_ids: jnp.ndarray | None,
+    levels: jnp.ndarray | None,
+    *,
+    num_segments: int,
+    spec: BucketSpec,
+) -> jnp.ndarray:
+    """Flat ``sign_base + seg * m + bucket`` keys covering both sign stores.
+
+    Positive values key into rows ``[0, K)`` of the combined ``(2K, m)``
+    layout, negatives (keyed on ``|x|``) into rows ``[K, 2K)``, so one sort
+    and one scatter cover both stores.  Lanes that contribute nothing in
+    ``segment_histogram_ref`` (non-finite, ``|x| <= min_indexable``,
+    out-of-range segment id) get the sentinel key ``2*K*m``, which every
+    consumer drops.  The bucket index reuses the exact ``bucket_index``
+    float32 math, so the pipeline agrees with the matmul-histogram path
+    bit-for-bit.
+    """
+    m = spec.num_buckets
+    sentinel = 2 * num_segments * m
+    if sentinel + 1 > jnp.iinfo(jnp.int32).max:
+        raise ValueError(
+            f"2 * num_segments * num_buckets + 1 = {sentinel + 1} overflows "
+            "int32 composite keys; shard the bank or shrink the geometry"
+        )
+    x = values.reshape(-1).astype(jnp.float32)
+    if segment_ids is None:
+        s = jnp.zeros(x.shape, jnp.int32)
+    else:
+        s = segment_ids.reshape(-1).astype(jnp.int32)
+    lev = None if levels is None else levels.reshape(-1).astype(jnp.int32)
+    finite = jnp.isfinite(x)
+    is_pos = finite & (x > spec.min_indexable)
+    is_neg = finite & (x < -spec.min_indexable)
+    valid = (is_pos | is_neg) & (s >= 0) & (s < num_segments)
+    idx = bucket_index(jnp.where(valid, jnp.abs(x), 1.0), spec, lev)
+    key = (
+        jnp.clip(s, 0, num_segments - 1) * m
+        + idx
+        + jnp.where(is_neg, num_segments * m, 0)
+    )
+    return jnp.where(valid, key, sentinel)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "spec"))
+def compact_triples(
+    values: jnp.ndarray,
+    segment_ids: jnp.ndarray | None = None,
+    weights: jnp.ndarray | None = None,
+    levels: jnp.ndarray | None = None,
+    *,
+    num_segments: int,
+    spec: BucketSpec,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort + reduce: N raw values -> U <= min(N, 2*K*m + 1) unique triples.
+
+    Returns ``(keys, weights)`` of length N with the runs *packed to the
+    front*: lanes ``0..U-1`` hold each distinct composite key of the
+    combined pos/neg layout (see ``composite_keys``) once, in ascending
+    order, carrying the run's total weight — invalid input lanes collapse
+    into one sentinel run whose key (``2*K*m``) every consumer drops.
+    Trailing lanes report int32-max keys with zero weight (also dropped).
+    Because the packing is front-aligned, callers may statically slice the
+    result to ``min(N, 2*K*m + 1)`` lanes — that slice is what makes the
+    scatter kernel's streamed axis the *compacted* axis.
+
+    ``weights=None`` is the fast path: only the keys are sorted (no
+    payload) and run totals count lanes — exact integer math.  With
+    explicit weights the (key, weight) pairs sort together (unstable, so
+    equal-key payload order is arbitrary) and runs reduce with an in-order
+    ``segment_sum``; exact whenever the weights are integer-valued (the
+    same 2^24 float32 ceiling the dense stores have).
+    """
+    m = spec.num_buckets
+    key = composite_keys(
+        values, segment_ids, levels, num_segments=num_segments, spec=spec
+    )
+    n = key.shape[0]
+    if n == 0:
+        return key, jnp.zeros(0, jnp.float32)
+    if weights is None:
+        sk = jax.lax.sort([key], num_keys=1, is_stable=False)[0]
+        sw = jnp.ones_like(sk, jnp.float32)
+    else:
+        w = weights.reshape(-1).astype(jnp.float32)
+        sk, sw = jax.lax.sort([key, w], num_keys=1, is_stable=False)
+    starts = jnp.concatenate([jnp.ones(1, bool), sk[1:] != sk[:-1]])
+    rid = jnp.cumsum(starts.astype(jnp.int32)) - 1  # run index, packed 0..U-1
+    run_w = jax.ops.segment_sum(sw, rid, num_segments=n, indices_are_sorted=True)
+    run_k = jax.ops.segment_min(sk, rid, num_segments=n, indices_are_sorted=True)
+    # empty trailing segments report int32-max keys (dropped by consumers)
+    return run_k, run_w
+
+
+@partial(jax.jit, static_argnames=("num_rows", "num_buckets"))
+def scatter_histogram_ref(
+    keys: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    num_rows: int,
+    num_buckets: int,
+) -> jnp.ndarray:
+    """Oracle for the scatter stage: ``out[k // m, k % m] += w`` per triple.
+
+    Keys outside ``[0, num_rows * num_buckets)`` contribute nothing (the
+    compaction sentinels land here).  With unique keys — what
+    ``compact_triples`` guarantees for the live lanes — every output bucket
+    receives at most one add, so any correct implementation matches this
+    bit-for-bit regardless of traversal order.
+    """
+    total = num_rows * num_buckets
+    k = keys.reshape(-1)
+    w = weights.reshape(-1).astype(jnp.float32)
+    valid = (k >= 0) & (k < total)
+    flat = jnp.where(valid, k, total)
+    out = jnp.zeros(total + 1, jnp.float32).at[flat].add(jnp.where(valid, w, 0.0))
+    return out[:total].reshape(num_rows, num_buckets)
+
+
+# --------------------------------------------------------------------- #
+# fused bank quantile query (Algorithm 2 over all rows and qs at once)
+# --------------------------------------------------------------------- #
+def _bank_quantiles_math(pos, neg, zero, vmin, vmax, level, qs, table):
+    """Shared formulation of the fused query; see ``bank_quantiles_ref``.
+
+    Operates on a ``(K, m)`` row block with per-row scalars shaped ``(K, 1)``
+    so the same code runs as the XLA oracle and inside the Pallas row-tile
+    kernel (where ``K`` is the row tile).  ``qs`` is static-length; the loop
+    unrolls, answering every q off one cumsum per row.
+    """
+    num_levels = table.shape[0]
+    m = pos.shape[1]
+    lclip = jnp.clip(level, 0, num_levels - 1)
+    vals = jnp.zeros_like(pos)
+    for lev in range(num_levels):
+        vals = jnp.where(lclip == lev, table[lev][None, :], vals)
+    line_vals = jnp.concatenate(
+        [-vals[:, ::-1], jnp.zeros_like(zero), vals], axis=1
+    )
+    line_counts = jnp.concatenate([neg[:, ::-1], zero, pos], axis=1)
+    n = jnp.sum(line_counts, axis=1, keepdims=True)
+    cum = jnp.cumsum(line_counts, axis=1)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, line_counts.shape, 1)
+    cols = []
+    for qi in range(qs.shape[-1]):
+        qf = qs.reshape(-1)[qi]
+        rank = qf * jnp.maximum(n - 1.0, 0.0)
+        # searchsorted(cum, rank, side="right") == #{cum <= rank}
+        idx = jnp.sum((cum <= rank).astype(jnp.int32), axis=1, keepdims=True)
+        idx = jnp.clip(idx, 0, 2 * m)
+        est = jnp.sum(jnp.where(lanes == idx, line_vals, 0.0), axis=1, keepdims=True)
+        est = jnp.clip(est, vmin, vmax)  # exact-extrema clamp
+        est = jnp.where(qf <= 0.0, vmin, jnp.where(qf >= 1.0, vmax, est))
+        cols.append(jnp.where(n > 0, est, jnp.nan))
+    return jnp.concatenate(cols, axis=1)
+
+
+@jax.jit
+def bank_quantiles_ref(
+    pos: jnp.ndarray,
+    neg: jnp.ndarray,
+    zero: jnp.ndarray,
+    vmin: jnp.ndarray,
+    vmax: jnp.ndarray,
+    level: jnp.ndarray,
+    qs: jnp.ndarray,
+    table: jnp.ndarray,
+) -> jnp.ndarray:
+    """Oracle: per-row quantiles ``(K, len(qs))`` in one fused pass.
+
+    Semantically identical to vmapping ``jax_sketch.quantile`` over rows and
+    qs (same value line, same cumsum + right-searchsorted, same extrema /
+    empty-row handling), but each row's ``(2m+1)`` value line and cumsum are
+    materialized once for *all* qs instead of once per (row, q) pair.
+    ``table`` is the per-level bucket-value table ``(L+1, m)``; counts may be
+    any dtype (cast to float32 for the rank arithmetic).
+    """
+    qf = jnp.atleast_1d(jnp.asarray(qs, jnp.float32))
+    return _bank_quantiles_math(
+        pos.astype(jnp.float32),
+        neg.astype(jnp.float32),
+        zero.astype(jnp.float32).reshape(-1, 1),
+        vmin.reshape(-1, 1),
+        vmax.reshape(-1, 1),
+        level.astype(jnp.int32).reshape(-1, 1),
+        qf,
+        table.astype(jnp.float32),
+    )
 
 
 # --------------------------------------------------------------------- #

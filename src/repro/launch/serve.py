@@ -172,6 +172,14 @@ class Server:
         """Rollup request-latency quantiles for one endpoint (host tier)."""
         return self.endpoint_agg.quantiles(endpoint, qs)
 
+    def live_endpoint_quantiles(self, qs=(0.5, 0.95, 0.99)) -> dict:
+        """Current-window latency quantiles for *every* live endpoint in one
+        fused device query (``KeyedWindow.all_quantiles``): the bank answers
+        all endpoints x all qs off one cumsum per row, so the live view
+        costs one dispatch no matter how many endpoints are in flight —
+        unlike the rollup path, it does not wait for a window flush."""
+        return self.endpoint_window.all_quantiles(qs)
+
     def endpoint_alpha(self, endpoint: str) -> float:
         """Effective relative-error guarantee for one endpoint's rollup.
 

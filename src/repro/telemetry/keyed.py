@@ -63,6 +63,8 @@ class KeyedWindow:
         use_kernel: bool = False,
         collapse_threshold: float | None = 0.0,
         evict_after: int = 1,
+        method: str | None = None,
+        counts_dtype=jnp.float32,
     ):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -73,8 +75,10 @@ class KeyedWindow:
         self.use_kernel = use_kernel
         self.collapse_threshold = collapse_threshold
         self.evict_after = evict_after
+        self.method = method  # insert pipeline pin ("matmul"/"sort"/None auto)
+        self.counts_dtype = counts_dtype
         self.key_to_row: dict[str, int] = {OVERFLOW_KEY: 0}
-        self.bank = sbank.empty(spec, capacity + 1)
+        self.bank = sbank.empty(spec, capacity + 1, counts_dtype=counts_dtype)
         self._free = list(range(capacity, 0, -1))  # pop() hands out 1, 2, ...
         self._last_seen: dict[str, int] = {}
         self._window = 0
@@ -116,6 +120,7 @@ class KeyedWindow:
             w,
             spec=self.spec,
             use_kernel=self.use_kernel,
+            method=self.method,
         )
         if self.collapse_threshold is not None:
             self.bank = sbank.auto_collapse(
@@ -127,12 +132,33 @@ class KeyedWindow:
 
     # ------------------------------------------------------------------ #
     def quantiles(self, key: str, qs) -> list[float]:
-        """Window-local per-key quantiles straight off the device bank."""
+        """Window-local per-key quantiles straight off the device bank
+        (one fused dispatch for all qs, not a Python loop per q)."""
         rid = self.key_to_row.get(key)
         if rid is None:
             raise KeyError(f"no values recorded for key {key!r}")
         sub = sbank.row(self.bank, rid)
-        return [float(jax_sketch.quantile(sub, q, spec=self.spec)) for q in qs]
+        out = jax_sketch.quantiles(sub, jnp.asarray(qs, jnp.float32), spec=self.spec)
+        return [float(v) for v in np.asarray(out)]
+
+    def all_quantiles(self, qs) -> dict[str, list[float]]:
+        """Window-local quantiles for *every* live key in one fused bank
+        query — the serving path for per-endpoint dashboards: one device
+        dispatch answers len(keys) x len(qs) estimates off one cumsum per
+        row, instead of a per-key (let alone per-q) query loop."""
+        out = np.asarray(
+            sbank.quantiles(
+                self.bank,
+                jnp.asarray(qs, jnp.float32),
+                spec=self.spec,
+                use_kernel=self.use_kernel,
+            )
+        )
+        return {
+            k: [float(v) for v in out[rid]]
+            for k, rid in self.key_to_row.items()
+            if k != OVERFLOW_KEY
+        }
 
     def keys(self) -> list[str]:
         return [k for k in self.key_to_row if k != OVERFLOW_KEY]
@@ -167,9 +193,9 @@ class KeyedWindow:
                 self._last_seen.pop(key, None)
                 self._free.append(rid)
                 levels[rid] = 0  # fresh tenants start at full resolution
-        self.bank = sbank.empty(self.spec, self.capacity + 1)._replace(
-            level=jnp.asarray(levels)
-        )
+        self.bank = sbank.empty(
+            self.spec, self.capacity + 1, counts_dtype=self.counts_dtype
+        )._replace(level=jnp.asarray(levels))
 
 
 class KeyedAggregator:

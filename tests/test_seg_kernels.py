@@ -85,16 +85,28 @@ def test_seg_kernel_tilings(value_tile, row_tile, bucket_tile, rng):
 
 def test_seg_kernel_rejects_bad_shapes():
     spec = BucketSpec(num_buckets=2048)
-    with pytest.raises(ValueError, match="bucket_tile"):
-        segment_histogram_pallas(
-            jnp.ones(8), jnp.zeros(8, jnp.int32), num_segments=4, spec=spec,
-            bucket_tile=1000, interpret=True,
-        )
     with pytest.raises(ValueError, match="same size"):
         segment_histogram_pallas(
             jnp.ones(8), jnp.zeros(9, jnp.int32), num_segments=4, spec=spec,
             interpret=True,
         )
+
+
+@pytest.mark.parametrize("num_buckets,bucket_tile", [(2048, 1000), (1000, 512), (1000, 1024)])
+def test_seg_kernel_non_multiple_bucket_tile(num_buckets, bucket_tile, rng):
+    """Regression: a bucket_tile that does not divide num_buckets used to be
+    a hard error; the bucket axis is now padded internally and sliced off."""
+    spec = BucketSpec(num_buckets=num_buckets, offset=-num_buckets // 2)
+    n, k = 3000, 5
+    x = jnp.asarray(_data(n, rng))
+    s = jnp.asarray(rng.integers(0, k, n).astype(np.int32))
+    ref = segment_histogram_ref(x, s, num_segments=k, spec=spec)
+    ker = segment_histogram_pallas(
+        x, s, num_segments=k, spec=spec, bucket_tile=bucket_tile, interpret=True
+    )
+    assert ker.shape == (k, num_buckets)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+    assert float(ker.sum()) > 0
 
 
 def test_seg_kernel_empty_and_all_masked():
