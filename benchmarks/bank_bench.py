@@ -14,6 +14,10 @@ semantics), matching kernels_bench's methodology.
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -204,6 +208,158 @@ def bench_collapse_insert(n: int = 200_000, iters: int = 5) -> list[dict]:
     return rows
 
 
+def bench_engine_ingest(
+    k: int = 4096, n: int = 2048, records: int = 50, iters: int = 3
+) -> list[dict]:
+    """Per-record ingest cost: jit-per-call ``sketch_bank.add`` vs the
+    engine's persistent donated executable.
+
+    The loop is the serving hot path — many small ``record`` batches into a
+    big bank.  The jit path pays per-call dispatch (static-arg hashing,
+    trace-cache lookup) and allocates a fresh K×m bank every record (two
+    new (4096, 2048) float32 buffers = 64 MiB of churn per call at the
+    defaults); the engine path calls one AOT-compiled executable that
+    donates the bank, so the update is in place.  Identical math — the
+    parity suite (tests/test_engine.py) pins that — so the delta is pure
+    dispatch + allocation overhead.
+    """
+    from repro.engine import SketchEngine
+
+    spec = BucketSpec()
+    rng = np.random.default_rng(0)
+    vals_np = (rng.pareto(1.0, n) + 1.0).astype(np.float32)
+    ids_np = rng.integers(0, k, n).astype(np.int32)
+    vals, ids = jnp.asarray(vals_np), jnp.asarray(ids_np)
+
+    def jit_path():
+        bank = sb.empty(spec, k)
+        for _ in range(records):
+            bank = sb.add(bank, vals, ids, spec=spec)
+        return bank
+
+    eng = SketchEngine(spec, k)
+
+    def engine_path():
+        bank = eng.new_bank()
+        for _ in range(records):
+            bank = eng.add(bank, vals_np, ids_np)
+        return bank
+
+    rows = []
+    for name, fn in (("jit_per_call", jit_path), ("engine", engine_path)):
+        secs = _time(fn, iters=iters) / records
+        rows.append(
+            {
+                "bench": "engine_ingest",
+                "K": k,
+                "n_per_record": n,
+                "records": records,
+                "path": name,
+                "ms_per_record": round(secs * 1e3, 4),
+                "records_per_s": round(1.0 / secs, 1),
+                "impl": "xla_ref",
+            }
+        )
+    return rows
+
+
+_SHARDED_WORKER_FLAG = "--sharded-worker"
+
+
+def _sharded_worker(cfg: dict) -> list[dict]:
+    """Runs inside the fake-multi-device subprocess; prints JSON rows."""
+    from repro.engine import ShardedBank, SketchEngine
+
+    spec = BucketSpec()
+    k, n, records = cfg["k"], cfg["n"], cfg["records"]
+    rng = np.random.default_rng(0)
+    vals = (rng.pareto(1.0, n) + 1.0).astype(np.float32)
+    ids = rng.integers(0, k, n).astype(np.int32)
+    rows = []
+    for shards in cfg["shards"]:
+        if shards > len(jax.devices()):
+            continue
+        if shards == 1:
+            eng = SketchEngine(spec, k)
+            # carry the donated state across timed calls (rebound through
+            # the holder), symmetric with the ShardedBank branch below —
+            # no per-iteration bank allocation in either path
+            holder = [eng.new_bank()]
+
+            def ingest(eng=eng, holder=holder):
+                s = holder[0]
+                for _ in range(records):
+                    s = eng.add(s, vals, ids)
+                holder[0] = s
+                return s
+
+            secs = _time(ingest, iters=cfg["iters"]) / records
+            q_secs = _time(lambda: eng.quantiles(holder[0], [0.5, 0.95, 0.99]),
+                           iters=cfg["iters"])
+        else:
+            bank = ShardedBank(spec, k, num_shards=shards)
+
+            def ingest(bank=bank):
+                for _ in range(records):
+                    bank.add(vals, ids)
+                return bank.state
+
+            secs = _time(ingest, iters=cfg["iters"]) / records
+            q_secs = _time(lambda: bank.engine.quantiles(
+                bank.state, jnp.asarray([0.5, 0.95, 0.99])), iters=cfg["iters"])
+        rows.append(
+            {
+                "bench": "sharded_ingest",
+                "K": k,
+                "n_per_record": n,
+                "shards": shards,
+                "ms_per_record": round(secs * 1e3, 4),
+                "quantiles_ms": round(q_secs * 1e3, 4),
+                "impl": "shard_map_xla_ref",
+            }
+        )
+    return rows
+
+
+def bench_sharded_ingest(
+    k: int = 4096, n: int = 4096, records: int = 20, iters: int = 3,
+    shards=(1, 2, 8), n_devices: int = 8,
+) -> list[dict]:
+    """Row-sharded ingest across simulated CPU devices (subprocess).
+
+    XLA device counts are fixed at process start, so the sweep re-execs
+    this module with ``--xla_force_host_platform_device_count`` and parses
+    the rows back.  On one physical CPU the fake devices share cores —
+    the row tracks the *dispatch/collective* overhead trajectory of the
+    shard_map path (the capacity win needs real devices), with the
+    shards=1 engine row as the in-process baseline.
+    """
+    cfg = {"k": k, "n": n, "records": records, "iters": iters,
+           "shards": list(shards)}
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep
+        + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bank_bench", _SHARDED_WORKER_FLAG,
+         json.dumps(cfg)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1800,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded worker failed (rc={proc.returncode}):\n{proc.stderr[-3000:]}"
+        )
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
 def bench_bank_quantiles(k: int = 4096, n: int = 500_000, iters: int = 10) -> list[dict]:
     """Fused Algorithm 2 over all K rows and all qs (single query pass)."""
     spec = BucketSpec()
@@ -226,3 +382,13 @@ def bench_bank_quantiles(k: int = 4096, n: int = 500_000, iters: int = 10) -> li
             "impl": "fused_cumsum_searchsorted",
         }
     ]
+
+
+if __name__ == "__main__":
+    # subprocess entry for the sharded sweep (device counts are fixed at
+    # process start, so the parent re-execs with XLA_FLAGS set)
+    if len(sys.argv) >= 3 and sys.argv[1] == _SHARDED_WORKER_FLAG:
+        print(json.dumps(_sharded_worker(json.loads(sys.argv[2]))))
+    else:
+        for row in bench_engine_ingest():
+            print(row)

@@ -100,6 +100,15 @@ def main() -> None:
             "collapse_insert": lambda: bank_bench.bench_collapse_insert(
                 n=50_000, iters=3
             ),
+            # donation + persistent-executable evidence (the engine tentpole):
+            # the jit-per-call vs engine delta is the per-record dispatch +
+            # K×m allocation cost, tracked in BENCH_baseline.json
+            "engine_ingest": lambda: bank_bench.bench_engine_ingest(
+                k=4096, n=2048, records=30, iters=3
+            ),
+            "sharded_ingest": lambda: bank_bench.bench_sharded_ingest(
+                k=1024, n=4096, records=10, iters=2, shards=(1, 2, 8)
+            ),
             "roofline": roofline_rows,
         }
     elif args.quick:
@@ -125,6 +134,12 @@ def main() -> None:
             "fold_pairs": lambda: bank_bench.bench_fold_pairs(iters=5),
             "collapse_insert": lambda: bank_bench.bench_collapse_insert(
                 n=100_000, iters=5
+            ),
+            "engine_ingest": lambda: bank_bench.bench_engine_ingest(
+                k=4096, n=2048, records=50, iters=3
+            ),
+            "sharded_ingest": lambda: bank_bench.bench_sharded_ingest(
+                k=2048, n=8192, records=15, iters=3, shards=(1, 2, 8)
             ),
             "roofline": roofline_rows,
         }
@@ -152,6 +167,12 @@ def main() -> None:
             ),
             "fold_pairs": bank_bench.bench_fold_pairs,
             "collapse_insert": bank_bench.bench_collapse_insert,
+            "engine_ingest": lambda: bank_bench.bench_engine_ingest(
+                k=4096, n=2048, records=100, iters=5
+            ),
+            "sharded_ingest": lambda: bank_bench.bench_sharded_ingest(
+                k=4096, n=16384, records=20, iters=3, shards=(1, 2, 4, 8)
+            ),
             "roofline": roofline_rows,
         }
 

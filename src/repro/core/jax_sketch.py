@@ -43,7 +43,7 @@ Both tiers share the key mappings; cross-tier equality is tested in
 from __future__ import annotations
 
 import math
-from functools import lru_cache, partial
+from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -389,28 +389,19 @@ def allreduce(sketch: DeviceSketch, axis_name, *, spec: BucketSpec) -> DeviceSke
 
 
 # --------------------------------------------------------------------- #
-# per-level bucket value tables (trace-time constants)
+# per-level bucket value tables (engine-cached per-spec constants)
 # --------------------------------------------------------------------- #
-@lru_cache(maxsize=None)
 def bucket_value_table(spec: BucketSpec) -> np.ndarray:
-    """(MAX_COLLAPSE_LEVEL + 1, m) relative-error midpoint estimates.
+    """(MAX_COLLAPSE_LEVEL + 1, m) per-level midpoint estimates.
 
-    Row L gives the estimate for bucket i at collapse level L
-    (``KeyMapping.value_at_level``, the same exact float64 host math the
-    host quantile path uses, so the tiers answer identically), baked in as
-    a trace-time constant and clipped into the float32 finite range so the
-    device query stays well-defined at extreme levels.
+    Hosted by the engine's per-spec constant cache (``repro.engine.tables``)
+    so repeated query traces — and every engine executable — share one host
+    construction and one device upload per spec.  Deferred import: the
+    engine imports this module at load time.
     """
-    from repro.core.mapping import make_mapping
+    from repro.engine.tables import bucket_value_table as _table
 
-    m = make_mapping(spec.mapping, spec.relative_accuracy)
-    keys = np.arange(spec.offset, spec.offset + spec.num_buckets)
-    table = np.empty((MAX_COLLAPSE_LEVEL + 1, spec.num_buckets), np.float64)
-    for lev in range(MAX_COLLAPSE_LEVEL + 1):
-        for i, k in enumerate(keys):
-            table[lev, i] = m.value_at_level(int(k), lev)
-    f32 = np.finfo(np.float32)
-    return np.clip(table, float(f32.tiny), float(f32.max))
+    return _table(spec)
 
 
 def bucket_values(spec: BucketSpec) -> np.ndarray:
@@ -418,16 +409,18 @@ def bucket_values(spec: BucketSpec) -> np.ndarray:
     return bucket_value_table(spec)[0]
 
 
-@partial(jax.jit, static_argnames=("spec",))
-def quantile(sketch: DeviceSketch, q, *, spec: BucketSpec) -> jnp.ndarray:
+def quantile_impl(sketch: DeviceSketch, q, *, spec: BucketSpec) -> jnp.ndarray:
     """Algorithm 2 over (negatives desc-by-key, zero, positives asc-by-key).
 
     Vectorized: the three stores concatenate into one monotone value line
     (selected from the per-level value table by the sketch's live level);
     the answer is the first bucket whose cumulative count exceeds q(n-1)
     (found with a searchsorted on the cumsum instead of the paper's loop).
+    Pure/traceable body; the jitted front door is ``quantile``.
     """
-    table = jnp.asarray(bucket_value_table(spec), jnp.float32)
+    from repro.engine.tables import device_value_table
+
+    table = device_value_table(spec)
     vals = table[jnp.clip(sketch.level, 0, MAX_COLLAPSE_LEVEL)]
     line_vals = jnp.concatenate([-vals[::-1], jnp.zeros((1,), jnp.float32), vals])
     line_counts = jnp.concatenate(
@@ -446,9 +439,12 @@ def quantile(sketch: DeviceSketch, q, *, spec: BucketSpec) -> jnp.ndarray:
     return jnp.where(n > 0, est, jnp.nan)
 
 
+quantile = partial(jax.jit, static_argnames=("spec",))(quantile_impl)
+
+
 @partial(jax.jit, static_argnames=("spec",))
 def quantiles(sketch: DeviceSketch, qs: jnp.ndarray, *, spec: BucketSpec) -> jnp.ndarray:
-    return jax.vmap(lambda q: quantile(sketch, q, spec=spec))(jnp.asarray(qs))
+    return jax.vmap(lambda q: quantile_impl(sketch, q, spec=spec))(jnp.asarray(qs))
 
 
 # --------------------------------------------------------------------- #

@@ -51,6 +51,8 @@ __all__ = [
     "SketchBank",
     "empty",
     "add",
+    "add_impl",
+    "quantiles_impl",
     "merge",
     "allreduce",
     "collapse",
@@ -113,8 +115,7 @@ def empty(spec: BucketSpec, num_sketches: int, counts_dtype=jnp.float32) -> Sket
     )
 
 
-@partial(jax.jit, static_argnames=("spec", "use_kernel", "auto_collapse", "method"))
-def add(
+def add_impl(
     bank: SketchBank,
     values: jnp.ndarray,
     sketch_ids: jnp.ndarray,
@@ -126,6 +127,9 @@ def add(
     method: str | None = None,
 ) -> SketchBank:
     """Vectorized Algorithm 1 over ``(value, sketch_id)`` pairs (any shape).
+
+    Pure/traceable body — the jitted front door is ``add``; the engine AOT-
+    compiles this impl into persistent donated executables.
 
     One bank-histogram dispatch updates all K rows; there is no Python loop
     over sketches anywhere.  Non-finite values and out-of-range ids are
@@ -208,6 +212,11 @@ def add(
     )
 
 
+add = partial(
+    jax.jit, static_argnames=("spec", "use_kernel", "auto_collapse", "method")
+)(add_impl)
+
+
 # --------------------------------------------------------------------- #
 # per-row uniform collapse (UDDSketch lifted over the bank axis)
 # --------------------------------------------------------------------- #
@@ -278,8 +287,8 @@ def auto_collapse(
     )
     folded = collapse(bank, fire, spec=spec, use_kernel=use_kernel)
     return folded._replace(
-        overflow=jnp.where(fire, 0.0, bank.overflow),
-        underflow=jnp.where(fire, 0.0, bank.underflow),
+        overflow=jnp.where(fire, jnp.zeros_like(bank.overflow), bank.overflow),
+        underflow=jnp.where(fire, jnp.zeros_like(bank.underflow), bank.underflow),
     )
 
 
@@ -367,15 +376,18 @@ def from_host(
 # --------------------------------------------------------------------- #
 # queries: Algorithm 2 fused over all K rows and all qs at once
 # --------------------------------------------------------------------- #
-@partial(jax.jit, static_argnames=("spec", "use_kernel"))
-def quantiles(
+def quantiles_impl(
     bank: SketchBank,
     qs: jnp.ndarray,
     *,
     spec: BucketSpec,
     use_kernel: bool = False,
+    table: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Per-row quantile estimates, shape ``(K, len(qs))``.
+
+    Pure/traceable body — the jitted front door is ``quantiles``; the
+    engine AOT-compiles this impl into persistent executables.
 
     The fused bank query (``kernels.ops.bank_quantiles``): each row tile
     materializes its ``(2m+1)`` neg/zero/pos value line and cumulative
@@ -398,7 +410,11 @@ def quantiles(
         qf,
         spec=spec,
         force=None if use_kernel else "ref",
+        table=table,
     )
+
+
+quantiles = partial(jax.jit, static_argnames=("spec", "use_kernel"))(quantiles_impl)
 
 
 @partial(jax.jit, static_argnames=("spec", "use_kernel"))
@@ -406,4 +422,6 @@ def quantile(
     bank: SketchBank, q, *, spec: BucketSpec, use_kernel: bool = False
 ) -> jnp.ndarray:
     """One quantile for every row, shape ``(K,)`` (NaN for empty rows)."""
-    return quantiles(bank, jnp.asarray([q]), spec=spec, use_kernel=use_kernel)[:, 0]
+    return quantiles_impl(bank, jnp.asarray([q]), spec=spec, use_kernel=use_kernel)[
+        :, 0
+    ]

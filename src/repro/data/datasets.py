@@ -17,6 +17,8 @@ reproducible.
 
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 __all__ = ["make_dataset", "DATASETS"]
@@ -25,7 +27,10 @@ DATASETS = ("pareto", "span", "power")
 
 
 def make_dataset(name: str, n: int, seed: int = 0) -> np.ndarray:
-    rng = np.random.default_rng((seed, hash(name) & 0xFFFF))
+    # crc32, not hash(): str hashes are randomized per process
+    # (PYTHONHASHSEED), which made "deterministic" datasets differ between
+    # runs — and occasionally drew span tails past HDR's trackable range.
+    rng = np.random.default_rng((seed, zlib.crc32(name.encode()) & 0xFFFF))
     if name == "pareto":
         # cdf F(t) = 1 - 1/t  (a = b = 1)
         return rng.pareto(1.0, n) + 1.0

@@ -1,0 +1,20 @@
+"""SketchEngine tier: persistent compiled call paths between core and kernels.
+
+kernels → engine → core → telemetry → serve: the engine owns the compiled
+executables (AOT-lowered once per path × geometry), the donated
+state-in/state-out ingest, the per-spec constant caches, and the
+row-sharded multi-device banks.
+"""
+
+from repro.engine.tables import bucket_value_table, device_value_table
+from repro.engine.engine import SketchEngine
+from repro.engine.sharded import ShardedBank, ShardedEngine, make_engine
+
+__all__ = [
+    "SketchEngine",
+    "ShardedEngine",
+    "ShardedBank",
+    "make_engine",
+    "bucket_value_table",
+    "device_value_table",
+]

@@ -1,0 +1,388 @@
+"""SketchEngine: persistent compiled executables + donated in-place ingest.
+
+Everything above the kernels used to pay two taxes on the hot ingest loop:
+
+* **dispatch** — each ``sketch_bank.add`` / ``quantiles`` call re-entered a
+  ``jax.jit`` wrapper, re-hashing the ``BucketSpec`` static argument and
+  re-checking the trace-cache signature per call;
+* **allocation** — every state-in/state-out step produced a *fresh* bank
+  (two new ``(K, m)`` buffers per ``record``), so a 4096×2048 bank churned
+  ~64 MiB of allocations per ingest call.
+
+``SketchEngine`` removes both.  It owns one AOT-lowered executable per
+(path, batch geometry) — built once via ``jit(...).lower(...).compile()``
+and then invoked directly, skipping the jit front door entirely — and every
+state-in/state-out path (``ingest``, ``collapse_to``, ``reset``, ``merge``)
+**donates** the input bank pytree, so XLA updates the K×m buffers in place
+instead of allocating a fresh bank per call.
+
+Consequence of donation (the standard jax contract): after
+``bank = engine.ingest(bank, ...)`` the *old* bank reference is dead —
+rebind, never reuse.  Engine methods are host-side entry points; inside a
+``jit``/``shard_map`` trace call the ``sketch_bank`` impls directly.
+
+Batch geometry: executables are shape-specialized, so ``ingest`` pads
+ragged batches up to the next power of two (NaN values / id -1 / weight 0
+lanes contribute nothing by the kernel contract) — a stream of arbitrary
+batch sizes compiles O(log N) executables, not O(#distinct sizes).
+
+The per-spec bucket-value tables live in ``repro.engine.tables`` — one host
+construction + one device upload per spec per process, shared by every
+executable this engine builds (and by the non-engine query paths).
+
+Argument/output *kinds* annotate each executable's signature so the
+row-sharded subclass (``repro.engine.sharded.ShardedEngine``) can reuse
+these exact call paths under ``shard_map``:
+
+* ``"bank"``   — the SketchBank pytree (row axis leading on every leaf);
+* ``"rows"``   — a per-row ``(K,)`` array (collapse targets, reset levels);
+* ``"batch"``  — a streamed batch axis (values / weights), replicated;
+* ``"ids"``    — like batch, but carries *global* row ids the sharded
+  engine rebases to shard-local ids;
+* ``"scalar"`` — replicated scalars (thresholds, qs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import jax_sketch
+from repro.core import sketch_bank as sbank
+from repro.core.sketch_bank import SketchBank
+from repro.kernels.ref import MAX_COLLAPSE_LEVEL, BucketSpec
+
+__all__ = ["SketchEngine"]
+
+_MIN_BATCH = 32  # smallest padded ingest batch (executable-count floor)
+
+
+def _pad_to_bucket(n: int) -> int:
+    """Next power-of-two >= n (floored at ``_MIN_BATCH``)."""
+    b = _MIN_BATCH
+    while b < n:
+        b <<= 1
+    return b
+
+
+def _zero_where(mask: jnp.ndarray, arr: jnp.ndarray) -> jnp.ndarray:
+    """``where(mask, 0, arr)`` without dtype promotion (int counters stay int)."""
+    return jnp.where(mask, jnp.zeros_like(arr), arr)
+
+
+class SketchEngine:
+    """Compiled call paths for one bank geometry (spec, K, dtype, method).
+
+    Stateless with respect to the bank: banks are passed in and returned
+    (donated) like any jax state, so one engine can drive many banks of the
+    same geometry.  ``new_bank()`` mints a fresh one.
+
+    ``use_kernel`` / ``method`` pin the kernel backend and insert pipeline
+    exactly as ``sketch_bank.add`` does; ``collapse_threshold`` semantics
+    live at the call site (``ingest(..., threshold=)``), not here, so one
+    executable serves every threshold value.
+    """
+
+    def __init__(
+        self,
+        spec: BucketSpec,
+        num_sketches: int,
+        *,
+        counts_dtype=jnp.float32,
+        use_kernel: bool = False,
+        method: str | None = None,
+    ):
+        self.spec = spec
+        self.num_sketches = int(num_sketches)
+        self.counts_dtype = jax_sketch._counts_dtype(counts_dtype)
+        self.use_kernel = use_kernel
+        self.method = method
+        self._cache: dict[tuple, Any] = {}
+        self._hits = 0
+        self._misses = 0
+
+    # ------------------------------------------------------------------ #
+    # executable cache
+    # ------------------------------------------------------------------ #
+    def _wrap(
+        self,
+        fn: Callable,
+        donate: tuple[int, ...],
+        in_kinds: Sequence[str],
+        out_kinds: Sequence[str],
+    ) -> Callable:
+        """Build the jit-able callable; the sharded engine wraps in shard_map."""
+        del in_kinds, out_kinds
+        return jax.jit(fn, donate_argnums=donate)
+
+    def _compiled(
+        self,
+        key: tuple,
+        build: Callable,
+        donate: tuple[int, ...],
+        in_kinds: Sequence[str],
+        out_kinds: Sequence[str],
+        *args,
+    ):
+        """AOT-lower ``build`` against ``args`` once; reuse forever after.
+
+        ``key`` captures the batch geometry the executable is specialized
+        to; ``donate`` lists argument positions whose buffers the
+        executable consumes (state-in/state-out paths donate the bank).
+        """
+        exe = self._cache.get(key)
+        if exe is None:
+            self._misses += 1
+            exe = self._wrap(build, donate, in_kinds, out_kinds).lower(*args).compile()
+            self._cache[key] = exe
+        else:
+            self._hits += 1
+        return exe(*args)
+
+    def cache_info(self) -> dict:
+        return {
+            "executables": len(self._cache),
+            "hits": self._hits,
+            "misses": self._misses,
+        }
+
+    # ------------------------------------------------------------------ #
+    # bank lifecycle
+    # ------------------------------------------------------------------ #
+    def new_bank(self) -> SketchBank:
+        """Fresh zero bank in this engine's geometry."""
+        return self._place(
+            sbank.empty(self.spec, self.num_sketches, counts_dtype=self.counts_dtype)
+        )
+
+    def _place(self, bank: SketchBank) -> SketchBank:
+        """Hook for subclasses: pin the bank's device placement."""
+        return bank
+
+    def _rows(self, arr) -> jnp.ndarray:
+        """A ``(K,)`` per-row argument, placed like the bank's row axis."""
+        return jnp.asarray(arr)
+
+    def reset(self, bank: SketchBank, levels=None) -> SketchBank:
+        """Zero the bank **in place** (donated), keeping or replacing levels.
+
+        The window-reset path: counts/sums/extrema clear, per-row collapse
+        levels persist (``levels=None``) or are overwritten (shape ``(K,)``
+        int32 — the eviction path resets reclaimed rows to level 0).
+        """
+
+        def reset_impl(b: SketchBank, lv: jnp.ndarray) -> SketchBank:
+            z = jax.tree.map(jnp.zeros_like, b)
+            return z._replace(
+                vmin=jnp.full_like(b.vmin, jnp.inf),
+                vmax=jnp.full_like(b.vmax, -jnp.inf),
+                level=lv,
+            )
+
+        # np round-trip: never hand the donated bank's own level buffer
+        # back as a second argument (aliased donation is undefined)
+        lv = self._rows(
+            np.asarray(bank.level if levels is None else levels, np.int32)
+        )
+        return self._compiled(
+            ("reset",),
+            reset_impl,
+            (0,),
+            ("bank", "rows"),
+            ("bank",),
+            bank,
+            lv,
+        )
+
+    # ------------------------------------------------------------------ #
+    # ingest (donated, fused with the reactive collapse)
+    # ------------------------------------------------------------------ #
+    def add(
+        self,
+        bank: SketchBank,
+        values,
+        sketch_ids,
+        weights=None,
+        *,
+        auto_collapse: bool = False,
+    ) -> SketchBank:
+        """Donated ``sketch_bank.add``: the input bank is updated in place."""
+        bank, _, _ = self.ingest(
+            bank, values, sketch_ids, weights, auto_collapse=auto_collapse
+        )
+        return bank
+
+    def ingest(
+        self,
+        bank: SketchBank,
+        values,
+        sketch_ids,
+        weights=None,
+        *,
+        threshold: float | None = None,
+        auto_collapse: bool = False,
+    ) -> tuple[SketchBank, Any, Any]:
+        """One compiled call: add a batch, then reactive-collapse hot rows.
+
+        Returns ``(bank, fired, clamped)``.  With ``threshold`` set (the
+        ``KeyedWindow`` post-record collapse), ``fired`` is the ``(K,)``
+        bool mask of rows that folded this call and ``clamped`` the mass
+        each had clamped before folding — the observability hooks for
+        collapse-transition events — computed inside the same executable
+        instead of a second dispatch.  ``threshold=None`` skips the
+        reactive pass and returns ``(bank, None, None)``.
+
+        The batch is padded to a power-of-two bucket (invalid lanes
+        contribute nothing), so ragged streams reuse a handful of
+        executables; the bank argument is always donated.
+        """
+        v = np.asarray(values, np.float32).reshape(-1)
+        s = np.asarray(sketch_ids, np.int32).reshape(-1)
+        if v.shape != s.shape:
+            raise ValueError(f"values {v.shape} vs sketch_ids {s.shape}")
+        w = None if weights is None else np.asarray(weights, np.float32).reshape(-1)
+        n = v.size
+        pad = _pad_to_bucket(max(n, 1)) - n
+        if pad:
+            v = np.pad(v, (0, pad), constant_values=np.nan)
+            s = np.pad(s, (0, pad), constant_values=-1)
+            if w is not None:
+                w = np.pad(w, (0, pad))
+
+        reactive = threshold is not None
+        key = ("ingest", v.size, w is not None, reactive, auto_collapse)
+
+        def ingest_impl(b, vv, ss, ww, thr):
+            b = sbank.add_impl(
+                b,
+                vv,
+                ss,
+                ww,
+                spec=self.spec,
+                use_kernel=self.use_kernel,
+                auto_collapse=auto_collapse,
+                method=self.method,
+            )
+            if not reactive:
+                return b
+            clamped = (b.overflow + b.underflow).astype(jnp.float32)
+            fire = (clamped > thr) & (b.level < MAX_COLLAPSE_LEVEL)
+            folded = sbank.collapse(b, fire, spec=self.spec, use_kernel=self.use_kernel)
+            b = folded._replace(
+                overflow=_zero_where(fire, b.overflow),
+                underflow=_zero_where(fire, b.underflow),
+            )
+            return b, fire, clamped
+
+        thr = jnp.asarray(0.0 if threshold is None else threshold, jnp.float32)
+        out = self._compiled(
+            key,
+            ingest_impl,
+            (0,),
+            ("bank", "batch", "ids", "batch", "scalar"),
+            ("bank", "rows", "rows") if reactive else ("bank",),
+            bank,
+            jnp.asarray(v),
+            jnp.asarray(s),
+            None if w is None else jnp.asarray(w),
+            thr,
+        )
+        if not reactive:
+            return out, None, None
+        return out
+
+    # ------------------------------------------------------------------ #
+    # resolution management (donated)
+    # ------------------------------------------------------------------ #
+    def collapse_to(self, bank: SketchBank, target) -> SketchBank:
+        """Donated ``sketch_bank.collapse_to`` (scalar or ``(K,)`` target)."""
+        tgt = self._rows(
+            np.broadcast_to(np.asarray(target, np.int32), (self.num_sketches,))
+        )
+
+        def collapse_impl(b, t):
+            return sbank.collapse_to(b, t, spec=self.spec, use_kernel=self.use_kernel)
+
+        return self._compiled(
+            ("collapse_to",),
+            collapse_impl,
+            (0,),
+            ("bank", "rows"),
+            ("bank",),
+            bank,
+            tgt,
+        )
+
+    def auto_collapse(self, bank: SketchBank, threshold: float = 0.0) -> SketchBank:
+        """Donated reactive collapse (see ``sketch_bank.auto_collapse``)."""
+
+        def auto_impl(b, thr):
+            return sbank.auto_collapse(
+                b, spec=self.spec, threshold=thr, use_kernel=self.use_kernel
+            )
+
+        thr = jnp.asarray(threshold, jnp.float32)
+        return self._compiled(
+            ("auto_collapse",),
+            auto_impl,
+            (0,),
+            ("bank", "scalar"),
+            ("bank",),
+            bank,
+            thr,
+        )
+
+    # ------------------------------------------------------------------ #
+    # merge (Algorithm 4; donates the left operand)
+    # ------------------------------------------------------------------ #
+    def merge(self, a: SketchBank, b: SketchBank) -> SketchBank:
+        """Donated ``sketch_bank.merge``: ``a``'s buffers take the result."""
+
+        def merge_impl(x, y):
+            return sbank.merge(x, y, spec=self.spec)
+
+        return self._compiled(
+            ("merge",),
+            merge_impl,
+            (0,),
+            ("bank", "bank"),
+            ("bank",),
+            a,
+            b,
+        )
+
+    # ------------------------------------------------------------------ #
+    # queries (not donated: querying must not consume the bank)
+    # ------------------------------------------------------------------ #
+    def quantiles(self, bank: SketchBank, qs) -> jnp.ndarray:
+        """Fused per-row quantiles ``(K, len(qs))``; one executable per Q.
+
+        The per-level value table threads in as an explicit argument (from
+        the per-spec cache) so the AOT executable has no closure constants.
+        """
+        qf = np.atleast_1d(np.asarray(qs, np.float32))
+        from repro.engine.tables import device_value_table
+
+        def quantiles_impl(b, q, t):
+            return sbank.quantiles_impl(
+                b, q, spec=self.spec, use_kernel=self.use_kernel, table=t
+            )
+
+        return self._compiled(
+            ("quantiles", qf.size),
+            quantiles_impl,
+            (),
+            ("bank", "scalar", "scalar"),
+            ("rowsq",),
+            bank,
+            jnp.asarray(qf),
+            device_value_table(self.spec),
+        )
+
+    def quantile(self, bank: SketchBank, q) -> jnp.ndarray:
+        """One quantile for every row, shape ``(K,)``."""
+        return self.quantiles(bank, [q])[:, 0]

@@ -1,0 +1,276 @@
+"""Row-sharded sketch banks: one logical bank across a device mesh.
+
+The paper's headline property — full mergeability (Algorithm 4: merge is a
+per-key sum) — means a bank row-partitioned over a ``keys`` mesh axis is
+still *one* bank: every row lives wholly on one shard, per-row operations
+(insert, collapse, quantiles) are shard-local, and the only collective in
+the whole system is the rollup psum.  That lifts the bank's key capacity
+from one device's VMEM to the mesh's.
+
+``ShardedEngine`` subclasses ``SketchEngine`` and reuses its exact call
+paths (the same ``sketch_bank`` impls, the same executable cache, the same
+donation) — the only deltas are the ``shard_map`` wrapper built from each
+executable's argument kinds, global→local id rebasing, and replicated
+placement of the streamed batch.  Ingest semantics are unchanged: every
+shard sees the full batch, keeps the lanes whose global row id falls in its
+block, and runs the same segmented/scatter kernels on its local rows —
+bit-exact vs the single-device bank because each value lands in exactly one
+shard and the per-row math is identical.
+
+``ShardedBank`` is the stateful convenience wrapper (owns the bank pytree,
+rebinding it through the donated paths) used by examples and parity tests;
+``telemetry.KeyedWindow`` drives the engines directly.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import sketch_bank as sbank
+from repro.core.sketch_bank import SketchBank
+from repro.engine.engine import SketchEngine
+from repro.engine.tables import device_value_table
+from repro.kernels.ref import BucketSpec, bank_quantiles_ref
+from repro.launch.mesh import make_keys_mesh
+from repro.sharding.rules import BANK_ROW_AXIS, bank_pspec, bank_sharding
+
+__all__ = ["ShardedEngine", "ShardedBank", "make_engine"]
+
+
+def make_engine(
+    spec: BucketSpec,
+    num_sketches: int,
+    *,
+    num_shards: int | None = None,
+    **kwargs,
+) -> SketchEngine:
+    """Engine factory: single-device for ``num_shards in (None, 1)``, else
+    row-sharded over ``num_shards`` devices (the ``keys`` mesh axis)."""
+    if num_shards is None or int(num_shards) == 1:
+        return SketchEngine(spec, num_sketches, **kwargs)
+    return ShardedEngine(spec, num_sketches, num_shards=num_shards, **kwargs)
+
+
+class ShardedEngine(SketchEngine):
+    """``SketchEngine`` whose bank rows partition over the ``keys`` axis.
+
+    ``num_sketches`` is the *logical* row count; internally rows pad up to a
+    multiple of the shard count (``num_rows``) so every shard owns an equal
+    block of ``rows_per_shard`` rows.  Row ``r`` lives on shard
+    ``r // rows_per_shard`` at local row ``r % rows_per_shard`` — the
+    host-side key→(shard, row) routing is that one divmod
+    (``shard_of`` / ``local_row``).
+    """
+
+    def __init__(
+        self,
+        spec: BucketSpec,
+        num_sketches: int,
+        *,
+        num_shards: int | None = None,
+        mesh=None,
+        **kwargs,
+    ):
+        self.mesh = make_keys_mesh(num_shards) if mesh is None else mesh
+        self.num_shards = self.mesh.shape[BANK_ROW_AXIS]
+        logical = int(num_sketches)
+        rows = -(-logical // self.num_shards) * self.num_shards
+        super().__init__(spec, rows, **kwargs)
+        self.num_logical = logical
+        self.rows_per_shard = rows // self.num_shards
+
+    # host-side key→(shard, local row) routing ------------------------- #
+    def shard_of(self, row: int) -> int:
+        return int(row) // self.rows_per_shard
+
+    def local_row(self, row: int) -> int:
+        return int(row) % self.rows_per_shard
+
+    # placement hooks --------------------------------------------------- #
+    def _place(self, bank: SketchBank) -> SketchBank:
+        return jax.device_put(bank, bank_sharding(self.mesh))
+
+    def _rows(self, arr) -> jnp.ndarray:
+        a = np.asarray(arr)
+        if a.shape[0] < self.num_sketches:  # pad logical -> physical rows
+            a = np.concatenate([a, np.zeros(self.num_sketches - a.shape[0], a.dtype)])
+        return jax.device_put(jnp.asarray(a), NamedSharding(self.mesh, bank_pspec()))
+
+    _REPLICATED = ("batch", "ids", "scalar")
+
+    def _wrap(
+        self,
+        fn: Callable,
+        donate: tuple[int, ...],
+        in_kinds: Sequence[str],
+        out_kinds: Sequence[str],
+    ) -> Callable:
+        """shard_map the impl over ``keys``, rebasing global ids per shard."""
+        kind_spec = {
+            "bank": bank_pspec(),
+            "rows": bank_pspec(),
+            "batch": P(),
+            "ids": P(),
+            "scalar": P(),
+        }
+        out_spec = {"bank": bank_pspec(), "rows": bank_pspec(), "rowsq": bank_pspec()}
+        rows_local = self.rows_per_shard
+
+        def localized(*args):
+            args = list(args)
+            off = jax.lax.axis_index(BANK_ROW_AXIS) * rows_local
+            for i, kind in enumerate(in_kinds):
+                if kind == "ids" and args[i] is not None:
+                    # global ids -> shard-local; lanes owned elsewhere fall
+                    # outside [0, rows_local) and contribute nothing (the
+                    # standard invalid-id contract of the kernels)
+                    args[i] = args[i] - off
+            return fn(*args)
+
+        sm = shard_map(
+            localized,
+            mesh=self.mesh,
+            in_specs=tuple(kind_spec[k] for k in in_kinds),
+            out_specs=(
+                out_spec[out_kinds[0]]
+                if len(out_kinds) == 1
+                else tuple(out_spec[k] for k in out_kinds)
+            ),
+        )
+        return jax.jit(sm, donate_argnums=donate)
+
+    # ------------------------------------------------------------------ #
+    # cross-shard rollup: all rows -> one distribution (psum + Algorithm 2)
+    # ------------------------------------------------------------------ #
+    def rollup_quantiles(self, bank: SketchBank, qs) -> jnp.ndarray:
+        """Quantiles of the union of *every* row, shape ``(len(qs),)``.
+
+        The fleet view ("p99 across all tenants"): shard-locally every row
+        collapses to the global max level (pmax) and sums into one bucket
+        array, then a single psum per store merges the shards — Algorithm 4
+        as one collective.  Exact for integer-weight counts (sums reorder).
+        """
+        qf = np.atleast_1d(np.asarray(qs, np.float32))
+        spec = self.spec
+
+        def rollup_impl(b: SketchBank, q: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+            gmax = jax.lax.pmax(jnp.max(b.level), BANK_ROW_AXIS)
+            b = sbank.collapse_to(
+                b,
+                jnp.broadcast_to(gmax, b.level.shape),
+                spec=spec,
+                use_kernel=self.use_kernel,
+            )
+            f32 = jnp.float32
+            pos = jax.lax.psum(b.pos.astype(f32).sum(0), BANK_ROW_AXIS)
+            neg = jax.lax.psum(b.neg.astype(f32).sum(0), BANK_ROW_AXIS)
+            zero = jax.lax.psum(b.zero.astype(f32).sum(), BANK_ROW_AXIS)
+            vmin = jax.lax.pmin(jnp.min(b.vmin), BANK_ROW_AXIS)
+            vmax = jax.lax.pmax(jnp.max(b.vmax), BANK_ROW_AXIS)
+            return bank_quantiles_ref(
+                pos[None],
+                neg[None],
+                zero[None],
+                vmin[None],
+                vmax[None],
+                gmax[None],
+                q,
+                t,
+            )[0]
+
+        sm = shard_map(
+            rollup_impl,
+            mesh=self.mesh,
+            in_specs=(bank_pspec(), P(), P()),
+            out_specs=P(),
+        )
+        table = device_value_table(spec)
+        key = ("rollup", qf.size)
+        exe = self._cache.get(key)
+        if exe is None:
+            self._misses += 1
+            exe = jax.jit(sm).lower(bank, jnp.asarray(qf), table).compile()
+            self._cache[key] = exe
+        else:
+            self._hits += 1
+        return exe(bank, jnp.asarray(qf), table)
+
+
+class ShardedBank:
+    """Stateful row-sharded bank: a ``ShardedEngine`` plus its live state.
+
+    The drop-in counterpart of a single-device ``SketchBank`` for callers
+    that want object-style usage (examples, parity tests); every mutating
+    call rebinds the donated state, so the bank genuinely updates in place
+    shard by shard.
+    """
+
+    def __init__(
+        self,
+        spec: BucketSpec,
+        num_sketches: int,
+        *,
+        num_shards: int | None = None,
+        counts_dtype=jnp.float32,
+        use_kernel: bool = False,
+        method: str | None = None,
+    ):
+        self.engine = ShardedEngine(
+            spec,
+            num_sketches,
+            num_shards=num_shards,
+            counts_dtype=counts_dtype,
+            use_kernel=use_kernel,
+            method=method,
+        )
+        self.state = self.engine.new_bank()
+
+    @property
+    def spec(self) -> BucketSpec:
+        return self.engine.spec
+
+    @property
+    def num_sketches(self) -> int:
+        return self.engine.num_logical
+
+    @property
+    def num_shards(self) -> int:
+        return self.engine.num_shards
+
+    def add(self, values, sketch_ids, weights=None, *, auto_collapse=False) -> None:
+        self.state = self.engine.add(
+            self.state, values, sketch_ids, weights, auto_collapse=auto_collapse
+        )
+
+    def auto_collapse(self, threshold: float = 0.0) -> None:
+        self.state = self.engine.auto_collapse(self.state, threshold)
+
+    def collapse_to(self, target) -> None:
+        self.state = self.engine.collapse_to(self.state, target)
+
+    def reset(self, levels=None) -> None:
+        self.state = self.engine.reset(self.state, levels)
+
+    def quantiles(self, qs) -> np.ndarray:
+        """Per-row quantiles ``(num_sketches, len(qs))`` (logical rows)."""
+        out = self.engine.quantiles(self.state, qs)
+        return np.asarray(out)[: self.num_sketches]
+
+    def rollup_quantiles(self, qs) -> np.ndarray:
+        """Quantiles of all rows merged (the fleet view), ``(len(qs),)``."""
+        return np.asarray(self.engine.rollup_quantiles(self.state, qs))
+
+    @property
+    def levels(self) -> np.ndarray:
+        return np.asarray(self.state.level)[: self.num_sketches]
+
+    @property
+    def counts(self) -> np.ndarray:
+        return np.asarray(self.state.counts)[: self.num_sketches]

@@ -1,0 +1,60 @@
+"""Per-spec constant caches shared by every quantile path.
+
+The fused bank query and the single-sketch query both select bucket-value
+estimates from the ``(MAX_COLLAPSE_LEVEL + 1, m)`` per-level table.  The
+table is pure geometry — it depends only on the ``BucketSpec`` — yet before
+the engine existed each query path rebuilt it per trace (exact float64 host
+math over every (level, bucket) pair, then a fresh host->device transfer).
+This module is the engine's per-spec cache: one host construction and one
+device upload per spec per process, shared by ``kernels.ops``,
+``core.jax_sketch``, ``core.sketch_bank`` and the engine executables.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import MAX_COLLAPSE_LEVEL, BucketSpec
+
+__all__ = ["bucket_value_table", "device_value_table"]
+
+
+@lru_cache(maxsize=None)
+def bucket_value_table(spec: BucketSpec) -> np.ndarray:
+    """(MAX_COLLAPSE_LEVEL + 1, m) relative-error midpoint estimates.
+
+    Row L gives the estimate for bucket i at collapse level L
+    (``KeyMapping.value_at_level``, the same exact float64 host math the
+    host quantile path uses, so the tiers answer identically), clipped into
+    the float32 finite range so the device query stays well-defined at
+    extreme levels.
+    """
+    from repro.core.mapping import make_mapping
+
+    m = make_mapping(spec.mapping, spec.relative_accuracy)
+    keys = np.arange(spec.offset, spec.offset + spec.num_buckets)
+    table = np.empty((MAX_COLLAPSE_LEVEL + 1, spec.num_buckets), np.float64)
+    for lev in range(MAX_COLLAPSE_LEVEL + 1):
+        for i, k in enumerate(keys):
+            table[lev, i] = m.value_at_level(int(k), lev)
+    f32 = np.finfo(np.float32)
+    return np.clip(table, float(f32.tiny), float(f32.max))
+
+
+@lru_cache(maxsize=None)
+def device_value_table(spec: BucketSpec) -> jnp.ndarray:
+    """The per-level table as a device-resident float32 constant.
+
+    One upload per spec per process; every quantile trace closes over this
+    array instead of re-deriving the host table and re-transferring it.
+    The first call may happen *inside* a jit trace (the deferred imports in
+    the query paths), so creation is pinned eager — caching a tracer here
+    would leak it out of its trace.
+    """
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(bucket_value_table(spec), jnp.float32)

@@ -378,17 +378,22 @@ def bank_quantiles(
     spec: BucketSpec,
     row_tile: int = 8,
     force: str | None = None,  # "pallas" | "interpret" | "ref" | None(auto)
+    table: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Fused Algorithm 2 over all K rows and all qs: ``(K, len(qs))``.
 
     One cumsum + lane-count searchsorted per row tile answers every q; per
-    row collapse levels select the bucket-value line from the trace-time
-    table.  Pallas and XLA paths share the formulation and agree
-    bit-for-bit; counts of any dtype are cast to float32 for rank math."""
+    row collapse levels select the bucket-value line from the per-spec
+    engine table cache.  Pallas and XLA paths share the formulation and
+    agree bit-for-bit; counts of any dtype are cast to float32 for rank
+    math.  ``table`` lets AOT callers (the engine) thread the per-level
+    value table as an explicit executable argument instead of a closure
+    constant; ``None`` fetches the engine's cached per-spec copy."""
     _check_force(force)
-    from repro.core.jax_sketch import bucket_value_table  # deferred: no cycle
+    if table is None:
+        from repro.engine.tables import device_value_table  # deferred: no cycle
 
-    table = jnp.asarray(bucket_value_table(spec), jnp.float32)
+        table = device_value_table(spec)
     impl = _impl(force, pos.shape[0], row_tile)
     if impl == "ref":
         return bank_quantiles_ref(pos, neg, zero, vmin, vmax, level, qs, table)

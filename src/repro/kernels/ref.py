@@ -260,7 +260,7 @@ def composite_keys(
     return jnp.where(valid, key, sentinel)
 
 
-@partial(jax.jit, static_argnames=("num_segments", "spec"))
+@partial(jax.jit, static_argnames=("num_segments", "spec", "payload_sort"))
 def compact_triples(
     values: jnp.ndarray,
     segment_ids: jnp.ndarray | None = None,
@@ -269,6 +269,7 @@ def compact_triples(
     *,
     num_segments: int,
     spec: BucketSpec,
+    payload_sort: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Sort + reduce: N raw values -> U <= min(N, 2*K*m + 1) unique triples.
 
@@ -283,11 +284,18 @@ def compact_triples(
     scatter kernel's streamed axis the *compacted* axis.
 
     ``weights=None`` is the fast path: only the keys are sorted (no
-    payload) and run totals count lanes — exact integer math.  With
-    explicit weights the (key, weight) pairs sort together (unstable, so
-    equal-key payload order is arbitrary) and runs reduce with an in-order
-    ``segment_sum``; exact whenever the weights are integer-valued (the
-    same 2^24 float32 ceiling the dense stores have).
+    payload) and run totals count lanes — exact integer math.  Explicit
+    weights take the two-pass *weighted fast path*: the sort moves only
+    (key, lane-index) int32 pairs — never the float weights — and the
+    weights gather through the resulting permutation afterwards, so the
+    heavy sort stage stays all-integer and keys-shaped for weighted
+    streams too.  ``payload_sort=True`` pins the original formulation
+    (the (key, weight) pairs sort together) for parity testing.  Either
+    way runs reduce with an in-order ``segment_sum``; the sorts are
+    unstable, so equal-key payload order is arbitrary — exact whenever
+    the weights are integer-valued (the same 2^24 float32 ceiling the
+    dense stores have), final-ulp differences possible between the two
+    formulations for fractional weights.
     """
     m = spec.num_buckets
     key = composite_keys(
@@ -299,9 +307,14 @@ def compact_triples(
     if weights is None:
         sk = jax.lax.sort([key], num_keys=1, is_stable=False)[0]
         sw = jnp.ones_like(sk, jnp.float32)
-    else:
+    elif payload_sort:
         w = weights.reshape(-1).astype(jnp.float32)
         sk, sw = jax.lax.sort([key, w], num_keys=1, is_stable=False)
+    else:
+        w = weights.reshape(-1).astype(jnp.float32)
+        perm = jax.lax.iota(jnp.int32, n)
+        sk, sperm = jax.lax.sort([key, perm], num_keys=1, is_stable=False)
+        sw = w[sperm]
     starts = jnp.concatenate([jnp.ones(1, bool), sk[1:] != sk[:-1]])
     rid = jnp.cumsum(starts.astype(jnp.int32)) - 1  # run index, packed 0..U-1
     run_w = jax.ops.segment_sum(sw, rid, num_segments=n, indices_are_sorted=True)

@@ -1,0 +1,163 @@
+"""Thin stdlib HTTP/JSON surface over the serve-layer quantile queries.
+
+The paper's running example is a latency-quantile *service*; this makes the
+in-process answers (``Server.endpoint_quantiles`` rollups,
+``Server.live_endpoint_quantiles`` current-window fused bank queries,
+``Server.endpoint_report``) reachable over HTTP with nothing beyond the
+standard library:
+
+  GET /healthz                             -> {"ok": true}
+  GET /quantiles?endpoint=/v1/ep0&q=0.5,0.95,0.99
+                                           -> rollup quantiles for one key
+  GET /live?q=0.5,0.95,0.99                -> current-window quantiles for
+                                              every live endpoint (one
+                                              fused bank query)
+  GET /report                              -> per-endpoint quantiles +
+                                              effective alpha + collapse
+                                              transition events
+
+``serve_http`` duck-types: any object with those three methods works (the
+model ``Server``, or a bare ``KeyedWindow``/``KeyedAggregator`` pair via
+``TelemetryFacade``), so the HTTP tier needs no model stack.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlparse
+
+__all__ = ["TelemetryFacade", "QuantileHTTPServer", "serve_http"]
+
+_DEFAULT_QS = (0.5, 0.95, 0.99)
+
+
+class TelemetryFacade:
+    """The three serve-layer query methods over a window + aggregator pair.
+
+    Lets the HTTP tier (and tests) run against real sketch telemetry
+    without constructing the model ``Server``.
+    """
+
+    def __init__(self, window, aggregator):
+        self.window = window
+        self.aggregator = aggregator
+
+    def endpoint_quantiles(self, endpoint: str, qs=_DEFAULT_QS) -> list[float]:
+        return self.aggregator.quantiles(endpoint, list(qs))
+
+    def live_endpoint_quantiles(self, qs=_DEFAULT_QS) -> dict:
+        return self.window.all_quantiles(list(qs))
+
+    def endpoint_report(self, qs=_DEFAULT_QS) -> dict:
+        return {
+            ep: {
+                "quantiles": self.aggregator.quantiles(ep, list(qs)),
+                "alpha": self.aggregator.totals[ep].effective_alpha,
+                "collapse_events": [
+                    e._asdict() for e in self.aggregator.events_for(ep)
+                ],
+            }
+            for ep in sorted(self.aggregator.keys())
+        }
+
+
+def _parse_qs_param(query: dict) -> list[float]:
+    raw = query.get("q", [None])[0]
+    if raw is None:
+        return list(_DEFAULT_QS)
+    qs = [float(tok) for tok in raw.split(",") if tok]
+    if not qs or any(not 0.0 <= q <= 1.0 for q in qs):
+        raise ValueError(f"q must be comma-separated values in [0, 1], got {raw!r}")
+    return qs
+
+
+def _make_handler(telemetry):
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, *args):  # quiet: tests/servers manage logging
+            pass
+
+        def _reply(self, code: int, payload: dict) -> None:
+            body = json.dumps(payload).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_GET(self) -> None:  # noqa: N802 (http.server API)
+            url = urlparse(self.path)
+            query = parse_qs(url.query)
+            try:
+                if url.path == "/healthz":
+                    self._reply(200, {"ok": True})
+                elif url.path == "/quantiles":
+                    endpoint = query.get("endpoint", [None])[0]
+                    if endpoint is None:
+                        raise ValueError("missing required parameter 'endpoint'")
+                    qs = _parse_qs_param(query)
+                    vals = telemetry.endpoint_quantiles(endpoint, qs)
+                    self._reply(
+                        200,
+                        {"endpoint": endpoint, "qs": qs, "quantiles": list(vals)},
+                    )
+                elif url.path == "/live":
+                    qs = _parse_qs_param(query)
+                    self._reply(
+                        200,
+                        {"qs": qs, "endpoints": telemetry.live_endpoint_quantiles(qs)},
+                    )
+                elif url.path == "/report":
+                    self._reply(200, telemetry.endpoint_report(_parse_qs_param(query)))
+                else:
+                    self._reply(404, {"error": f"unknown path {url.path!r}"})
+            except KeyError as e:
+                self._reply(404, {"error": f"unknown endpoint {e.args[0]!r}"})
+            except ValueError as e:
+                self._reply(400, {"error": str(e)})
+
+    return Handler
+
+
+class QuantileHTTPServer:
+    """ThreadingHTTPServer wrapper with a background serve thread.
+
+    ``port=0`` binds an ephemeral port (see ``.port`` after construction).
+    Use as a context manager or call ``shutdown()`` explicitly.
+    """
+
+    def __init__(self, telemetry, host: str = "127.0.0.1", port: int = 0):
+        self.httpd = ThreadingHTTPServer((host, port), _make_handler(telemetry))
+        self.host, self.port = self.httpd.server_address[:2]
+        self._thread = threading.Thread(target=self.httpd.serve_forever, daemon=True)
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "QuantileHTTPServer":
+        self._thread.start()
+        return self
+
+    def shutdown(self) -> None:
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        self._thread.join(timeout=5)
+
+    def __enter__(self) -> "QuantileHTTPServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+
+def serve_http(telemetry, host: str = "127.0.0.1", port: int = 8787) -> None:
+    """Blocking entry point: serve ``telemetry``'s quantile queries forever."""
+    server = QuantileHTTPServer(telemetry, host, port)
+    print(f"[http] serving latency quantiles on {server.url}")
+    server.start()
+    try:
+        server._thread.join()
+    except KeyboardInterrupt:
+        server.shutdown()

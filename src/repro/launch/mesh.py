@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_keys_mesh", "HW"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,6 +17,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_keys_mesh(num_shards: int | None = None):
+    """1-D mesh over the ``keys`` axis for row-sharded sketch banks.
+
+    The bank's row axis partitions over it (``sharding.rules.bank_sharding``);
+    full mergeability makes the sharded bank one logical bank, so this mesh
+    is orthogonal to (and composable with) the model meshes above.
+    ``num_shards=None`` takes every visible device.
+    """
+    devs = jax.devices()
+    n = len(devs) if num_shards is None else int(num_shards)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"num_shards={n} outside [1, {len(devs)}] visible devices")
+    return jax.make_mesh((n,), ("keys",), devices=devs[:n])
 
 
 def make_local_mesh(model: int = 1):

@@ -64,6 +64,7 @@ class Server:
         model_axis: int = 1,
         max_endpoints: int = 64,
         flush_every: int = 64,
+        sketch_shards: int | None = None,
     ):
         self.cfg = cfg
         self.slots = batch_slots
@@ -78,8 +79,13 @@ class Server:
         # telemetry: the paper's Figure 2 setting, measured on ourselves
         self.step_latency = DDSketch(0.01)
         self.request_latency = DDSketch(0.01)
-        # per-endpoint latencies: one SketchBank row per endpoint, windowed
-        self.endpoint_window = KeyedWindow(BucketSpec(), capacity=max_endpoints)
+        # per-endpoint latencies: one SketchBank row per endpoint, windowed;
+        # ingest rides the engine tier (persistent executables, donated
+        # in-place bank updates), optionally row-sharded over sketch_shards
+        # devices for key counts beyond one device
+        self.endpoint_window = KeyedWindow(
+            BucketSpec(), capacity=max_endpoints, num_shards=sketch_shards
+        )
         self.endpoint_agg = KeyedAggregator(self.endpoint_window.spec)
         self.flush_every = flush_every
         self._pending: list[tuple[str, float]] = []
@@ -190,12 +196,17 @@ class Server:
         return self.endpoint_agg.totals[endpoint].effective_alpha
 
     def endpoint_report(self, qs=(0.5, 0.95, 0.99)) -> dict:
-        """Per-endpoint latency quantiles (ms) + effective alpha, for every
-        endpoint seen."""
+        """Per-endpoint latency quantiles (ms) + effective alpha + the
+        collapse-transition events explaining any alpha degradation
+        (when/why the endpoint's stream outgrew its bucket range), for
+        every endpoint seen."""
         return {
             ep: {
                 "quantiles_ms": [v * 1e3 for v in self.endpoint_agg.quantiles(ep, qs)],
                 "alpha": self.endpoint_alpha(ep),
+                "collapse_events": [
+                    e._asdict() for e in self.endpoint_agg.events_for(ep)
+                ],
             }
             for ep in sorted(self.endpoint_agg.keys())
         }

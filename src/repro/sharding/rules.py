@@ -36,7 +36,31 @@ __all__ = [
     "activation_spec",
     "batch_specs",
     "MeshShardCtx",
+    "BANK_ROW_AXIS",
+    "bank_pspec",
+    "bank_sharding",
 ]
+
+# --------------------------------------------------------------------- #
+# sketch-bank rows (the engine's `keys` mesh axis)
+# --------------------------------------------------------------------- #
+BANK_ROW_AXIS = "keys"
+
+
+def bank_pspec() -> P:
+    """PartitionSpec for every ``SketchBank`` leaf: rows over ``keys``.
+
+    Each leaf carries the row axis leading — ``(K, m)`` counts and ``(K,)``
+    per-row scalars alike — so one prefix spec shards the whole pytree.
+    Full mergeability (Algorithm 4) is what makes this sound: a
+    row-partitioned bank is still one logical bank.
+    """
+    return P(BANK_ROW_AXIS)
+
+
+def bank_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding applying ``bank_pspec`` to every bank leaf."""
+    return NamedSharding(mesh, bank_pspec())
 
 
 def dp_axes(mesh: Mesh) -> tuple:

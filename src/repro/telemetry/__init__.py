@@ -8,6 +8,7 @@ from repro.telemetry.device import (  # noqa: F401
 from repro.telemetry.host import HostAggregator, WindowStats  # noqa: F401
 from repro.telemetry.keyed import (  # noqa: F401
     OVERFLOW_KEY,
+    CollapseEvent,
     KeyedAggregator,
     KeyedWindow,
 )

@@ -3,9 +3,16 @@
 This is the paper's multi-tenant setting (one sketch per endpoint / customer
 / host) joined with the agent -> aggregator pipeline of ``telemetry.host``:
 
-* on device, a window is a ``SketchBank`` — K rows, one per active key,
-  filled by a *single* segmented-histogram dispatch per ``record`` call no
-  matter how many keys are live;
+* on device, a window is a ``SketchBank`` driven through the
+  ``repro.engine`` tier — every ``record`` is **one persistent compiled
+  executable call** (add + reactive collapse fused) that **donates** the
+  bank, so the hot ingest loop pays neither jit re-dispatch nor a fresh
+  K×m allocation per call;
+* with ``num_shards > 1`` the bank rows partition over the ``keys`` mesh
+  axis (``repro.engine.sharded``): the window stays one logical bank while
+  its capacity scales with the mesh, and the host-side key→row map doubles
+  as the key→(shard, row) router (rows stripe across shards so load
+  balances as keys arrive);
 * on the host, ``KeyedAggregator`` keeps one exact, unbounded ``DDSketch``
   per key and merges flushed windows in (Algorithm 4 — mixed collapse
   levels included), so any-horizon rollups per key stay exact-after-merge.
@@ -20,26 +27,41 @@ jit.
 
 Resolution adapts per row (UDDSketch uniform collapse): after each
 ``record`` the window auto-collapses rows whose clamped mass exceeded
-``collapse_threshold``, and the per-row levels *survive* window resets —
-a hot key that needed gamma^2 keeps it for the next window, so at most one
-window's tails are ever clamped.  ``levels()`` / ``alphas()`` report the
-per-key resolution; evicted rows reset to level 0 before reuse.
+``collapse_threshold`` — fused into the ingest executable — and the
+per-row levels *survive* window resets.  Every transition is recorded as a
+``CollapseEvent`` (key, old/new level, window index, clamped mass), so
+operators can see *when and why* a key's alpha degraded; ``levels()`` /
+``alphas()`` report the live resolution, ``drain_events()`` hands the
+event log to the serving layer.
 """
 
 from __future__ import annotations
+
+from collections import deque
+from typing import NamedTuple
 
 import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core import jax_sketch
 from repro.core import sketch_bank as sbank
 from repro.core.ddsketch import DDSketch
-from repro.core.jax_sketch import BucketSpec
+from repro.core.jax_sketch import BucketSpec, effective_alpha
+from repro.engine import ShardedEngine, make_engine
 
-__all__ = ["OVERFLOW_KEY", "KeyedWindow", "KeyedAggregator"]
+__all__ = ["OVERFLOW_KEY", "CollapseEvent", "KeyedWindow", "KeyedAggregator"]
 
 OVERFLOW_KEY = "__other__"
+
+
+class CollapseEvent(NamedTuple):
+    """One auto-collapse transition: why a key's guarantee degraded."""
+
+    key: str
+    old_level: int
+    new_level: int
+    window: int  # window index the transition happened in
+    clamped_mass: float  # mass that had clamped when the fold fired
 
 
 class KeyedWindow:
@@ -53,6 +75,13 @@ class KeyedWindow:
     row's resolution for covering its true range — raise it if occasional
     out-of-range outliers should be tolerated instead.  ``evict_after`` is
     the idle-window count at which a key's row is reclaimed.
+
+    ``num_shards`` > 1 row-shards the bank over that many devices (the
+    ``keys`` mesh axis); rows are handed out striped across shards.
+    ``track_collapse_events=False`` drops the ``CollapseEvent`` log
+    entirely.  Tracking is sync-free on the hot path: the ingest
+    executable's (fired, clamped) outputs park on device and only transfer
+    when the events are actually read (or the window resets).
     """
 
     def __init__(
@@ -65,6 +94,9 @@ class KeyedWindow:
         evict_after: int = 1,
         method: str | None = None,
         counts_dtype=jnp.float32,
+        num_shards: int | None = None,
+        track_collapse_events: bool = True,
+        max_events: int = 1024,
     ):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -77,11 +109,40 @@ class KeyedWindow:
         self.evict_after = evict_after
         self.method = method  # insert pipeline pin ("matmul"/"sort"/None auto)
         self.counts_dtype = counts_dtype
+        self.engine = make_engine(
+            spec,
+            capacity + 1,
+            num_shards=num_shards,
+            counts_dtype=counts_dtype,
+            use_kernel=use_kernel,
+            method=method,
+        )
+        self.bank = self.engine.new_bank()
         self.key_to_row: dict[str, int] = {OVERFLOW_KEY: 0}
-        self.bank = sbank.empty(spec, capacity + 1, counts_dtype=counts_dtype)
-        self._free = list(range(capacity, 0, -1))  # pop() hands out 1, 2, ...
+        self._free = self._initial_free_pool()
         self._last_seen: dict[str, int] = {}
         self._window = 0
+        self.track_collapse_events = track_collapse_events
+        self._events: deque[CollapseEvent] = deque(maxlen=max_events)
+        # (fired, clamped, window) device outputs awaiting host transfer:
+        # materializing lazily keeps the hot record() loop sync-free
+        self._pending: list[tuple] = []
+        # host mirror of per-row levels: reactive folds bump exactly one
+        # level per fire, so events never need an extra device read
+        self._levels = np.zeros(self.engine.num_sketches, np.int64)
+
+    def _initial_free_pool(self) -> list[int]:
+        """Usable rows, ordered so ``pop()`` balances load.
+
+        Single-device: hands out 1, 2, ... in order.  Sharded: rows stripe
+        round-robin across shards (shard 0 local 1, shard 1 local 0, ...),
+        so the first S hot keys land on S different devices — the host-side
+        half of the key→(shard, row) routing.
+        """
+        rows = list(range(1, self.capacity + 1))
+        if isinstance(self.engine, ShardedEngine):
+            rows.sort(key=lambda r: (self.engine.local_row(r), self.engine.shard_of(r)))
+        return rows[::-1]  # pop() takes from the end
 
     # ------------------------------------------------------------------ #
     def row_id(self, key: str) -> int:
@@ -97,13 +158,23 @@ class KeyedWindow:
             self._last_seen[key] = self._window
         return rid
 
+    def shard_of(self, key: str) -> int:
+        """Device shard holding ``key``'s row (0 on a single-device bank)."""
+        rid = self.key_to_row.get(key)
+        if rid is None:
+            raise KeyError(f"no values recorded for key {key!r}")
+        if isinstance(self.engine, ShardedEngine):
+            return self.engine.shard_of(rid)
+        return 0
+
     def record(self, keys, values, weights=None) -> None:
-        """Insert ``(key, value)`` pairs; one bank dispatch for the batch.
+        """Insert ``(key, value)`` pairs; one engine executable per batch.
 
         ``keys`` is either a sequence of strings (one per value) or a single
-        string applied to every value.  Afterwards, rows whose inserts
-        clamped more than ``collapse_threshold`` mass fold once (uniform
-        collapse), so subsequent inserts land at the adapted resolution.
+        string applied to every value.  The ingest executable donates the
+        bank (in-place update) and fuses the reactive collapse: rows whose
+        inserts clamped more than ``collapse_threshold`` mass fold once,
+        and each fold is logged as a ``CollapseEvent``.
         """
         values = np.asarray(values, np.float32).reshape(-1)
         if isinstance(keys, str):
@@ -112,48 +183,72 @@ class KeyedWindow:
             ids = np.fromiter(
                 (self.row_id(k) for k in keys), np.int32, count=len(values)
             )
-        w = None if weights is None else jnp.asarray(weights)
-        self.bank = sbank.add(
+        self.bank, fired, clamped = self.engine.ingest(
             self.bank,
-            jnp.asarray(values),
-            jnp.asarray(ids),
-            w,
-            spec=self.spec,
-            use_kernel=self.use_kernel,
-            method=self.method,
+            values,
+            ids,
+            weights,
+            threshold=self.collapse_threshold,
         )
-        if self.collapse_threshold is not None:
-            self.bank = sbank.auto_collapse(
-                self.bank,
-                spec=self.spec,
-                threshold=self.collapse_threshold,
-                use_kernel=self.use_kernel,
-            )
+        if fired is not None and self.track_collapse_events:
+            # no host sync here: the (K,) outputs park until events are
+            # read (or the window resets), so record() stays async
+            self._pending.append((fired, clamped, self._window))
+            if len(self._pending) >= 256:  # bound the parked device arrays
+                self._materialize_events()
+
+    def _materialize_events(self) -> None:
+        """Transfer parked (fired, clamped) outputs and log the transitions.
+
+        Rows only change hands at ``reset`` (which materializes first), so
+        the *current* row->key map is the map that held at record time.
+        """
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        row_key = {r: k for k, r in self.key_to_row.items()}
+        for fired, clamped, window in pending:
+            f = np.asarray(fired)
+            if not f.any():
+                continue
+            cm = np.asarray(clamped)
+            for r in np.flatnonzero(f):
+                old = int(self._levels[r])
+                self._levels[r] = old + 1
+                self._events.append(
+                    CollapseEvent(
+                        key=row_key.get(int(r), OVERFLOW_KEY),
+                        old_level=old,
+                        new_level=old + 1,
+                        window=window,
+                        clamped_mass=float(cm[r]),
+                    )
+                )
+
+    @property
+    def events(self) -> "deque[CollapseEvent]":
+        """Collapse-transition log (materializes any parked outputs)."""
+        self._materialize_events()
+        return self._events
 
     # ------------------------------------------------------------------ #
     def quantiles(self, key: str, qs) -> list[float]:
         """Window-local per-key quantiles straight off the device bank
-        (one fused dispatch for all qs, not a Python loop per q)."""
+        (one fused bank-query executable for all qs, indexed at the key's
+        row)."""
         rid = self.key_to_row.get(key)
         if rid is None:
             raise KeyError(f"no values recorded for key {key!r}")
-        sub = sbank.row(self.bank, rid)
-        out = jax_sketch.quantiles(sub, jnp.asarray(qs, jnp.float32), spec=self.spec)
-        return [float(v) for v in np.asarray(out)]
+        out = np.asarray(self.engine.quantiles(self.bank, qs))
+        return [float(v) for v in out[rid]]
 
     def all_quantiles(self, qs) -> dict[str, list[float]]:
         """Window-local quantiles for *every* live key in one fused bank
-        query — the serving path for per-endpoint dashboards: one device
-        dispatch answers len(keys) x len(qs) estimates off one cumsum per
-        row, instead of a per-key (let alone per-q) query loop."""
-        out = np.asarray(
-            sbank.quantiles(
-                self.bank,
-                jnp.asarray(qs, jnp.float32),
-                spec=self.spec,
-                use_kernel=self.use_kernel,
-            )
-        )
+        query — the serving path for per-endpoint dashboards: one compiled
+        executable answers len(keys) x len(qs) estimates off one cumsum per
+        row (gathered across shards when the bank is sharded), instead of a
+        per-key (let alone per-q) query loop."""
+        out = np.asarray(self.engine.quantiles(self.bank, qs))
         return {
             k: [float(v) for v in out[rid]]
             for k, rid in self.key_to_row.items()
@@ -171,19 +266,27 @@ class KeyedWindow:
     def alphas(self) -> dict[str, float]:
         """Per-key effective relative-error guarantee at the live level."""
         return {
-            k: jax_sketch.effective_alpha(self.spec, lv)
-            for k, lv in self.levels().items()
+            k: effective_alpha(self.spec, lv) for k, lv in self.levels().items()
         }
+
+    def drain_events(self) -> list[CollapseEvent]:
+        """Hand off (and clear) the collapse-transition log."""
+        self._materialize_events()
+        out = list(self._events)
+        self._events.clear()
+        return out
 
     def reset(self) -> None:
         """Start the next window.
 
-        Cheap (O(K*m) zeros).  Keys idle for ``evict_after`` or more
-        whole windows are evicted — their rows rejoin the free pool at
-        level 0 — while live keys keep both their rows *and* their adapted
-        collapse levels, so stable hot keys stay stable across windows.
+        One donated executable zeroes the bank in place.  Keys idle for
+        ``evict_after`` or more whole windows are evicted — their rows
+        rejoin the free pool at level 0 — while live keys keep both their
+        rows *and* their adapted collapse levels, so stable hot keys stay
+        stable across windows.
         """
         self._window += 1
+        self._materialize_events()  # before rows change hands below
         levels = np.asarray(self.bank.level).copy()
         for key in list(self.key_to_row):
             if key == OVERFLOW_KEY:
@@ -193,9 +296,8 @@ class KeyedWindow:
                 self._last_seen.pop(key, None)
                 self._free.append(rid)
                 levels[rid] = 0  # fresh tenants start at full resolution
-        self.bank = sbank.empty(
-            self.spec, self.capacity + 1, counts_dtype=self.counts_dtype
-        )._replace(level=jnp.asarray(levels))
+        self._levels = levels.astype(np.int64)
+        self.bank = self.engine.reset(self.bank, levels.astype(np.int32))
 
 
 class KeyedAggregator:
@@ -204,13 +306,16 @@ class KeyedAggregator:
     Window rows arrive at whatever collapse level they adapted to; the
     host-tier merge aligns mixed levels (collapsing the finer operand), so
     per-key totals stay exact-after-merge and ``alphas()`` reports the
-    effective guarantee each rollup currently offers.
+    effective guarantee each rollup currently offers.  Collapse-transition
+    events drain from each flushed window into ``events`` so the serving
+    layer can report when/why a key degraded.
     """
 
-    def __init__(self, spec: BucketSpec):
+    def __init__(self, spec: BucketSpec, max_events: int = 4096):
         self.spec = spec
         self.totals: dict[str, DDSketch] = {}
         self.windows_flushed = 0
+        self.events: deque[CollapseEvent] = deque(maxlen=max_events)
 
     def flush(self, window: KeyedWindow) -> None:
         """Merge a device window into the per-key totals and reset it.
@@ -228,6 +333,7 @@ class KeyedAggregator:
                 self.totals[key].merge(host)
             else:
                 self.totals[key] = host
+        self.events.extend(window.drain_events())
         self.windows_flushed += 1
         window.reset()
 
@@ -237,6 +343,10 @@ class KeyedAggregator:
     def alphas(self) -> dict[str, float]:
         """Per-key effective relative-error guarantee of the rollups."""
         return {k: sk.effective_alpha for k, sk in self.totals.items()}
+
+    def events_for(self, key: str) -> list[CollapseEvent]:
+        """Collapse transitions recorded for one key (all flushed windows)."""
+        return [e for e in self.events if e.key == key]
 
     def keys(self) -> list[str]:
         return [k for k in self.totals if k != OVERFLOW_KEY]

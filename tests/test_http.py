@@ -1,0 +1,73 @@
+"""HTTP/JSON quantile surface: start the stdlib server over real sketch
+telemetry and query p50/p95/p99 end to end."""
+
+import json
+from urllib.request import urlopen
+from urllib.error import HTTPError
+
+import numpy as np
+import pytest
+
+from repro.core.jax_sketch import BucketSpec
+from repro.launch.http_api import QuantileHTTPServer, TelemetryFacade
+from repro.telemetry.keyed import KeyedAggregator, KeyedWindow
+
+
+@pytest.fixture
+def telemetry(rng):
+    window = KeyedWindow(BucketSpec(), capacity=8)
+    agg = KeyedAggregator(window.spec)
+    keys = ["/v1/chat", "/v1/embed"]
+    for _ in range(2):
+        ks = [keys[i] for i in rng.integers(0, 2, 400)]
+        vals = (rng.pareto(1.0, 400) + 1.0).astype(np.float32)
+        window.record(ks, vals)
+        agg.flush(window)
+    # one more live (unflushed) window for /live
+    ks = [keys[i] for i in rng.integers(0, 2, 200)]
+    window.record(ks, (rng.pareto(1.0, 200) + 1.0).astype(np.float32))
+    return TelemetryFacade(window, agg)
+
+
+def _get(url):
+    with urlopen(url, timeout=10) as resp:
+        return json.loads(resp.read())
+
+
+def test_http_smoke_p50_p95_p99(telemetry):
+    with QuantileHTTPServer(telemetry) as server:
+        assert _get(f"{server.url}/healthz") == {"ok": True}
+
+        out = _get(f"{server.url}/quantiles?endpoint=/v1/chat&q=0.5,0.95,0.99")
+        assert out["endpoint"] == "/v1/chat"
+        q50, q95, q99 = out["quantiles"]
+        assert 0 < q50 <= q95 <= q99
+        want = telemetry.endpoint_quantiles("/v1/chat", [0.5, 0.95, 0.99])
+        np.testing.assert_allclose([q50, q95, q99], want)
+
+        live = _get(f"{server.url}/live?q=0.5,0.95,0.99")
+        assert set(live["endpoints"]) == {"/v1/chat", "/v1/embed"}
+        for vals in live["endpoints"].values():
+            assert len(vals) == 3 and vals[0] <= vals[2]
+
+        report = _get(f"{server.url}/report")
+        assert set(report) == {"/v1/chat", "/v1/embed"}
+        for rep in report.values():
+            assert rep["alpha"] == pytest.approx(0.01)
+            assert rep["collapse_events"] == []
+
+
+def test_http_errors(telemetry):
+    with QuantileHTTPServer(telemetry) as server:
+        with pytest.raises(HTTPError) as err:
+            _get(f"{server.url}/quantiles?endpoint=/nope")
+        assert err.value.code == 404
+        with pytest.raises(HTTPError) as err:
+            _get(f"{server.url}/quantiles")
+        assert err.value.code == 400
+        with pytest.raises(HTTPError) as err:
+            _get(f"{server.url}/live?q=1.5")
+        assert err.value.code == 400
+        with pytest.raises(HTTPError) as err:
+            _get(f"{server.url}/nothing-here")
+        assert err.value.code == 404

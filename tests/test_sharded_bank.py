@@ -1,0 +1,257 @@
+"""Row-sharded banks: bit-exact parity vs the single-device ``SketchBank``
+across mappings × levels × weights, donation on the sharded path, the psum
+rollup, and the striped ``KeyedWindow`` routing.
+
+Multi-device semantics on CPU: the in-process tests need >= 4 simulated
+devices (the CI ``multidevice`` job sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``); on a plain
+single-device run the whole suite re-runs in a subprocess with 8 fake
+devices instead, so the tier-1 gate still covers it.
+"""
+
+import os
+import subprocess
+import sys
+from functools import lru_cache
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import sketch_bank as sb
+from repro.kernels.ref import MAX_COLLAPSE_LEVEL, BucketSpec
+
+multi = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >=4 devices (covered by test_multidevice_suite_subprocess)",
+)
+
+QS = [0.0, 0.25, 0.5, 0.95, 0.99, 1.0]
+MAPPINGS = ["log", "linear", "cubic"]
+
+
+def _stream(seed, n, k, *, weights=False, decades=3.0):
+    rng = np.random.default_rng(seed)
+    x = (10.0 ** rng.uniform(-decades / 2, decades / 2, n)).astype(np.float32)
+    x *= np.where(rng.random(n) < 0.3, -1.0, 1.0).astype(np.float32)
+    x[rng.random(n) < 0.02] = 0.0
+    s = rng.integers(0, k, n).astype(np.int32)
+    w = rng.integers(1, 5, n).astype(np.float32) if weights else None
+    return x, s, w
+
+
+@lru_cache(maxsize=None)
+def _sharded_engine(k, shards, mapping):
+    from repro.engine import ShardedEngine
+
+    return ShardedEngine(BucketSpec(mapping=mapping), k, num_shards=shards)
+
+
+def _single_ref(spec, k, x, s, w, levels):
+    bank = sb.empty(spec, k)
+    if levels is not None:
+        bank = sb.collapse_to(bank, jnp.asarray(levels, jnp.int32), spec=spec)
+    bank = sb.add(
+        bank,
+        jnp.asarray(x),
+        jnp.asarray(s),
+        None if w is None else jnp.asarray(w),
+        spec=spec,
+    )
+    return np.asarray(sb.quantiles(bank, jnp.asarray(QS, jnp.float32), spec=spec))
+
+
+@multi
+@pytest.mark.parametrize("weights", [False, True])
+def test_sharded_parity_vs_single_device(weights):
+    """Acceptance: ingest + quantiles bit-exact vs the one-device bank."""
+    k, shards = 10, 4
+    eng = _sharded_engine(k, shards, "log")
+    x, s, w = _stream(0, 4096, k, weights=weights)
+    bank = eng.new_bank()
+    bank = eng.add(bank, x[:2048], s[:2048], None if w is None else w[:2048])
+    bank = eng.add(bank, x[2048:], s[2048:], None if w is None else w[2048:])
+    got = np.asarray(eng.quantiles(bank, QS))[:k]
+
+    spec = BucketSpec()
+    ref = sb.add(sb.empty(spec, k), jnp.asarray(x[:2048]), jnp.asarray(s[:2048]),
+                 None if w is None else jnp.asarray(w[:2048]), spec=spec)
+    ref = sb.add(ref, jnp.asarray(x[2048:]), jnp.asarray(s[2048:]),
+                 None if w is None else jnp.asarray(w[2048:]), spec=spec)
+    want = np.asarray(sb.quantiles(ref, jnp.asarray(QS, jnp.float32), spec=spec))
+    np.testing.assert_array_equal(got, want)
+
+
+def _parity_case(k, shards, mapping, weights, level_seed, decades):
+    """One sweep point: sharded ingest + quantiles vs the one-device bank,
+    pre-collapsed rows included — must match bit-for-bit."""
+    spec = BucketSpec(mapping=mapping)
+    eng = _sharded_engine(k, shards, mapping)
+    x, s, w = _stream(level_seed ^ 0x5EED, 512, k, weights=weights, decades=decades)
+    levels = np.random.default_rng(level_seed).integers(
+        0, MAX_COLLAPSE_LEVEL + 1, k
+    ).astype(np.int32)
+
+    bank = eng.collapse_to(eng.new_bank(), np.pad(levels, (0, eng.num_sketches - k)))
+    bank = eng.add(bank, x, s, w)
+    got = np.asarray(eng.quantiles(bank, QS))[:k]
+    want = _single_ref(spec, k, x, s, w, levels)
+    np.testing.assert_array_equal(got, want)
+
+
+@multi
+@settings(max_examples=12, deadline=None)
+@given(
+    k=st.integers(1, 12),
+    shards=st.sampled_from([2, 4]),
+    mapping=st.sampled_from(MAPPINGS),
+    weights=st.booleans(),
+    level_seed=st.integers(0, 2**20),
+    decades=st.sampled_from([2.0, 10.0]),
+)
+def test_sharded_parity_sweep(k, shards, mapping, weights, level_seed, decades):
+    """Hypothesis sweep (K × levels × weights × mappings)."""
+    _parity_case(k, shards, mapping, weights, level_seed, decades)
+
+
+@multi
+@pytest.mark.parametrize("mapping", MAPPINGS)
+@pytest.mark.parametrize("k,shards,weights,decades", [
+    (1, 2, False, 2.0),    # single row on a 2-mesh (all-but-one shard empty)
+    (7, 4, True, 10.0),    # non-divisible K, weighted, collapse-heavy range
+    (12, 4, False, 10.0),
+])
+def test_sharded_parity_grid(mapping, k, shards, weights, decades):
+    """Deterministic slice of the sweep (runs without hypothesis too)."""
+    _parity_case(k, shards, mapping, weights, level_seed=17, decades=decades)
+
+
+@multi
+def test_sharded_ingest_donates_shard_buffers():
+    """Donation holds per shard: every local buffer is updated in place."""
+    from repro.engine import ShardedEngine
+
+    eng = ShardedEngine(BucketSpec(), 8, num_shards=4)
+    x, s, _ = _stream(1, 512, 8)
+    bank = eng.add(eng.new_bank(), x, s)  # compile once
+    ptrs = [
+        sh.data.unsafe_buffer_pointer()
+        for leaf in bank
+        for sh in leaf.addressable_shards
+    ]
+    bank = eng.add(bank, x, s)
+    after = [
+        sh.data.unsafe_buffer_pointer()
+        for leaf in bank
+        for sh in leaf.addressable_shards
+    ]
+    assert ptrs == after
+
+
+@multi
+def test_rollup_quantiles_match_host_merge():
+    """The fleet view: one psum merges every row — equal to the host-tier
+    merge of all rows (Algorithm 4), mixed levels included."""
+    from repro.engine import ShardedBank
+
+    spec = BucketSpec()
+    k = 10
+    x, s, w = _stream(2, 4096, k, weights=True, decades=6.0)
+    shb = ShardedBank(spec, k, num_shards=4)
+    shb.collapse_to(np.arange(shb.engine.num_sketches, dtype=np.int32) % 3)
+    shb.add(x, s, w)
+
+    ref = sb.collapse_to(
+        sb.empty(spec, k),
+        jnp.asarray(np.arange(k, dtype=np.int32) % 3),
+        spec=spec,
+    )
+    ref = sb.add(ref, jnp.asarray(x), jnp.asarray(s), jnp.asarray(w), spec=spec)
+    total = None
+    for r in range(k):
+        host = sb.to_host(ref, spec, r)
+        if total is None:
+            total = host
+        else:
+            total.merge(host)
+    got = shb.rollup_quantiles([0.25, 0.5, 0.95, 0.99])
+    want = np.asarray(total.quantiles([0.25, 0.5, 0.95, 0.99]), np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@multi
+def test_sharded_keyed_window_parity_and_routing():
+    """KeyedWindow over a sharded engine: identical per-key answers, rows
+    striped across shards so early keys land on distinct devices."""
+    from repro.telemetry.keyed import KeyedWindow
+
+    spec = BucketSpec()
+    rng = np.random.default_rng(3)
+    single = KeyedWindow(spec, capacity=6)
+    sharded = KeyedWindow(spec, capacity=6, num_shards=4)
+    keys = [f"ep{i}" for i in range(5)]
+    for _ in range(3):
+        ks = [keys[i] for i in rng.integers(0, len(keys), 400)]
+        vals = (rng.pareto(1.0, 400) + 1.0).astype(np.float32)
+        single.record(ks, vals)
+        sharded.record(ks, vals)
+    lone = single.all_quantiles([0.5, 0.95, 0.99])
+    spread = sharded.all_quantiles([0.5, 0.95, 0.99])
+    assert lone.keys() == spread.keys()
+    for key in lone:
+        np.testing.assert_array_equal(lone[key], spread[key])
+    # the first shard-count keys occupy distinct shards (striped routing)
+    shards = [sharded.shard_of(k) for k in keys[:4]]
+    assert len(set(shards)) == 4
+    assert single.shard_of(keys[0]) == 0  # single-device: everything shard 0
+
+
+@multi
+def test_padding_rows_stay_invisible():
+    """Logical K that doesn't divide the shard count pads internally; the
+    public surface (quantiles shape, counts) stays logical-K sized."""
+    from repro.engine import ShardedBank
+
+    shb = ShardedBank(BucketSpec(), 5, num_shards=4)  # pads to 8 rows
+    assert shb.engine.num_sketches == 8
+    assert shb.num_sketches == 5
+    x, s, _ = _stream(4, 256, 5)
+    shb.add(x, s)
+    assert shb.quantiles([0.5]).shape == (5, 1)
+    assert shb.counts.shape == (5,)
+    assert float(shb.counts.sum()) == 256.0
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) >= 4, reason="multi-device already: suite runs in-process"
+)
+def test_multidevice_suite_subprocess():
+    """Single-device fallback: re-run this module on 8 simulated CPU
+    devices so the sharded parity suite always executes somewhere."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep
+        + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", __file__, "-q", "-p", "no:cacheprovider"],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1200,
+        cwd=os.path.dirname(__file__),
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multidevice suite failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout[-6000:]}\n"
+            f"--- stderr ---\n{proc.stderr[-3000:]}"
+        )
+    assert " passed" in proc.stdout

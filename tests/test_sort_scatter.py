@@ -116,6 +116,44 @@ def test_compact_triples_packs_runs_to_front(rng):
         np.testing.assert_array_equal(np.asarray(full), np.asarray(sliced))
 
 
+def test_compact_triples_weighted_fast_path_parity(rng):
+    """The two-pass weighted path (sort keys + permutation, gather weights)
+    compacts identically to the payload sort: exact run totals for
+    integer-valued weights, ulp-close for fractional ones."""
+    spec = BucketSpec(num_buckets=256, offset=-128)
+    k, n = 4, 5000
+    x = jnp.asarray(_data(n, rng))
+    s = jnp.asarray(rng.integers(-1, k + 1, n).astype(np.int32))
+    int_w = jnp.asarray(rng.integers(0, 5, n).astype(np.float32))
+    frac_w = jnp.asarray(rng.random(n).astype(np.float32))
+
+    keys_fast, wts_fast = compact_triples(x, s, int_w, num_segments=k, spec=spec)
+    keys_pay, wts_pay = compact_triples(
+        x, s, int_w, num_segments=k, spec=spec, payload_sort=True
+    )
+    np.testing.assert_array_equal(np.asarray(keys_fast), np.asarray(keys_pay))
+    np.testing.assert_array_equal(np.asarray(wts_fast), np.asarray(wts_pay))
+
+    keys_fast, wts_fast = compact_triples(x, s, frac_w, num_segments=k, spec=spec)
+    keys_pay, wts_pay = compact_triples(
+        x, s, frac_w, num_segments=k, spec=spec, payload_sort=True
+    )
+    np.testing.assert_array_equal(np.asarray(keys_fast), np.asarray(keys_pay))
+    np.testing.assert_allclose(
+        np.asarray(wts_fast), np.asarray(wts_pay), rtol=1e-6
+    )
+    # downstream parity: the scattered bank is what actually matters
+    full_fast = scatter_histogram_ref(
+        keys_fast, wts_fast, num_rows=2 * k, num_buckets=spec.num_buckets
+    )
+    full_pay = scatter_histogram_ref(
+        keys_pay, wts_pay, num_rows=2 * k, num_buckets=spec.num_buckets
+    )
+    np.testing.assert_allclose(
+        np.asarray(full_fast), np.asarray(full_pay), rtol=1e-6
+    )
+
+
 def test_composite_keys_int32_overflow_guard():
     spec = BucketSpec(num_buckets=2048)
     with pytest.raises(ValueError, match="int32"):

@@ -135,6 +135,52 @@ def test_keyed_window_overflow_collapses_not_raises(rng):
     assert agg.totals["key1"].count == 17
 
 
+def test_collapse_transition_events(rng):
+    """Every auto-collapse logs (key, old->new level, window, clamped mass)
+    and the events survive the flush into the aggregator."""
+    tcfg = TelemetryConfig()
+    window = KeyedWindow(tcfg.spec, capacity=4)
+    agg = KeyedAggregator(window.spec)
+    narrow = (rng.pareto(1.0, 100) + 1.0).astype(np.float32)
+    wide = (10.0 ** rng.uniform(-15.0, 9.0, 400)).astype(np.float32)
+    window.record("cold", narrow)
+    assert list(window.events) == []  # nothing clamped, nothing logged
+    window.record("hot", wide)
+    events = list(window.events)
+    assert events, "the 24-decade stream must trigger at least one collapse"
+    assert {e.key for e in events} == {"hot"}
+    assert events[0].old_level == 0 and events[0].new_level == 1
+    assert events[0].window == 0
+    assert events[0].clamped_mass > 0
+    # consecutive transitions chain (old == previous new)
+    for prev, nxt in zip(events, events[1:]):
+        assert nxt.old_level == prev.new_level
+    # levels()/alphas() agree with the last transition
+    assert window.levels()["hot"] == events[-1].new_level
+
+    agg.flush(window)  # drains the window log into the aggregator
+    assert list(window.events) == []
+    assert [e.key for e in agg.events_for("hot")] == ["hot"] * len(events)
+    assert agg.events_for("cold") == []
+
+    # next window: events carry the new window index, levels chain on
+    window.record("hot", wide * 1e3)  # pushes past the adapted range again
+    later = [e for e in window.events]
+    for e in later:
+        assert e.window == 1
+        assert e.old_level >= events[-1].new_level
+
+
+def test_collapse_events_disabled(rng):
+    window = KeyedWindow(
+        TelemetryConfig().spec, capacity=2, track_collapse_events=False
+    )
+    wide = (10.0 ** rng.uniform(-15.0, 9.0, 400)).astype(np.float32)
+    window.record("hot", wide)
+    assert list(window.events) == []  # host materialization skipped
+    assert window.levels()["hot"] >= 1  # ...but the collapse itself happened
+
+
 def test_straggler_watchdog(rng):
     wd = StragglerWatchdog(ratio_threshold=1.5, min_samples=8)
     for step in range(32):
