@@ -32,7 +32,7 @@ _UNIT_MS = {"ms": 1.0, "us": 1e-3, "ns": 1e-6}
 # measured outputs (as opposed to configuration): they drift with the code
 # under test, so keying row identity on them would silently unmatch rows
 # and let regressions slip past the gate
-_MEASURED_FIELDS = {"live_buckets", "speedup", "loop_measured_K"}
+_MEASURED_FIELDS = {"live_buckets", "speedup", "loop_measured_K", "hist_calls_per_trace"}
 
 
 def _timing_unit(key: str) -> float | None:

@@ -21,7 +21,7 @@ import json
 import os
 import sys
 
-from benchmarks import bank_bench, kernels_bench, sketches
+from benchmarks import bank_bench, kernels_bench, sketches, telemetry_bench
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 
@@ -109,6 +109,11 @@ def main() -> None:
             "sharded_ingest": lambda: bank_bench.bench_sharded_ingest(
                 k=1024, n=4096, records=10, iters=2, shards=(1, 2, 8)
             ),
+            # train-telemetry recorder: dict-of-sketches vs TelemetryBank
+            # (traced hist dispatches + ms/step, tracked in BENCH_baseline)
+            "telemetry_record": lambda: telemetry_bench.bench_telemetry_record(
+                iters=5
+            ),
             "roofline": roofline_rows,
         }
     elif args.quick:
@@ -141,6 +146,9 @@ def main() -> None:
             "sharded_ingest": lambda: bank_bench.bench_sharded_ingest(
                 k=2048, n=8192, records=15, iters=3, shards=(1, 2, 8)
             ),
+            "telemetry_record": lambda: telemetry_bench.bench_telemetry_record(
+                iters=10
+            ),
             "roofline": roofline_rows,
         }
     else:
@@ -172,6 +180,9 @@ def main() -> None:
             ),
             "sharded_ingest": lambda: bank_bench.bench_sharded_ingest(
                 k=4096, n=16384, records=20, iters=3, shards=(1, 2, 4, 8)
+            ),
+            "telemetry_record": lambda: telemetry_bench.bench_telemetry_record(
+                seq=2048, iters=10
             ),
             "roofline": roofline_rows,
         }

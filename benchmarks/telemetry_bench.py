@@ -1,0 +1,122 @@
+"""Train-telemetry recorder benchmark: dict-of-sketches vs TelemetryBank.
+
+The claim under test is the TelemetryBank tentpole: the pre-bank recorder
+unrolled one histogram dispatch *per stream* into the traced step (and one
+fresh sketch allocation per stream per step), while the bank recorder
+concatenates every stream into one ``(values, sketch_ids)`` batch and
+issues a single ``ops.bank_histograms`` call — so the step's telemetry
+cost stops scaling with the stream count.
+
+Two numbers per path:
+
+* ``hist_calls_per_trace`` — bank-histogram dispatches *traced into the
+  step* (counted by wrapping ``ops.bank_histograms`` during ``jit.lower``);
+  4 streams -> 4 for the dict path, 1 for the bank;
+* ``ms_per_step`` — wall-clock of the jit'd state->state recorder
+  (donated input, CPU XLA ref path), matching bank_bench methodology.
+
+Stream shapes mirror a real train step: token_loss is B·S values, the
+others are small per-tensor / per-layer vectors.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import jax_sketch as js
+from repro.kernels import ops
+from repro.telemetry.device import TRAIN_STREAMS, TelemetryConfig, init_telemetry, record
+
+
+def _time(fn, *args, iters=10) -> float:
+    out = fn(*args)  # compile + warm
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _count_hist_calls(lower):
+    """Trace ``lower()`` with ops.bank_histograms wrapped in a counter."""
+    calls = [0]
+    orig = ops.bank_histograms
+
+    def counted(*args, **kwargs):
+        calls[0] += 1
+        return orig(*args, **kwargs)
+
+    ops.bank_histograms = counted
+    try:
+        lower()
+    finally:
+        ops.bank_histograms = orig
+    return calls[0]
+
+
+def bench_telemetry_record(
+    batch: int = 8,
+    seq: int = 512,
+    tensors: int = 63,  # sizes all distinct: equal-shape streams would share
+    layers: int = 27,   # one nested-jit trace and undercount the dict path
+    experts: int = 45,
+    iters: int = 10,
+) -> list[dict]:
+    tcfg = TelemetryConfig()
+    rng = np.random.default_rng(0)
+    sizes = dict(
+        token_loss=batch * seq, grad_rms=tensors, act_scale=layers,
+        router_load=experts,
+    )
+    streams = {
+        name: jnp.asarray((rng.pareto(1.0, n) + 1.0).astype(np.float32))
+        for name, n in sizes.items()
+    }
+    n_values = sum(sizes.values())
+
+    # --- the pre-bank recorder: one jax_sketch.add per stream ---------- #
+    def dict_step(state, vs):
+        out = dict(state)
+        for name in TRAIN_STREAMS:
+            out[name] = js.add(out[name], vs[name], spec=tcfg.spec)
+        return out
+
+    dict_state = {name: js.empty(tcfg.spec) for name in TRAIN_STREAMS}
+    dict_jit = jax.jit(dict_step, donate_argnums=0)
+
+    # --- the TelemetryBank recorder: one fused bank dispatch ----------- #
+    bank_jit = jax.jit(lambda s, vs: record(s, vs, tcfg), donate_argnums=0)
+    bank_state = init_telemetry(tcfg)
+
+    rows = []
+    for path, jitted, state in (
+        ("dict_of_sketches", dict_jit, dict_state),
+        ("telemetry_bank", bank_jit, bank_state),
+    ):
+        traces = _count_hist_calls(lambda: jitted.lower(state, streams))
+
+        holder = [state]  # donated: rebind across timed calls
+
+        def step(jitted=jitted, holder=holder):
+            holder[0] = jitted(holder[0], streams)
+            return holder[0]
+
+        secs = _time(step, iters=iters)
+        rows.append(
+            {
+                "bench": "telemetry_record",
+                "path": path,
+                "streams": len(TRAIN_STREAMS),
+                "values_per_step": n_values,
+                "hist_calls_per_trace": traces,
+                "ms_per_step": round(secs * 1e3, 4),
+                "impl": "xla_ref",
+            }
+        )
+    return rows

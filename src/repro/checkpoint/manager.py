@@ -150,10 +150,19 @@ class CheckpointManager:
                 shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)
 
     # ------------------------------------------------------------------ #
-    def restore(self, like, step: int | None = None, shardings=None):
+    def restore(self, like, step: int | None = None, shardings=None, migrate=None):
         """Restore into the structure of ``like`` (a pytree of arrays or
         ShapeDtypeStructs).  Returns (step, state, aux) or None if no
-        committed checkpoint exists (fresh start)."""
+        committed checkpoint exists (fresh start).
+
+        ``migrate`` handles state-shape breaks across code versions: when
+        the stored leaf count does not match ``like``'s (e.g. checkpoints
+        written before the telemetry tier folded its per-stream sketch
+        dicts into one bank), ``migrate(paths, leaves, like)`` is called
+        with the manifest's flattened key paths and raw leaves and must
+        return a full state pytree matching ``like``'s structure.  Without
+        a migrator a mismatch raises, as before.
+        """
         step = step if step is not None else self.latest_step()
         if step is None:
             return None
@@ -171,7 +180,10 @@ class CheckpointManager:
                 a = a.view(np.dtype(dt))
             leaves.append(a)
         treedef = jax.tree.structure(like)
-        state = jax.tree.unflatten(treedef, leaves)
+        if migrate is not None and treedef.num_leaves != len(leaves):
+            state = migrate(manifest["paths"], leaves, like)
+        else:
+            state = jax.tree.unflatten(treedef, leaves)
         if shardings is not None:
             state = jax.tree.map(
                 lambda x, s: jax.device_put(x, s), state, shardings

@@ -67,6 +67,20 @@ __all__ = [
 ]
 
 
+# Banks at or below this many rows compute their per-row aux stats with
+# dense masked reductions over a (K, N) one-hot instead of K-segment
+# scatter passes: XLA lowers the dense form to vectorized reduces, which on
+# CPU is an order of magnitude faster for the small-bank geometries (the
+# TelemetryBank's one-row-per-stream tier), while the scatter form stays
+# the right shape for wide multi-tenant banks.  Counters are bit-exact in
+# both forms for 0/1 weights; the float ``summ`` may reassociate.  The
+# element cap bounds the (K, N) temporaries (and the K-fold redundant
+# reduction work) when a small bank ingests a huge batch — past it the
+# O(N) segment path wins on memory.
+_DENSE_STATS_MAX_ROWS = 16
+_DENSE_STATS_MAX_ELEMENTS = 1 << 22  # K * N ceiling (16 MiB of f32 per temp)
+
+
 class SketchBank(NamedTuple):
     """K stacked DDSketch states (leading axis = sketch id).
 
@@ -161,10 +175,25 @@ def add_impl(
     is_neg = valid & (x < -spec.min_indexable)
     is_zero = valid & ~is_pos & ~is_neg
 
+    dense_stats = (
+        0 < k <= _DENSE_STATS_MAX_ROWS
+        and k * x.size <= _DENSE_STATS_MAX_ELEMENTS
+    )
+    sel = (
+        (sc[None, :] == jnp.arange(k, dtype=jnp.int32)[:, None])
+        if dense_stats
+        else None
+    )  # (K, N) row-membership mask; invalid lanes already carry zero weight
+
     k0 = jax_sketch._raw_keys(x, is_pos | is_neg, spec)
     if auto_collapse:
         needed = jnp.where(is_pos | is_neg, jax_sketch._needed_levels(k0, spec), 0)
-        per_row = jax.ops.segment_max(needed, sc, num_segments=k)
+        if dense_stats:
+            per_row = jnp.max(
+                jnp.where(sel, needed[None, :], 0), axis=1, initial=0
+            )
+        else:
+            per_row = jax.ops.segment_max(needed, sc, num_segments=k)
         target = jnp.maximum(bank.level, jnp.maximum(per_row, 0))
         bank = collapse_to(bank, target, spec=spec)
     shifts = bank.level[sc]  # per-value levels for the segmented kernels
@@ -188,15 +217,29 @@ def add_impl(
     over = (is_pos | is_neg) & (k_lev > top_key)
     under = (is_pos | is_neg) & (k_lev < spec.offset)
 
-    seg_sum = partial(jax.ops.segment_sum, num_segments=k)
     wx = w * jnp.where(valid, x, 0.0)
     contributes = valid & (w > 0)
-    vmin_new = jax.ops.segment_min(
-        jnp.where(contributes, x, jnp.inf), sc, num_segments=k
-    )
-    vmax_new = jax.ops.segment_max(
-        jnp.where(contributes, x, -jnp.inf), sc, num_segments=k
-    )
+    if dense_stats:
+        onehot = sel.astype(jnp.float32)
+
+        def seg_sum(v, _sc):
+            return onehot @ v
+
+        lane = sel & contributes[None, :]
+        vmin_new = jnp.min(
+            jnp.where(lane, x[None, :], jnp.inf), axis=1, initial=jnp.inf
+        )
+        vmax_new = jnp.max(
+            jnp.where(lane, x[None, :], -jnp.inf), axis=1, initial=-jnp.inf
+        )
+    else:
+        seg_sum = partial(jax.ops.segment_sum, num_segments=k)
+        vmin_new = jax.ops.segment_min(
+            jnp.where(contributes, x, jnp.inf), sc, num_segments=k
+        )
+        vmax_new = jax.ops.segment_max(
+            jnp.where(contributes, x, -jnp.inf), sc, num_segments=k
+        )
 
     cd = bank.pos.dtype
     return SketchBank(

@@ -6,8 +6,12 @@ state-in/state-out ingest, the per-spec constant caches, and the
 row-sharded multi-device banks.
 """
 
-from repro.engine.tables import bucket_value_table, device_value_table
-from repro.engine.engine import SketchEngine
+from repro.engine.tables import (
+    bucket_value_table,
+    device_value_table,
+    padded_row_count,
+)
+from repro.engine.engine import SketchEngine, shared_engine
 from repro.engine.sharded import ShardedBank, ShardedEngine, make_engine
 
 __all__ = [
@@ -15,6 +19,8 @@ __all__ = [
     "ShardedEngine",
     "ShardedBank",
     "make_engine",
+    "shared_engine",
     "bucket_value_table",
     "device_value_table",
+    "padded_row_count",
 ]

@@ -44,6 +44,7 @@ these exact call paths under ``shard_map``:
 
 from __future__ import annotations
 
+from functools import lru_cache
 from typing import Any, Callable, Sequence
 
 import numpy as np
@@ -54,19 +55,43 @@ import jax.numpy as jnp
 from repro.core import jax_sketch
 from repro.core import sketch_bank as sbank
 from repro.core.sketch_bank import SketchBank
-from repro.kernels.ref import MAX_COLLAPSE_LEVEL, BucketSpec
+from repro.engine.tables import next_pow2
+from repro.kernels.ref import MAX_COLLAPSE_LEVEL, BucketSpec, bank_quantiles_ref
 
-__all__ = ["SketchEngine"]
+__all__ = ["SketchEngine", "shared_engine"]
 
 _MIN_BATCH = 32  # smallest padded ingest batch (executable-count floor)
 
 
 def _pad_to_bucket(n: int) -> int:
     """Next power-of-two >= n (floored at ``_MIN_BATCH``)."""
-    b = _MIN_BATCH
-    while b < n:
-        b <<= 1
-    return b
+    return next_pow2(n, _MIN_BATCH)
+
+
+@lru_cache(maxsize=None)
+def shared_engine(
+    spec: BucketSpec,
+    num_sketches: int,
+    *,
+    counts_dtype=jnp.float32,
+    use_kernel: bool = False,
+    method: str | None = None,
+) -> "SketchEngine":
+    """Process-wide engine registry, one per bank geometry.
+
+    Engines are stateless with respect to their banks, so every caller
+    whose rows pad to the same (spec, K, dtype, backend) — the telemetry
+    tier, ad-hoc banks, tests — can share one engine and its compiled
+    executables instead of re-lowering per caller.  Pair with
+    ``tables.padded_row_count`` to round row counts onto the shared grid.
+    """
+    return SketchEngine(
+        spec,
+        num_sketches,
+        counts_dtype=counts_dtype,
+        use_kernel=use_kernel,
+        method=method,
+    )
 
 
 def _zero_where(mask: jnp.ndarray, arr: jnp.ndarray) -> jnp.ndarray:
@@ -386,3 +411,48 @@ class SketchEngine:
     def quantile(self, bank: SketchBank, q) -> jnp.ndarray:
         """One quantile for every row, shape ``(K,)``."""
         return self.quantiles(bank, [q])[:, 0]
+
+    def rollup_quantiles(self, bank: SketchBank, qs) -> jnp.ndarray:
+        """Quantiles of the union of *every* row, shape ``(len(qs),)``.
+
+        The fleet view ("p99 across all tenants/streams"): rows collapse to
+        the bank-max level (making the bucket arrays commensurate), sum
+        into one bucket array — Algorithm 4 as a reduction over the row
+        axis — and answer one Algorithm 2 query.  Exact for integer-weight
+        counts (sums reorder).  ``ShardedEngine`` overrides this with the
+        psum form; this single-device twin keeps the call path (and the
+        HTTP ``/rollup`` consumer) mesh-agnostic.
+        """
+        qf = np.atleast_1d(np.asarray(qs, np.float32))
+        from repro.engine.tables import device_value_table
+
+        def rollup_impl(b: SketchBank, q: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+            gmax = jnp.max(b.level)
+            b = sbank.collapse_to(
+                b,
+                jnp.broadcast_to(gmax, b.level.shape),
+                spec=self.spec,
+                use_kernel=self.use_kernel,
+            )
+            f32 = jnp.float32
+            return bank_quantiles_ref(
+                b.pos.astype(f32).sum(0)[None],
+                b.neg.astype(f32).sum(0)[None],
+                b.zero.astype(f32).sum()[None],
+                jnp.min(b.vmin)[None],
+                jnp.max(b.vmax)[None],
+                gmax[None],
+                q,
+                t,
+            )[0]
+
+        return self._compiled(
+            ("rollup", qf.size),
+            rollup_impl,
+            (),
+            ("bank", "scalar", "scalar"),
+            ("scalar",),
+            bank,
+            jnp.asarray(qf),
+            device_value_table(self.spec),
+        )

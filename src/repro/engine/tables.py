@@ -1,4 +1,4 @@
-"""Per-spec constant caches shared by every quantile path.
+"""Per-spec constant caches + shared geometry helpers.
 
 The fused bank query and the single-sketch query both select bucket-value
 estimates from the ``(MAX_COLLAPSE_LEVEL + 1, m)`` per-level table.  The
@@ -8,6 +8,12 @@ math over every (level, bucket) pair, then a fresh host->device transfer).
 This module is the engine's per-spec cache: one host construction and one
 device upload per spec per process, shared by ``kernels.ops``,
 ``core.jax_sketch``, ``core.sketch_bank`` and the engine executables.
+
+It also owns the engine's *geometry rounding*: executables are shape-
+specialized, so both the streamed-batch axis (``SketchEngine.ingest``) and
+the bank row axis (``telemetry.TelemetryBank``) round up to powers of two —
+arbitrary batch sizes / stream sets then compile O(log N) executables
+instead of one per distinct size.
 """
 
 from __future__ import annotations
@@ -21,7 +27,30 @@ import jax.numpy as jnp
 
 from repro.kernels.ref import MAX_COLLAPSE_LEVEL, BucketSpec
 
-__all__ = ["bucket_value_table", "device_value_table"]
+__all__ = [
+    "bucket_value_table",
+    "device_value_table",
+    "next_pow2",
+    "padded_row_count",
+]
+
+_MIN_ROWS = 4  # smallest padded bank row count (executable-count floor)
+
+
+def next_pow2(n: int, minimum: int) -> int:
+    """Next power-of-two >= ``n`` (floored at ``minimum``)."""
+    b = minimum
+    while b < n:
+        b <<= 1
+    return b
+
+
+def padded_row_count(n: int, minimum: int = _MIN_ROWS) -> int:
+    """Row-geometry twin of the engine's batch padding: the physical row
+    count a bank of ``n`` logical rows compiles at.  Stream sets / tenant
+    counts that round to the same power of two share one engine geometry
+    (and so one set of AOT executables)."""
+    return next_pow2(max(int(n), 1), minimum)
 
 
 @lru_cache(maxsize=None)

@@ -3,8 +3,8 @@
 The paper's running example is a latency-quantile *service*; this makes the
 in-process answers (``Server.endpoint_quantiles`` rollups,
 ``Server.live_endpoint_quantiles`` current-window fused bank queries,
-``Server.endpoint_report``) reachable over HTTP with nothing beyond the
-standard library:
+``Server.endpoint_report``, ``Server.rollup_quantiles``) reachable over
+HTTP with nothing beyond the standard library:
 
   GET /healthz                             -> {"ok": true}
   GET /quantiles?endpoint=/v1/ep0&q=0.5,0.95,0.99
@@ -12,29 +12,47 @@ standard library:
   GET /live?q=0.5,0.95,0.99                -> current-window quantiles for
                                               every live endpoint (one
                                               fused bank query)
+  GET /rollup?q=0.5,0.95,0.99              -> the fleet view: quantiles of
+                                              the union of every endpoint's
+                                              current window (one engine
+                                              rollup — a psum when the bank
+                                              is sharded)
   GET /report                              -> per-endpoint quantiles +
                                               effective alpha + collapse
                                               transition events
 
-``serve_http`` duck-types: any object with those three methods works (the
+``serve_http`` duck-types: any object with those query methods works (the
 model ``Server``, or a bare ``KeyedWindow``/``KeyedAggregator`` pair via
 ``TelemetryFacade``), so the HTTP tier needs no model stack.
+
+Hardening (both off by default, production wants both on):
+
+* ``auth_token`` — requests must carry ``Authorization: Bearer <token>``
+  or are refused with 401 (constant-time comparison);
+* ``rate_limit`` / ``rate_burst`` — a process-wide token bucket
+  (``rate_limit`` requests/s sustained, ``rate_burst`` peak); excess
+  requests are refused with 429 + Retry-After.
+
+``/healthz`` is exempt from both: liveness probes must not need secrets
+and must not evict real traffic from the bucket.
 """
 
 from __future__ import annotations
 
+import hmac
 import json
 import threading
+import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
 
-__all__ = ["TelemetryFacade", "QuantileHTTPServer", "serve_http"]
+__all__ = ["TelemetryFacade", "TokenBucket", "QuantileHTTPServer", "serve_http"]
 
 _DEFAULT_QS = (0.5, 0.95, 0.99)
 
 
 class TelemetryFacade:
-    """The three serve-layer query methods over a window + aggregator pair.
+    """The serve-layer query methods over a window + aggregator pair.
 
     Lets the HTTP tier (and tests) run against real sketch telemetry
     without constructing the model ``Server``.
@@ -50,6 +68,10 @@ class TelemetryFacade:
     def live_endpoint_quantiles(self, qs=_DEFAULT_QS) -> dict:
         return self.window.all_quantiles(list(qs))
 
+    def rollup_quantiles(self, qs=_DEFAULT_QS) -> list[float]:
+        """Current-window fleet view (union of every key's row)."""
+        return self.window.rollup_quantiles(list(qs))
+
     def endpoint_report(self, qs=_DEFAULT_QS) -> dict:
         return {
             ep: {
@@ -63,6 +85,45 @@ class TelemetryFacade:
         }
 
 
+class TokenBucket:
+    """Process-wide token-bucket rate limiter (thread-safe).
+
+    Refills at ``rate`` tokens/s up to ``burst``; each admitted request
+    spends one token.  One bucket guards the whole server (the handler
+    pool is one process), so the limit holds across connections.
+    """
+
+    def __init__(self, rate: float, burst: float):
+        if rate < 0 or burst < 1:
+            raise ValueError("rate must be >= 0 and burst >= 1")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self._tokens = float(burst)
+        self._t_last = time.monotonic()
+        self._lock = threading.Lock()
+
+    def try_acquire(self) -> bool:
+        with self._lock:
+            now = time.monotonic()
+            self._tokens = min(
+                self.burst, self._tokens + (now - self._t_last) * self.rate
+            )
+            self._t_last = now
+            if self._tokens >= 1.0:
+                self._tokens -= 1.0
+                return True
+            return False
+
+    def retry_after_s(self) -> float:
+        """Seconds until one token exists (advisory Retry-After value)."""
+        with self._lock:
+            if self._tokens >= 1.0:
+                return 0.0
+            if self.rate <= 0:
+                return 60.0
+            return max(0.0, (1.0 - self._tokens) / self.rate)
+
+
 def _parse_qs_param(query: dict) -> list[float]:
     raw = query.get("q", [None])[0]
     if raw is None:
@@ -73,26 +134,61 @@ def _parse_qs_param(query: dict) -> list[float]:
     return qs
 
 
-def _make_handler(telemetry):
+def _make_handler(telemetry, auth_token: str | None, bucket: TokenBucket | None):
     class Handler(BaseHTTPRequestHandler):
         def log_message(self, *args):  # quiet: tests/servers manage logging
             pass
 
-        def _reply(self, code: int, payload: dict) -> None:
+        def _reply(self, code: int, payload: dict, headers: dict | None = None) -> None:
             body = json.dumps(payload).encode()
             self.send_response(code)
             self.send_header("Content-Type", "application/json")
             self.send_header("Content-Length", str(len(body)))
+            for k, v in (headers or {}).items():
+                self.send_header(k, v)
             self.end_headers()
             self.wfile.write(body)
+
+        def _gate(self) -> bool:
+            """Rate limit + auth; replies and returns False on refusal.
+
+            The bucket is spent *before* the token check so failed-auth
+            floods (token brute-forcing) are throttled like any other
+            traffic instead of bypassing the limiter.
+            """
+            if bucket is not None and not bucket.try_acquire():
+                self._reply(
+                    429,
+                    {"error": "rate limit exceeded"},
+                    {"Retry-After": f"{bucket.retry_after_s():.3f}"},
+                )
+                return False
+            if auth_token is not None:
+                header = self.headers.get("Authorization", "")
+                expect = f"Bearer {auth_token}"
+                # compare as bytes: compare_digest refuses non-ASCII str,
+                # and http.server decodes headers as latin-1
+                if not hmac.compare_digest(
+                    header.encode("latin-1", "replace"), expect.encode()
+                ):
+                    self._reply(
+                        401,
+                        {"error": "missing or invalid bearer token"},
+                        {"WWW-Authenticate": 'Bearer realm="quantiles"'},
+                    )
+                    return False
+            return True
 
         def do_GET(self) -> None:  # noqa: N802 (http.server API)
             url = urlparse(self.path)
             query = parse_qs(url.query)
             try:
-                if url.path == "/healthz":
+                if url.path == "/healthz":  # liveness: no auth, no bucket
                     self._reply(200, {"ok": True})
-                elif url.path == "/quantiles":
+                    return
+                if not self._gate():
+                    return
+                if url.path == "/quantiles":
                     endpoint = query.get("endpoint", [None])[0]
                     if endpoint is None:
                         raise ValueError("missing required parameter 'endpoint'")
@@ -108,6 +204,13 @@ def _make_handler(telemetry):
                         200,
                         {"qs": qs, "endpoints": telemetry.live_endpoint_quantiles(qs)},
                     )
+                elif url.path == "/rollup":
+                    fn = getattr(telemetry, "rollup_quantiles", None)
+                    if fn is None:  # duck-typed source without a fleet view
+                        self._reply(404, {"error": "rollup not supported"})
+                        return
+                    qs = _parse_qs_param(query)
+                    self._reply(200, {"qs": qs, "quantiles": list(fn(qs))})
                 elif url.path == "/report":
                     self._reply(200, telemetry.endpoint_report(_parse_qs_param(query)))
                 else:
@@ -124,11 +227,30 @@ class QuantileHTTPServer:
     """ThreadingHTTPServer wrapper with a background serve thread.
 
     ``port=0`` binds an ephemeral port (see ``.port`` after construction).
-    Use as a context manager or call ``shutdown()`` explicitly.
+    ``auth_token`` requires ``Authorization: Bearer <token>`` on every
+    query; ``rate_limit`` (requests/s, with ``rate_burst`` peak — default
+    2x the rate) token-buckets the whole server.  Use as a context manager
+    or call ``shutdown()`` explicitly.
     """
 
-    def __init__(self, telemetry, host: str = "127.0.0.1", port: int = 0):
-        self.httpd = ThreadingHTTPServer((host, port), _make_handler(telemetry))
+    def __init__(
+        self,
+        telemetry,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        *,
+        auth_token: str | None = None,
+        rate_limit: float | None = None,
+        rate_burst: float | None = None,
+    ):
+        bucket = None
+        if rate_limit is not None:
+            burst = rate_burst if rate_burst is not None else max(1.0, 2 * rate_limit)
+            bucket = TokenBucket(rate_limit, burst)
+        self.bucket = bucket
+        self.httpd = ThreadingHTTPServer(
+            (host, port), _make_handler(telemetry, auth_token, bucket)
+        )
         self.host, self.port = self.httpd.server_address[:2]
         self._thread = threading.Thread(target=self.httpd.serve_forever, daemon=True)
 
@@ -152,9 +274,24 @@ class QuantileHTTPServer:
         self.shutdown()
 
 
-def serve_http(telemetry, host: str = "127.0.0.1", port: int = 8787) -> None:
+def serve_http(
+    telemetry,
+    host: str = "127.0.0.1",
+    port: int = 8787,
+    *,
+    auth_token: str | None = None,
+    rate_limit: float | None = None,
+    rate_burst: float | None = None,
+) -> None:
     """Blocking entry point: serve ``telemetry``'s quantile queries forever."""
-    server = QuantileHTTPServer(telemetry, host, port)
+    server = QuantileHTTPServer(
+        telemetry,
+        host,
+        port,
+        auth_token=auth_token,
+        rate_limit=rate_limit,
+        rate_burst=rate_burst,
+    )
     print(f"[http] serving latency quantiles on {server.url}")
     server.start()
     try:

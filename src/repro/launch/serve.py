@@ -186,6 +186,14 @@ class Server:
         unlike the rollup path, it does not wait for a window flush."""
         return self.endpoint_window.all_quantiles(qs)
 
+    def rollup_quantiles(self, qs=(0.5, 0.95, 0.99)) -> list[float]:
+        """Fleet-view latency quantiles: the union of *every* endpoint's
+        current window in one engine rollup (Algorithm 4 as a row-axis
+        reduction; a single psum when the bank is row-sharded over
+        ``sketch_shards`` devices).  The HTTP ``/rollup`` endpoint rides
+        this — "p99 across the whole service", not per key."""
+        return self.endpoint_window.rollup_quantiles(qs)
+
     def endpoint_alpha(self, endpoint: str) -> float:
         """Effective relative-error guarantee for one endpoint's rollup.
 

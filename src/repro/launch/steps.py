@@ -280,7 +280,7 @@ def build_train_step(
     tshard = telemetry_shardings(tcfg, mesh)
     tel_shapes = jax.eval_shape(lambda: init_telemetry(tcfg))
     if not scfg.telemetry:
-        tcfg = TelemetryConfig(spec=tcfg.spec, streams=tcfg.streams, enabled=False)
+        tcfg = replace(tcfg, enabled=False)
 
     state_shapes = (pshapes, opt_state_shapes, tel_shapes)
     in_shardings = (pshard, oshard, tshard)

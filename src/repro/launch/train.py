@@ -42,7 +42,9 @@ from repro.telemetry import (
     StragglerWatchdog,
     TelemetryConfig,
     init_telemetry,
+    reset_telemetry,
 )
+from repro.telemetry.device import legacy_telemetry_struct, telemetry_from_sketches
 
 __all__ = ["TrainLoop", "main"]
 
@@ -101,6 +103,21 @@ class TrainLoop:
         self.in_sh = in_sh
 
     # ------------------------------------------------------------------ #
+    def _migrate_legacy_tel(self, paths, leaves, like):
+        """Load pre-TelemetryBank checkpoints (one sketch dict per stream).
+
+        The stored leaves flatten in the same order as the legacy structure
+        (params, opt, then tel's per-stream DeviceSketches sorted by stream
+        name), so re-interpreting them against that structure and stacking
+        the sketches into bank rows is lossless.
+        """
+        del paths  # leaf order, not key paths, identifies the legacy layout
+        legacy_like = dict(like)
+        legacy_like["tel"] = legacy_telemetry_struct(self.tcfg)
+        state = jax.tree.unflatten(jax.tree.structure(legacy_like), leaves)
+        state["tel"] = telemetry_from_sketches(state["tel"]["sketches"], self.tcfg)
+        return state
+
     def init_or_restore(self):
         params = None
         start_step = 0
@@ -110,7 +127,7 @@ class TrainLoop:
                 "opt": self.state_shapes[1],
                 "tel": self.state_shapes[2],
             }
-            restored = self.ckpt.restore(like)
+            restored = self.ckpt.restore(like, migrate=self._migrate_legacy_tel)
             if restored is not None:
                 step, state, aux = restored
                 print(f"[train] resumed from step {step}", flush=True)
@@ -176,9 +193,9 @@ class TrainLoop:
                     if (step + 1) % self.flush_every == 0:
                         win = self.aggregator.flush(tel, window_start, step + 1)
                         window_start = step + 1
-                        tel = jax.device_put(
-                            init_telemetry(self.tcfg), self.in_sh[2]
-                        )
+                        # one donated engine executable zeroes the bank in
+                        # place (levels survive); no fresh alloc + device_put
+                        tel = reset_telemetry(tel, self.tcfg)
                         spike = self.spike_guard.check(win.sketches["token_loss"])
                         p50, p99 = spike["p50"], spike["p99"]
                         print(

@@ -39,6 +39,7 @@ __all__ = [
     "BANK_ROW_AXIS",
     "bank_pspec",
     "bank_sharding",
+    "telemetry_pspec",
 ]
 
 # --------------------------------------------------------------------- #
@@ -61,6 +62,18 @@ def bank_pspec() -> P:
 def bank_sharding(mesh: Mesh) -> NamedSharding:
     """NamedSharding applying ``bank_pspec`` to every bank leaf."""
     return NamedSharding(mesh, bank_pspec())
+
+
+def telemetry_pspec() -> P:
+    """PartitionSpec for the in-step ``TelemetryBank`` leaves: replicated.
+
+    Unlike the keyed serving banks (row-sharded over ``keys``), training
+    telemetry is the *result* of the cross-chip all-reduce merge — every
+    chip inserts its local shard of each stream and the SPMD partitioner's
+    all-reduce IS Algorithm 4 — so the merged bank replicates, O(rows·m)
+    floats per step state.
+    """
+    return P()
 
 
 def dp_axes(mesh: Mesh) -> tuple:

@@ -1,8 +1,11 @@
 from repro.telemetry.device import (  # noqa: F401
+    TelemetryBank,
     TelemetryConfig,
     TelemetryState,
     init_telemetry,
+    quantile_summary,
     record,
+    reset_telemetry,
     telemetry_shardings,
 )
 from repro.telemetry.host import HostAggregator, WindowStats  # noqa: F401

@@ -16,6 +16,7 @@ from dataclasses import dataclass
 
 from repro.core.ddsketch import DDSketch
 from repro.core.jax_sketch import BucketSpec, to_host
+from repro.telemetry.device import TelemetryBank, flush_to_host
 
 __all__ = ["WindowStats", "HostAggregator"]
 
@@ -50,10 +51,14 @@ class HostAggregator:
 
     # ------------------------------------------------------------------ #
     def flush(self, state, start_step: int, end_step: int) -> WindowStats:
-        sketches = {}
-        for name, dev in state.sketches.items():
-            host = to_host(dev, self.spec)
-            sketches[name] = host
+        if isinstance(state, TelemetryBank):
+            # one device->host pytree transfer for the whole bank
+            sketches = flush_to_host(state, self.spec)
+        else:  # pre-bank recorder state: a dict of standalone DeviceSketches
+            sketches = {
+                name: to_host(dev, self.spec) for name, dev in state.sketches.items()
+            }
+        for name, host in sketches.items():
             if name not in self.totals:
                 self.totals[name] = host.copy()
             else:

@@ -255,6 +255,18 @@ class KeyedWindow:
             if k != OVERFLOW_KEY
         }
 
+    def rollup_quantiles(self, qs) -> list[float]:
+        """Fleet-view quantiles of the union of *every* row in the window
+        (all keys plus the overflow sink) — "p99 across all tenants".
+
+        One compiled engine call: rows align to the bank-max collapse level
+        and sum into a single bucket array (Algorithm 4 as a row-axis
+        reduction; a psum under a sharded engine), then one Algorithm 2
+        query answers every q.  NaN when the window is empty.
+        """
+        out = np.asarray(self.engine.rollup_quantiles(self.bank, qs))
+        return [float(v) for v in out]
+
     def keys(self) -> list[str]:
         return [k for k in self.key_to_row if k != OVERFLOW_KEY]
 

@@ -1,15 +1,17 @@
 """HTTP/JSON quantile surface: start the stdlib server over real sketch
-telemetry and query p50/p95/p99 end to end."""
+telemetry and query p50/p95/p99 end to end — including the /rollup fleet
+view, bearer-token auth (401) and the token-bucket rate limit (429)."""
 
 import json
-from urllib.request import urlopen
+from urllib.request import Request, urlopen
 from urllib.error import HTTPError
 
 import numpy as np
 import pytest
 
+from repro.core.ddsketch import DDSketch
 from repro.core.jax_sketch import BucketSpec
-from repro.launch.http_api import QuantileHTTPServer, TelemetryFacade
+from repro.launch.http_api import QuantileHTTPServer, TelemetryFacade, TokenBucket
 from repro.telemetry.keyed import KeyedAggregator, KeyedWindow
 
 
@@ -29,8 +31,11 @@ def telemetry(rng):
     return TelemetryFacade(window, agg)
 
 
-def _get(url):
-    with urlopen(url, timeout=10) as resp:
+def _get(url, token=None):
+    req = Request(url)
+    if token is not None:
+        req.add_header("Authorization", f"Bearer {token}")
+    with urlopen(req, timeout=10) as resp:
         return json.loads(resp.read())
 
 
@@ -55,6 +60,81 @@ def test_http_smoke_p50_p95_p99(telemetry):
         for rep in report.values():
             assert rep["alpha"] == pytest.approx(0.01)
             assert rep["collapse_events"] == []
+
+
+def test_http_rollup_fleet_view(telemetry, rng):
+    """/rollup answers quantiles of the union of every live endpoint's
+    current window (the ShardedEngine.rollup_quantiles consumer, here on
+    its single-device twin) — end to end over HTTP."""
+    with QuantileHTTPServer(telemetry) as server:
+        out = _get(f"{server.url}/rollup?q=0.5,0.95,0.99")
+        assert out["qs"] == [0.5, 0.95, 0.99]
+        q50, q95, q99 = out["quantiles"]
+        assert 0 < q50 <= q95 <= q99
+        np.testing.assert_allclose(
+            out["quantiles"], telemetry.rollup_quantiles([0.5, 0.95, 0.99])
+        )
+        with pytest.raises(HTTPError) as err:
+            _get(f"{server.url}/rollup?q=7")
+        assert err.value.code == 400
+
+
+def test_http_rollup_matches_union(rng):
+    """/rollup == host-tier DDSketch over the concatenation of every
+    endpoint's values (Algorithm 4 as a row-axis reduction)."""
+    window = KeyedWindow(BucketSpec(), capacity=8)
+    agg = KeyedAggregator(window.spec)
+    union = DDSketch(0.01, max_bins=None)
+    for ep in ("/a", "/b", "/c"):
+        vals = (rng.pareto(1.0, 300) + 1.0).astype(np.float32)
+        union.extend(vals)
+        window.record(ep, vals)
+    with QuantileHTTPServer(TelemetryFacade(window, agg)) as server:
+        out = _get(f"{server.url}/rollup")
+    np.testing.assert_allclose(
+        out["quantiles"], union.quantiles([0.5, 0.95, 0.99]), rtol=1e-6
+    )
+
+
+def test_http_auth(telemetry):
+    with QuantileHTTPServer(telemetry, auth_token="s3cret") as server:
+        # healthz stays open: liveness probes carry no secrets
+        assert _get(f"{server.url}/healthz") == {"ok": True}
+        for path in ("/live", "/rollup", "/report", "/quantiles?endpoint=/v1/chat"):
+            with pytest.raises(HTTPError) as err:
+                _get(f"{server.url}{path}")
+            assert err.value.code == 401
+            assert err.value.headers["WWW-Authenticate"].startswith("Bearer")
+        with pytest.raises(HTTPError) as err:
+            _get(f"{server.url}/live", token="wrong")
+        assert err.value.code == 401
+        out = _get(f"{server.url}/live", token="s3cret")
+        assert set(out["endpoints"]) == {"/v1/chat", "/v1/embed"}
+
+
+def test_http_rate_limit(telemetry):
+    # rate 0: the burst is the whole budget — deterministic 429 afterwards
+    with QuantileHTTPServer(telemetry, rate_limit=0.0, rate_burst=2) as server:
+        assert _get(f"{server.url}/live")["endpoints"]
+        assert _get(f"{server.url}/live")["endpoints"]
+        with pytest.raises(HTTPError) as err:
+            _get(f"{server.url}/live")
+        assert err.value.code == 429
+        assert float(err.value.headers["Retry-After"]) > 0
+        # healthz is exempt: probes never evict real traffic
+        assert _get(f"{server.url}/healthz") == {"ok": True}
+
+
+def test_token_bucket_refills():
+    bucket = TokenBucket(rate=1000.0, burst=1)
+    assert bucket.try_acquire()
+    import time as _time
+
+    deadline = _time.monotonic() + 1.0
+    while not bucket.try_acquire():  # refills within ~1ms at rate=1000/s
+        assert _time.monotonic() < deadline, "bucket never refilled"
+    with pytest.raises(ValueError):
+        TokenBucket(rate=1.0, burst=0)
 
 
 def test_http_errors(telemetry):

@@ -211,6 +211,29 @@ def test_sharded_keyed_window_parity_and_routing():
 
 
 @multi
+def test_keyed_window_rollup_sharded_matches_single():
+    """The telemetry consumer of ``rollup_quantiles`` (HTTP /rollup):
+    ``KeyedWindow.rollup_quantiles`` answers identically off the
+    single-device row-axis reduction and the sharded psum form — the fleet
+    view is mesh-agnostic, exact for integer-weight counts."""
+    from repro.telemetry.keyed import KeyedWindow
+
+    spec = BucketSpec()
+    rng = np.random.default_rng(5)
+    single = KeyedWindow(spec, capacity=6)
+    sharded = KeyedWindow(spec, capacity=6, num_shards=4)
+    keys = [f"ep{i}" for i in range(5)]
+    ks = [keys[i] for i in rng.integers(0, len(keys), 500)]
+    vals = (10.0 ** rng.uniform(-2.0, 4.0, 500)).astype(np.float32)
+    single.record(ks, vals)
+    sharded.record(ks, vals)
+    lone = single.rollup_quantiles(QS)
+    spread = sharded.rollup_quantiles(QS)
+    np.testing.assert_array_equal(lone, spread)
+    assert np.isfinite(lone).all() and lone == sorted(lone)
+
+
+@multi
 def test_padding_rows_stay_invisible():
     """Logical K that doesn't divide the shard count pads internally; the
     public surface (quantiles shape, counts) stays logical-K sized."""

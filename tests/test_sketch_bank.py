@@ -52,7 +52,9 @@ def test_bank_matches_independent_sketches(rng):
         np.testing.assert_array_equal(np.asarray(sk.neg), np.asarray(bank.neg[i]))
         assert float(sk.zero) == float(bank.zero[i])
         assert float(sk.overflow) == float(bank.overflow[i])
-        assert float(sk.summ) == pytest.approx(float(bank.summ[i]), rel=1e-6)
+        # summ is a float accumulation: the bank's dense small-K stats path
+        # reassociates the reduction vs the scalar sketch's .sum()
+        assert float(sk.summ) == pytest.approx(float(bank.summ[i]), rel=1e-5)
         assert float(sk.vmin) == float(bank.vmin[i])
         assert float(sk.vmax) == float(bank.vmax[i])
 
