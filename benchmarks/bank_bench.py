@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import json
 import os
+import socket
 import subprocess
 import sys
 import time
@@ -360,6 +361,145 @@ def bench_sharded_ingest(
     return json.loads(proc.stdout.splitlines()[-1])
 
 
+_FLEET_WORKER_FLAG = "--fleet-worker"
+_FLEET_SKIP_RC = 75  # worker could not join the fleet; the point is skipped
+
+
+def _fleet_worker(cfg: dict) -> int:
+    """One process of a coordinated ``jax.distributed`` fleet (gloo CPU).
+
+    Every process runs the same ingest loop over the same host stream —
+    the SPMD contract; each uploads only the lanes its shard owns — with
+    ``barrier``-fenced timed regions so the reported wall-clock is the
+    fleet's (slowest process bounds), then process 0 prints the rows.
+    """
+    from repro.launch import distributed as dist
+
+    try:
+        dist.initialize(
+            cfg.get("coordinator"),
+            cfg["processes"],
+            cfg.get("process_id"),
+            local_device_count=1,
+            timeout_s=cfg.get("timeout_s", 120),
+        )
+    except Exception as e:  # noqa: BLE001 - bootstrap failure -> skip point
+        print(f"[fleet] bootstrap failed: {e!r}", file=sys.stderr)
+        return _FLEET_SKIP_RC
+    from repro.engine import ShardedBank
+
+    spec = BucketSpec()
+    k, n = cfg["k"], cfg["n"]
+    records, iters = cfg["records"], cfg["iters"]
+    shards = cfg["processes"]  # one device per process: shards == processes
+    rng = np.random.default_rng(0)
+    vals = (rng.pareto(1.0, n) + 1.0).astype(np.float32)
+    ids = rng.integers(0, k, n).astype(np.int32)
+    bank = ShardedBank(spec, k, num_shards=shards)
+    bank.add(vals, ids)  # compile + warm
+    jax.block_until_ready(bank.state)
+    dist.barrier("fleet_warm")
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        for _ in range(records):
+            bank.add(vals, ids)
+        jax.block_until_ready(bank.state)
+    dist.barrier("fleet_ingest")
+    ingest = (time.perf_counter() - t0) / (iters * records)
+    qs = [0.5, 0.95, 0.99]
+    bank.rollup_quantiles(qs)  # compile the psum path
+    dist.barrier("fleet_rollup_warm")
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        bank.rollup_quantiles(qs)
+    dist.barrier("fleet_rollup")
+    rollup = (time.perf_counter() - t0) / iters
+    if dist.process_index() == 0:
+        print(json.dumps([
+            {
+                "bench": "sharded_ingest",
+                "K": k,
+                "n_per_record": n,
+                "processes": shards,
+                "shards": shards,
+                "ms_per_record": round(ingest * 1e3, 4),
+                "rollup_ms": round(rollup * 1e3, 4),
+                "impl": "jax_distributed_gloo",
+            }
+        ]))
+    dist.barrier("fleet_done")
+    dist.shutdown()
+    return 0
+
+
+def _fleet_point(
+    k: int, n: int, records: int, iters: int, p_count: int
+) -> list[dict]:
+    """Launch ``p_count`` coordinated worker processes; parse proc 0's rows."""
+    env = dict(os.environ)
+    for var in ("XLA_FLAGS", "REPRO_COORDINATOR", "REPRO_NUM_PROCESSES",
+                "REPRO_PROCESS_ID", "REPRO_LOCAL_DEVICES"):
+        env.pop(var, None)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep
+        + env.get("PYTHONPATH", "")
+    )
+    cfg = {"k": k, "n": n, "records": records, "iters": iters,
+           "processes": p_count, "timeout_s": 120}
+    if p_count > 1:
+        with socket.socket() as sock:
+            sock.bind(("localhost", 0))
+            cfg["coordinator"] = f"localhost:{sock.getsockname()[1]}"
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-m", "benchmarks.bank_bench", _FLEET_WORKER_FLAG,
+             json.dumps({**cfg, "process_id": pid})],
+            stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE,
+            text=True,
+            env=env,
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+        )
+        for pid in range(p_count)
+    ]
+    outs = [proc.communicate(timeout=1800) for proc in procs]
+    rcs = [proc.returncode for proc in procs]
+    if any(rc == _FLEET_SKIP_RC for rc in rcs):
+        print(f"[fleet] {p_count}-process point skipped "
+              "(jax.distributed could not bootstrap)", file=sys.stderr)
+        return []
+    if any(rc != 0 for rc in rcs):
+        report = "\n".join(
+            f"--- process {i} (rc={rc}) ---\n{e[-2000:]}"
+            for i, (rc, (_, e)) in enumerate(zip(rcs, outs))
+        )
+        raise RuntimeError(f"fleet point ({p_count} processes) failed\n{report}")
+    return json.loads(outs[0][0].strip().splitlines()[-1])
+
+
+def bench_fleet_ingest(
+    k: int = 1024, n: int = 4096, records: int = 10, iters: int = 2,
+    processes=(1, 2, 8),
+) -> list[dict]:
+    """Multi-*process* sharded ingest: 1/2/8 coordinated OS processes.
+
+    Unlike ``bench_sharded_ingest`` (fake devices in one process), each
+    point here is a real ``jax.distributed`` fleet — separate processes,
+    gloo collectives, coordinator handshake — with one device per process,
+    so shard count == process count.  On one physical CPU the processes
+    share cores; the rows track the *cross-process* dispatch/collective
+    overhead trajectory (ingest is collective-free by design — the routed
+    batch is never replicated — while ``rollup_ms`` carries the one psum).
+    Points whose fleet cannot bootstrap are skipped with a note.
+    """
+    rows: list[dict] = []
+    for p_count in processes:
+        rows.extend(_fleet_point(k, n, records, iters, p_count))
+    return rows
+
+
 def bench_bank_quantiles(k: int = 4096, n: int = 500_000, iters: int = 10) -> list[dict]:
     """Fused Algorithm 2 over all K rows and all qs (single query pass)."""
     spec = BucketSpec()
@@ -385,10 +525,13 @@ def bench_bank_quantiles(k: int = 4096, n: int = 500_000, iters: int = 10) -> li
 
 
 if __name__ == "__main__":
-    # subprocess entry for the sharded sweep (device counts are fixed at
-    # process start, so the parent re-execs with XLA_FLAGS set)
+    # subprocess entries: the sharded sweep re-execs with XLA_FLAGS (device
+    # counts are fixed at process start); the fleet sweep re-execs one
+    # worker per simulated host
     if len(sys.argv) >= 3 and sys.argv[1] == _SHARDED_WORKER_FLAG:
         print(json.dumps(_sharded_worker(json.loads(sys.argv[2]))))
+    elif len(sys.argv) >= 3 and sys.argv[1] == _FLEET_WORKER_FLAG:
+        sys.exit(_fleet_worker(json.loads(sys.argv[2])))
     else:
         for row in bench_engine_ingest():
             print(row)

@@ -19,12 +19,18 @@ below ``--min-ms`` in the baseline are noise-dominated and skipped —
 per-element metrics (``*_per_*`` keys: ns_per_value, us_per_query, ...)
 are averages over long timed runs, so they are always compared no matter
 how small; benches contributing zero compared timings are called out.
+
+Under GitHub Actions the gate also *reports*: a per-bench markdown table
+lands in the job's step summary (``$GITHUB_STEP_SUMMARY``) and every
+regression over the factor emits a ``::error`` workflow annotation, so a
+tripped gate names the offending bench on the PR without digging in logs.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 _UNIT_MS = {"ms": 1.0, "us": 1e-3, "ns": 1e-6}
@@ -61,9 +67,15 @@ def compare(
     factor: float = 2.0,
     min_ms: float = 0.05,
     calibrate: bool = True,
-) -> tuple[list[str], list[str]]:
-    """Return (regressions, notes); empty regressions == gate passes."""
-    pairs = []  # (label, base_ms, cand_ms)
+) -> tuple[list[str], list[str], list[dict]]:
+    """Return (regressions, notes, timings).
+
+    Empty ``regressions`` == gate passes.  ``timings`` carries one dict per
+    compared timing — ``{bench, label, key, base_ms, new_ms, ratio,
+    regressed}`` with ``ratio`` already calibrated — for reporting layers
+    (the GitHub step summary) on top of the pass/fail strings.
+    """
+    pairs = []  # (bench, key, label, base_ms, cand_ms)
     unmatched = 0
     uncovered: list[str] = []
     for bench, base_rows in baseline.items():
@@ -89,7 +101,7 @@ def compare(
                 if base_ms < min_ms and "_per_" not in key:
                     continue
                 label = f"{bench} {dict(_identity(row))} {key}"
-                pairs.append((label, base_ms, new_ms))
+                pairs.append((bench, key, label, base_ms, new_ms))
                 covered += 1
         if base_rows and not covered:
             uncovered.append(bench)
@@ -106,8 +118,8 @@ def compare(
         )
     if not pairs:
         notes.append("no comparable timings found (new bench set?); gate passes")
-        return [], notes
-    ratios = sorted(new / base for _, base, new in pairs)
+        return [], notes, []
+    ratios = sorted(new / base for _, _, _, base, new in pairs)
     median = ratios[len(ratios) // 2]
     scale = median if calibrate and median > 0 else 1.0
     if calibrate:
@@ -116,14 +128,84 @@ def compare(
             f"{len(pairs)} timings (ratios divided by it)"
         )
     regressions = []
-    for label, base_ms, new_ms in pairs:
+    timings = []
+    for bench, key, label, base_ms, new_ms in pairs:
         ratio = (new_ms / base_ms) / scale
-        if ratio > factor:
+        regressed = ratio > factor
+        timings.append(
+            {
+                "bench": bench,
+                "key": key,
+                "label": label,
+                "base_ms": base_ms,
+                "new_ms": new_ms,
+                "ratio": ratio,
+                "regressed": regressed,
+            }
+        )
+        if regressed:
             regressions.append(
                 f"{label}: {base_ms:.3f} ms -> {new_ms:.3f} ms "
                 f"({ratio:.2f}x calibrated, factor {factor}x)"
             )
-    return regressions, notes
+    return regressions, notes, timings
+
+
+def _annotate_github(timings: list[dict], factor: float) -> None:
+    """``::error`` workflow annotations: one per regressed timing, so the
+    gate names the offending bench directly on the PR checks page."""
+    for t in timings:
+        if not t["regressed"]:
+            continue
+        print(
+            f"::error title=Perf regression in {t['bench']}::"
+            f"{t['label']}: {t['base_ms']:.3f} ms -> {t['new_ms']:.3f} ms "
+            f"({t['ratio']:.2f}x calibrated, gate {factor}x)"
+        )
+
+
+def write_step_summary(
+    timings: list[dict], notes: list[str], factor: float, path: str
+) -> None:
+    """Append the per-bench markdown table GitHub renders as the job's
+    step summary: worst calibrated ratio per bench, regressed rows called
+    out — the perf trajectory at a glance."""
+    by_bench: dict[str, list[dict]] = {}
+    for t in timings:
+        by_bench.setdefault(t["bench"], []).append(t)
+    lines = [
+        "## Perf trajectory vs committed baseline",
+        "",
+        *(f"> {note}" for note in notes),
+        "",
+        "| bench | timings | worst calibrated ratio | status |",
+        "| --- | ---: | ---: | --- |",
+    ]
+    for bench in sorted(by_bench):
+        rows = by_bench[bench]
+        worst = max(rows, key=lambda t: t["ratio"])
+        bad = [t for t in rows if t["regressed"]]
+        status = f"🔴 {len(bad)} regression(s)" if bad else "✅"
+        lines.append(
+            f"| {bench} | {len(rows)} | {worst['ratio']:.2f}x "
+            f"(`{worst['key']}`) | {status} |"
+        )
+    regressed = [t for t in timings if t["regressed"]]
+    if regressed:
+        lines += [
+            "",
+            f"### Regressions over {factor}x",
+            "",
+            "| timing | baseline | candidate | calibrated |",
+            "| --- | ---: | ---: | ---: |",
+            *(
+                f"| {t['label']} | {t['base_ms']:.3f} ms | "
+                f"{t['new_ms']:.3f} ms | {t['ratio']:.2f}x |"
+                for t in regressed
+            ),
+        ]
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def main() -> None:
@@ -139,7 +221,7 @@ def main() -> None:
         baseline = json.load(f)
     with open(args.candidate) as f:
         candidate = json.load(f)
-    regressions, notes = compare(
+    regressions, notes, timings = compare(
         baseline,
         candidate,
         factor=args.factor,
@@ -148,10 +230,14 @@ def main() -> None:
     )
     for note in notes:
         print(f"[compare] {note}")
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        write_step_summary(timings, notes, args.factor, summary_path)
     if regressions:
         print(f"[compare] {len(regressions)} regression(s) over {args.factor}x:")
         for r in regressions:
             print(f"[compare]   {r}")
+        _annotate_github(timings, args.factor)
         sys.exit(1)
     print("[compare] no regressions; perf trajectory holds")
 

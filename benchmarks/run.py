@@ -109,6 +109,12 @@ def main() -> None:
             "sharded_ingest": lambda: bank_bench.bench_sharded_ingest(
                 k=1024, n=4096, records=10, iters=2, shards=(1, 2, 8)
             ),
+            # the fleet tier: 1/2/8 coordinated jax.distributed processes
+            # (gloo CPU collectives), one device each — the multi-host
+            # ingest + rollup trajectory tracked in BENCH_baseline.json
+            "sharded_ingest_fleet": lambda: bank_bench.bench_fleet_ingest(
+                k=1024, n=4096, records=10, iters=2, processes=(1, 2, 8)
+            ),
             # train-telemetry recorder: dict-of-sketches vs TelemetryBank
             # (traced hist dispatches + ms/step, tracked in BENCH_baseline)
             "telemetry_record": lambda: telemetry_bench.bench_telemetry_record(
@@ -146,6 +152,9 @@ def main() -> None:
             "sharded_ingest": lambda: bank_bench.bench_sharded_ingest(
                 k=2048, n=8192, records=15, iters=3, shards=(1, 2, 8)
             ),
+            "sharded_ingest_fleet": lambda: bank_bench.bench_fleet_ingest(
+                k=2048, n=8192, records=15, iters=3, processes=(1, 2, 8)
+            ),
             "telemetry_record": lambda: telemetry_bench.bench_telemetry_record(
                 iters=10
             ),
@@ -180,6 +189,9 @@ def main() -> None:
             ),
             "sharded_ingest": lambda: bank_bench.bench_sharded_ingest(
                 k=4096, n=16384, records=20, iters=3, shards=(1, 2, 4, 8)
+            ),
+            "sharded_ingest_fleet": lambda: bank_bench.bench_fleet_ingest(
+                k=4096, n=16384, records=20, iters=3, processes=(1, 2, 8)
             ),
             "telemetry_record": lambda: telemetry_bench.bench_telemetry_record(
                 seq=2048, iters=10

@@ -18,9 +18,17 @@ mergeability means restarted runs keep exact quantile history: sketches
 merge losslessly across restarts (Algorithm 4), so fleet telemetry survives
 preemption just like model weights.
 
-Per-host sharded writes on a real multi-host pod would key the npz file by
-``jax.process_index()``; in this single-process container the process count
-is 1 and the file layout degenerates to one shard (documented in DESIGN.md).
+Multi-host (``jax.distributed`` fleets, a shared checkpoint filesystem):
+
+* **process 0 is the only writer** — every process snapshots (leaves that
+  span processes gather host-side, a collective every process must reach:
+  the SPMD contract), then non-zero processes return while process 0
+  writes, commits, and GCs; a trailing barrier orders the write before
+  anyone can observe the step.  Without the guard, N processes race on
+  the same ``step_X.tmp`` rename and the commit marker.
+* **restore is broadcast-safe** — every process reads the same committed
+  files and ``shardings`` re-places each leaf, so a process-spanning bank
+  restores each host's row blocks from one byte-identical source.
 """
 
 from __future__ import annotations
@@ -35,6 +43,27 @@ import jax
 import numpy as np
 
 __all__ = ["CheckpointManager"]
+
+
+def _is_writer() -> bool:
+    """True on the single process allowed to touch the checkpoint dir."""
+    return jax.process_index() == 0
+
+
+def _barrier(tag: str) -> None:
+    if jax.process_count() > 1:
+        from jax.experimental import multihost_utils
+
+        multihost_utils.sync_global_devices(tag)
+
+
+def _host_leaf(x):
+    """Leaf -> host np array; process-spanning arrays gather (collective)."""
+    if isinstance(x, jax.Array) and not x.is_fully_addressable:
+        from jax.experimental import multihost_utils
+
+        return np.asarray(multihost_utils.process_allgather(x, tiled=True))
+    return np.asarray(x)
 
 
 def _flatten_with_paths(tree):
@@ -68,16 +97,30 @@ class CheckpointManager:
     # ------------------------------------------------------------------ #
     def save(self, step: int, state, aux: dict | None = None) -> None:
         """Blocking save.  ``state`` is any pytree of arrays; ``aux`` is
-        JSON-serializable side state (telemetry, data iterator, rng)."""
+        JSON-serializable side state (telemetry, data iterator, rng).
+
+        Multi-host: call from *every* process (the snapshot may gather
+        process-spanning leaves — a collective); only process 0 writes, and
+        the trailing barrier guarantees the step is committed before any
+        process's ``save`` returns."""
         self.wait()  # one in-flight async save at a time
-        host_state = jax.tree.map(np.asarray, state)
-        self._write(step, host_state, aux or {})
+        host_state = jax.tree.map(_host_leaf, state)
+        if _is_writer():
+            self._write(step, host_state, aux or {})
+        _barrier(f"ckpt_save_{step}")
 
     def save_async(self, step: int, state, aux: dict | None = None) -> None:
-        """Device->host snapshot now; disk write on a background thread."""
+        """Device->host snapshot now; disk write on a background thread.
+
+        The snapshot (and any cross-process gather) happens synchronously
+        on every process; only process 0's thread writes.  ``wait()``
+        barriers the fleet, so ``save_async(); wait()`` is ordered like a
+        blocking ``save``."""
         self.wait()
-        host_state = jax.tree.map(np.asarray, state)  # snapshot (sync point)
+        host_state = jax.tree.map(_host_leaf, state)  # snapshot (sync point)
         aux = dict(aux or {})
+        if not _is_writer():
+            return
 
         def _run():
             try:
@@ -95,6 +138,7 @@ class CheckpointManager:
         if self._error is not None:
             err, self._error = self._error, None
             raise err
+        _barrier("ckpt_wait")
 
     # ------------------------------------------------------------------ #
     def _write(self, step: int, host_state, aux: dict) -> None:
@@ -154,6 +198,12 @@ class CheckpointManager:
         """Restore into the structure of ``like`` (a pytree of arrays or
         ShapeDtypeStructs).  Returns (step, state, aux) or None if no
         committed checkpoint exists (fresh start).
+
+        Broadcast-safe on a fleet: every process reads the same committed
+        files (only trusting ``.COMMITTED`` markers, which ``save`` orders
+        behind a barrier) and ``shardings`` re-places each leaf — each
+        process materializes exactly its addressable blocks, so a
+        process-spanning bank restores without any cross-host transfer.
 
         ``migrate`` handles state-shape breaks across code versions: when
         the stored leaf count does not match ``like``'s (e.g. checkpoints

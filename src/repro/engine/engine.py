@@ -192,6 +192,44 @@ class SketchEngine:
         """A ``(K,)`` per-row argument, placed like the bank's row axis."""
         return jnp.asarray(arr)
 
+    def _prep_batch(self, v, s, w, *, block: int | None = None):
+        """Pack a host batch for ingest: ``(values, ids, weights, geom)``.
+
+        The base engine pads to the next power-of-two bucket (inert lanes:
+        NaN value / id -1 / weight 0) so ragged streams compile O(log N)
+        executables; ``geom`` keys the executable cache.  The sharded
+        engine overrides this with the shard-routed ``keys``-sharded
+        layout (``ShardedEngine.route``).
+        """
+        del block
+        n = v.size
+        pad = _pad_to_bucket(max(n, 1)) - n
+        if pad:
+            v = np.pad(v, (0, pad), constant_values=np.nan)
+            s = np.pad(s, (0, pad), constant_values=-1)
+            if w is not None:
+                w = np.pad(w, (0, pad))
+        return (
+            jnp.asarray(v),
+            jnp.asarray(s),
+            None if w is None else jnp.asarray(w),
+            v.size,
+        )
+
+    # host-side reads ---------------------------------------------------- #
+    def host_rows(self, arr) -> np.ndarray:
+        """A per-row device array ((K,) or (K, Q)) as a host np array.
+
+        The sharded engine overrides this with a cross-process gather when
+        the bank spans hosts; going through this hook keeps every host-side
+        consumer (telemetry resets, aggregator flushes) mesh-agnostic.
+        """
+        return np.asarray(arr)
+
+    def host_bank(self, bank: SketchBank) -> SketchBank:
+        """The whole bank pytree as host np arrays (one transfer per leaf)."""
+        return jax.tree.map(np.asarray, bank)
+
     def reset(self, bank: SketchBank, levels=None) -> SketchBank:
         """Zero the bank **in place** (donated), keeping or replacing levels.
 
@@ -211,7 +249,9 @@ class SketchEngine:
         # np round-trip: never hand the donated bank's own level buffer
         # back as a second argument (aliased donation is undefined)
         lv = self._rows(
-            np.asarray(bank.level if levels is None else levels, np.int32)
+            np.asarray(
+                self.host_rows(bank.level) if levels is None else levels, np.int32
+            )
         )
         return self._compiled(
             ("reset",),
@@ -234,10 +274,12 @@ class SketchEngine:
         weights=None,
         *,
         auto_collapse: bool = False,
+        block: int | None = None,
     ) -> SketchBank:
         """Donated ``sketch_bank.add``: the input bank is updated in place."""
         bank, _, _ = self.ingest(
-            bank, values, sketch_ids, weights, auto_collapse=auto_collapse
+            bank, values, sketch_ids, weights, auto_collapse=auto_collapse,
+            block=block,
         )
         return bank
 
@@ -250,6 +292,7 @@ class SketchEngine:
         *,
         threshold: float | None = None,
         auto_collapse: bool = False,
+        block: int | None = None,
     ) -> tuple[SketchBank, Any, Any]:
         """One compiled call: add a batch, then reactive-collapse hot rows.
 
@@ -263,23 +306,20 @@ class SketchEngine:
 
         The batch is padded to a power-of-two bucket (invalid lanes
         contribute nothing), so ragged streams reuse a handful of
-        executables; the bank argument is always donated.
+        executables; the bank argument is always donated.  ``block`` pins
+        the padded per-shard block size on a sharded engine — the
+        multi-host contract when each process feeds only its local lanes
+        (see ``ShardedEngine.route``); single-device engines ignore it.
         """
         v = np.asarray(values, np.float32).reshape(-1)
         s = np.asarray(sketch_ids, np.int32).reshape(-1)
         if v.shape != s.shape:
             raise ValueError(f"values {v.shape} vs sketch_ids {s.shape}")
         w = None if weights is None else np.asarray(weights, np.float32).reshape(-1)
-        n = v.size
-        pad = _pad_to_bucket(max(n, 1)) - n
-        if pad:
-            v = np.pad(v, (0, pad), constant_values=np.nan)
-            s = np.pad(s, (0, pad), constant_values=-1)
-            if w is not None:
-                w = np.pad(w, (0, pad))
+        vv, ss, ww, geom = self._prep_batch(v, s, w, block=block)
 
         reactive = threshold is not None
-        key = ("ingest", v.size, w is not None, reactive, auto_collapse)
+        key = ("ingest", geom, w is not None, reactive, auto_collapse)
 
         def ingest_impl(b, vv, ss, ww, thr):
             b = sbank.add_impl(
@@ -311,9 +351,9 @@ class SketchEngine:
             ("bank", "batch", "ids", "batch", "scalar"),
             ("bank", "rows", "rows") if reactive else ("bank",),
             bank,
-            jnp.asarray(v),
-            jnp.asarray(s),
-            None if w is None else jnp.asarray(w),
+            vv,
+            ss,
+            ww,
             thr,
         )
         if not reactive:

@@ -1,0 +1,186 @@
+"""Multi-host bootstrap around ``jax.distributed`` (the fleet tier).
+
+The paper's deployment is a *fleet* of hosts each sketching its local
+traffic, merged into one answer (full mergeability, Algorithm 4).  On the
+device tier that fleet is a ``keys`` mesh spanning every process's devices
+(``launch.mesh.make_keys_mesh``): each host ingests only the rows it owns
+and the only cross-host traffic is the rollup psum — the Cafaro-style
+hierarchical DDSketch fusion as one collective.
+
+This module owns process bootstrap:
+
+* ``initialize()`` wraps ``jax.distributed.initialize`` with coordinator /
+  process-count / process-id resolution from arguments or the
+  ``REPRO_COORDINATOR`` / ``REPRO_NUM_PROCESSES`` / ``REPRO_PROCESS_ID``
+  environment (one env per launcher line: ``REPRO_COORDINATOR=host0:1234
+  REPRO_NUM_PROCESSES=8 REPRO_PROCESS_ID=3 python -m ...``), and is a
+  **single-process no-op** when neither names more than one process — the
+  same entry points serve a laptop smoke run and an 8-host fleet.
+* CPU fleets (the CI simulation tier and host-side aggregators) get the
+  gloo collectives backend selected automatically — XLA's CPU client needs
+  it for cross-process psum/all_gather.
+* ``barrier()`` / ``process_index()`` / ``process_count()`` are the tiny
+  process-topology helpers the checkpoint tier and benches share; all of
+  them degrade to single-process answers when distributed never started.
+
+Call ``initialize()`` before any other jax API touches the backend:
+device counts and collectives are fixed at first backend use.
+"""
+
+from __future__ import annotations
+
+import os
+import socket
+import time
+
+import jax
+
+__all__ = [
+    "initialize",
+    "shutdown",
+    "is_distributed",
+    "process_index",
+    "process_count",
+    "is_coordinator",
+    "barrier",
+]
+
+_ENV_COORDINATOR = "REPRO_COORDINATOR"
+_ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
+_ENV_PROCESS_ID = "REPRO_PROCESS_ID"
+_ENV_LOCAL_DEVICES = "REPRO_LOCAL_DEVICES"
+
+_initialized = False
+
+
+def _env_int(name: str) -> int | None:
+    raw = os.environ.get(name)
+    return None if raw in (None, "") else int(raw)
+
+
+def _tcp_preflight(coordinator: str, deadline_s: float) -> None:
+    """Wait (bounded) for the coordinator's TCP port to accept connections.
+
+    ``jax.distributed``'s own client turns an unreachable coordinator into
+    a *fatal process abort* (C++ ``LOG(FATAL)`` on RegisterTask deadline) —
+    uncatchable from Python.  Probing the socket first converts "nothing is
+    listening" into an ordinary ``ConnectionError`` callers can handle (the
+    CI harness maps it to a clean skip)."""
+    host, _, port = coordinator.rpartition(":")
+    deadline = time.monotonic() + deadline_s
+    while True:
+        try:
+            with socket.create_connection((host or "localhost", int(port)), 1.0):
+                return
+        except OSError as e:
+            if time.monotonic() >= deadline:
+                raise ConnectionError(
+                    f"coordinator {coordinator} unreachable after {deadline_s:.0f}s"
+                ) from e
+            time.sleep(0.25)
+
+
+def initialize(
+    coordinator: str | None = None,
+    num_processes: int | None = None,
+    process_id: int | None = None,
+    *,
+    local_device_count: int | None = None,
+    timeout_s: int | None = None,
+) -> bool:
+    """Join (or skip joining) the fleet; returns True iff distributed.
+
+    Arguments fall back to the ``REPRO_*`` environment, so launchers can
+    configure the fleet without touching call sites.  With fewer than two
+    processes resolved this is a **no-op returning False** — every caller
+    (serve, benches, tests) can call it unconditionally.
+
+    ``local_device_count`` forces the per-process CPU device count (the
+    simulation knob: N fake devices per process via XLA_FLAGS); it must be
+    applied before jax initializes its backend, so pass it only from true
+    entry points.  ``timeout_s`` bounds the coordinator handshake — the CI
+    harness uses a short timeout so an unreachable coordinator surfaces as
+    a clean skip rather than a hung job.
+    """
+    global _initialized
+    coordinator = coordinator or os.environ.get(_ENV_COORDINATOR) or None
+    num_processes = (
+        num_processes if num_processes is not None else _env_int(_ENV_NUM_PROCESSES)
+    )
+    process_id = process_id if process_id is not None else _env_int(_ENV_PROCESS_ID)
+    if local_device_count is None:
+        local_device_count = _env_int(_ENV_LOCAL_DEVICES)
+
+    if local_device_count is not None:
+        flag = f"--xla_force_host_platform_device_count={int(local_device_count)}"
+        prev = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in prev:
+            os.environ["XLA_FLAGS"] = f"{prev} {flag}".strip()
+
+    if _initialized:
+        return True
+    if coordinator is None or num_processes is None or int(num_processes) <= 1:
+        return False  # single process: plain local jax, nothing to join
+
+    # XLA's CPU client only speaks cross-process collectives through gloo;
+    # select it before the backend exists (no-op where unsupported).
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except AttributeError:  # pragma: no cover - much older jax
+        pass
+
+    kwargs = {}
+    if timeout_s is not None:
+        kwargs["initialization_timeout"] = int(timeout_s)
+        if process_id is not None and int(process_id) != 0:
+            # process 0 *is* the coordinator (it binds the port); everyone
+            # else probes reachability first so a dead coordinator raises
+            # instead of fatally aborting the process
+            _tcp_preflight(coordinator, float(timeout_s))
+    jax.distributed.initialize(
+        coordinator_address=coordinator,
+        num_processes=int(num_processes),
+        process_id=None if process_id is None else int(process_id),
+        **kwargs,
+    )
+    _initialized = True
+    return True
+
+
+def shutdown() -> None:
+    """Leave the fleet (idempotent); test harnesses call this on teardown."""
+    global _initialized
+    if _initialized:
+        jax.distributed.shutdown()
+        _initialized = False
+
+
+def is_distributed() -> bool:
+    """True iff this process joined a multi-process fleet."""
+    return _initialized or jax.process_count() > 1
+
+
+def process_index() -> int:
+    return jax.process_index()
+
+
+def process_count() -> int:
+    return jax.process_count()
+
+
+def is_coordinator() -> bool:
+    """True on the process that owns coordinator duties (writes, logs)."""
+    return jax.process_index() == 0
+
+
+def barrier(tag: str = "repro") -> None:
+    """Block until every process reaches this point (single-process no-op).
+
+    The checkpoint tier uses it to order process-0 writes before anyone
+    restores; benches use it to fence timed regions across the fleet.
+    """
+    if not is_distributed():
+        return
+    from jax.experimental import multihost_utils
+
+    multihost_utils.sync_global_devices(tag)

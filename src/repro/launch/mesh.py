@@ -19,15 +19,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_keys_mesh(num_shards: int | None = None):
+def make_keys_mesh(num_shards: int | None = None, *, devices=None):
     """1-D mesh over the ``keys`` axis for row-sharded sketch banks.
 
     The bank's row axis partitions over it (``sharding.rules.bank_sharding``);
     full mergeability makes the sharded bank one logical bank, so this mesh
     is orthogonal to (and composable with) the model meshes above.
-    ``num_shards=None`` takes every visible device.
+
+    **Process-spanning:** after ``launch.distributed.initialize`` joins a
+    fleet, ``jax.devices()`` enumerates *every* process's devices in a
+    consistent global order, so the same call builds the same fleet-wide
+    mesh on every host — shard ``i`` is ``mesh.devices.flat[i]``, owned by
+    that device's process.  ``num_shards=None`` takes every visible device
+    (local and remote alike); an explicit ``num_shards`` smaller than the
+    fleet takes the first ``num_shards`` devices, and only processes owning
+    one of them may drive the resulting engines (the SPMD contract).
     """
-    devs = jax.devices()
+    devs = jax.devices() if devices is None else list(devices)
     n = len(devs) if num_shards is None else int(num_shards)
     if not 1 <= n <= len(devs):
         raise ValueError(f"num_shards={n} outside [1, {len(devs)}] visible devices")

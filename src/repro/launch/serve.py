@@ -238,12 +238,23 @@ def main() -> None:
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--prompt-len", type=int, default=8)
     p.add_argument("--endpoints", type=int, default=3)
+    p.add_argument(
+        "--sketch-shards", type=int, default=None,
+        help="row-shard the endpoint sketch bank over this many devices "
+        "(spans hosts once launch.distributed joined a fleet)",
+    )
     args = p.parse_args()
+    # fleet bootstrap: no-op single-process, REPRO_COORDINATOR & co. join a
+    # multi-host fleet whose devices the keys mesh (sketch shards) can span
+    from repro.launch import distributed as dist
+
+    dist.initialize()
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     rng = np.random.default_rng(0)
     server = Server(
         cfg, batch_slots=args.batch_slots,
         max_len=args.prompt_len + args.max_new + 1,
+        sketch_shards=args.sketch_shards,
     )
     reqs = [
         Request(

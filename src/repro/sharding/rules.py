@@ -39,6 +39,8 @@ __all__ = [
     "BANK_ROW_AXIS",
     "bank_pspec",
     "bank_sharding",
+    "batch_pspec",
+    "batch_sharding",
     "telemetry_pspec",
 ]
 
@@ -62,6 +64,26 @@ def bank_pspec() -> P:
 def bank_sharding(mesh: Mesh) -> NamedSharding:
     """NamedSharding applying ``bank_pspec`` to every bank leaf."""
     return NamedSharding(mesh, bank_pspec())
+
+
+def batch_pspec() -> P:
+    """PartitionSpec for the *routed* streamed-ingest batch: ``keys``-sharded.
+
+    ``ShardedEngine.route`` lays a batch out as ``num_shards`` equal blocks
+    along the streamed axis, block ``p`` holding exactly the lanes whose
+    global row id lives on shard ``p`` (padded with inert lanes).  Sharding
+    that axis over ``keys`` then hands every shard precisely its own lanes —
+    shard-local ingest with **no batch replication across hosts**, which is
+    what makes the multi-process fleet tier scale: a host only ever
+    materializes the values destined for rows it owns, and the cross-host
+    traffic of the whole system is the rollup psum.
+    """
+    return P(BANK_ROW_AXIS)
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding applying ``batch_pspec`` to a routed batch array."""
+    return NamedSharding(mesh, batch_pspec())
 
 
 def telemetry_pspec() -> P:

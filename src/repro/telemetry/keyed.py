@@ -167,6 +167,22 @@ class KeyedWindow:
             return self.engine.shard_of(rid)
         return 0
 
+    def process_of(self, key: str) -> int:
+        """Process owning ``key``'s shard (0 unless the mesh spans hosts).
+
+        The fleet-routing half of the key→(shard, row) map: on a
+        multi-host window every process records the same key stream (the
+        SPMD contract keeps the host-side row maps identical), each host's
+        devices ingest only the rows they own, and this helper says who
+        owns what.
+        """
+        rid = self.key_to_row.get(key)
+        if rid is None:
+            raise KeyError(f"no values recorded for key {key!r}")
+        if isinstance(self.engine, ShardedEngine):
+            return self.engine.process_of(rid)
+        return 0
+
     def record(self, keys, values, weights=None) -> None:
         """Insert ``(key, value)`` pairs; one engine executable per batch.
 
@@ -272,7 +288,7 @@ class KeyedWindow:
 
     def levels(self) -> dict[str, int]:
         """Per-key uniform-collapse level (0 = full resolution)."""
-        lv = np.asarray(self.bank.level)
+        lv = self.engine.host_rows(self.bank.level)
         return {k: int(lv[r]) for k, r in self.key_to_row.items()}
 
     def alphas(self) -> dict[str, float]:
@@ -299,7 +315,7 @@ class KeyedWindow:
         """
         self._window += 1
         self._materialize_events()  # before rows change hands below
-        levels = np.asarray(self.bank.level).copy()
+        levels = self.engine.host_rows(self.bank.level).copy()
         for key in list(self.key_to_row):
             if key == OVERFLOW_KEY:
                 continue
@@ -335,12 +351,17 @@ class KeyedAggregator:
         Lossless per row (same bucket geometry at the row's level);
         Algorithm 4 makes the per-key rollup exactly equal to a sketch that
         saw all the data at the coarsest level the key ever reached.
+
+        The bank moves host-side in one pytree transfer (an all_gather per
+        leaf when the window spans processes — every flushing host then
+        aggregates the same totals, keeping the host tier replicated).
         """
-        counts = np.asarray(window.bank.counts)
+        bank_h = window.engine.host_bank(window.bank)
+        counts = np.asarray(bank_h.counts)
         for key, rid in window.key_to_row.items():
             if counts[rid] == 0:
                 continue
-            host = sbank.to_host(window.bank, window.spec, rid)
+            host = sbank.to_host(bank_h, window.spec, rid)
             if key in self.totals:
                 self.totals[key].merge(host)
             else:

@@ -80,3 +80,35 @@ def test_async_save(tmp_path):
 def test_fresh_start_returns_none(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     assert mgr.restore({"a": jax.ShapeDtypeStruct((1,), jnp.float32)}) is None
+
+
+def test_save_only_writes_on_process_zero(tmp_path, monkeypatch):
+    """The multi-host writer guard: a non-zero process's save (sync or
+    async) must leave the checkpoint directory untouched — on a fleet N
+    processes would otherwise race on the same tmp-dir rename."""
+    from repro.checkpoint import manager as mgr_mod
+
+    monkeypatch.setattr(mgr_mod.jax, "process_index", lambda: 1)
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _state(1))
+    mgr.save_async(2, _state(2))
+    mgr.wait()
+    assert os.listdir(str(tmp_path)) == []
+    assert mgr.all_steps() == []
+
+
+def test_restore_reads_on_every_process(tmp_path, monkeypatch):
+    """Broadcast-safety: restore never writes, so any process index may
+    call it against a committed checkpoint and see identical state."""
+    from repro.checkpoint import manager as mgr_mod
+
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    state = _state(4)
+    mgr.save(4, state)
+    monkeypatch.setattr(mgr_mod.jax, "process_index", lambda: 3)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    step, restored, _ = mgr.restore(like)
+    assert step == 4
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(state["params"]["w"])
+    )
