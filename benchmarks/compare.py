@@ -38,7 +38,18 @@ _UNIT_MS = {"ms": 1.0, "us": 1e-3, "ns": 1e-6}
 # measured outputs (as opposed to configuration): they drift with the code
 # under test, so keying row identity on them would silently unmatch rows
 # and let regressions slip past the gate
-_MEASURED_FIELDS = {"live_buckets", "speedup", "loop_measured_K", "hist_calls_per_trace"}
+_MEASURED_FIELDS = {
+    "live_buckets",
+    "speedup",
+    "loop_measured_K",
+    "hist_calls_per_trace",
+    # the auto heuristic's pick and the pipeline's dispatch count are
+    # outputs of the code under test (they move when the heuristic or the
+    # fusion does), so rows must keep matching across such changes while
+    # the gate still compares their timings
+    "picked_method",
+    "dispatches_per_ingest",
+}
 
 
 def _timing_unit(key: str) -> float | None:

@@ -94,6 +94,13 @@ def main() -> None:
             "insert_methods": lambda: bank_bench.bench_insert_methods(
                 configs=((1_000_000, 128, 4096), (100_000, 64, 2048)), iters=3
             ),
+            # full-ingest fusion acceptance row (histograms + aux stats in
+            # one dispatch): the flagship N=1M / K=128 config stays in the
+            # smoke tier so CI tracks the fused-vs-sort speedup and the
+            # modeled bytes-moved roofline position per PR
+            "fused_ingest": lambda: bank_bench.bench_fused_ingest(
+                configs=((1_000_000, 128, 4096), (100_000, 64, 2048)), iters=3
+            ),
             "fold_pairs": lambda: bank_bench.bench_fold_pairs(
                 ks=(1, 64, 256), iters=3
             ),
@@ -142,6 +149,9 @@ def main() -> None:
             "insert_methods": lambda: bank_bench.bench_insert_methods(
                 configs=((1_000_000, 128, 4096), (200_000, 64, 2048)), iters=5
             ),
+            "fused_ingest": lambda: bank_bench.bench_fused_ingest(
+                configs=((1_000_000, 128, 4096), (200_000, 64, 2048)), iters=5
+            ),
             "fold_pairs": lambda: bank_bench.bench_fold_pairs(iters=5),
             "collapse_insert": lambda: bank_bench.bench_collapse_insert(
                 n=100_000, iters=5
@@ -174,6 +184,15 @@ def main() -> None:
             "bank_insert": bank_bench.bench_bank_insert,
             "bank_quantiles": bank_bench.bench_bank_quantiles,
             "insert_methods": lambda: bank_bench.bench_insert_methods(
+                configs=(
+                    (1_000_000, 128, 4096),
+                    (1_000_000, 512, 2048),
+                    (500_000, 64, 2048),
+                    (100_000, 8, 2048),
+                ),
+                iters=5,
+            ),
+            "fused_ingest": lambda: bank_bench.bench_fused_ingest(
                 configs=(
                     (1_000_000, 128, 4096),
                     (1_000_000, 512, 2048),

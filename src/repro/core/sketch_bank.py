@@ -52,6 +52,7 @@ __all__ = [
     "empty",
     "add",
     "add_impl",
+    "picked_insert_method",
     "quantiles_impl",
     "merge",
     "allreduce",
@@ -129,6 +130,36 @@ def empty(spec: BucketSpec, num_sketches: int, counts_dtype=jnp.float32) -> Sket
     )
 
 
+def _dense_stats_applies(n: int, k: int) -> bool:
+    return 0 < k <= _DENSE_STATS_MAX_ROWS and k * n <= _DENSE_STATS_MAX_ELEMENTS
+
+
+def picked_insert_method(
+    n: int,
+    k: int,
+    num_buckets: int,
+    *,
+    unit_weights: bool = True,
+    use_kernel: bool = False,
+) -> str:
+    """The pipeline ``add_impl(..., method=None)`` resolves to.
+
+    ``kernels.ops.insert_method`` plus this module's one adjustment: on the
+    ref tier a small bank (the dense (K, N) stats regime) keeps the
+    two-pass sort path, since the dense masked reductions beat the fused
+    segment stats there.  Benches record this so every timing row names the
+    pipeline the auto heuristic actually ran.
+    """
+    from repro.kernels import ops
+
+    method = ops.insert_method(
+        n, k, num_buckets, unit_weights=unit_weights, full_ingest=True
+    )
+    if method == "fused" and _dense_stats_applies(n, k) and not use_kernel:
+        method = "sort"
+    return method
+
+
 def add_impl(
     bank: SketchBank,
     values: jnp.ndarray,
@@ -156,11 +187,17 @@ def add_impl(
     ``method`` pins the insert pipeline: ``"matmul"`` runs the segmented
     one-hot histogram per sign, ``"sort"`` compacts a combined composite-key
     stream (sort–reduce) and scatters U <= min(N, 2·K·m) unique triples —
-    the input-stationary path whose cost stops growing with the bank size.
-    ``None`` auto-selects from (N, K, m); both pipelines produce identical
-    counts — bit-for-bit except fractional float weights on the Pallas sort
-    path, where duplicate-key accumulation order differs (see
-    ``kernels.ops.bank_histograms``).
+    the input-stationary path whose cost stops growing with the bank size —
+    and ``"fused"`` produces the histograms *and* the six aux stats in one
+    dispatch (``kernels.ops.fused_ingest``), skipping this function's
+    second pass over the lanes entirely.  ``None`` auto-selects from
+    (N, K, m) with the fused path on the menu (``picked_insert_method``);
+    all pipelines produce identical counts — bit-for-bit except fractional
+    float weights on the Pallas sort path (duplicate-key accumulation order
+    differs) and the float ``summ``, whose lane-accumulation order varies
+    across stats formulations (dense small-K masked matmul vs segment sum
+    vs the fused kernel's tile-order pass) at ulp level; see
+    ``kernels.ops.bank_histograms`` / ``fused_ingest``.
     """
     k = bank.num_sketches
     x = values.reshape(-1).astype(jnp.float32)
@@ -175,10 +212,7 @@ def add_impl(
     is_neg = valid & (x < -spec.min_indexable)
     is_zero = valid & ~is_pos & ~is_neg
 
-    dense_stats = (
-        0 < k <= _DENSE_STATS_MAX_ROWS
-        and k * x.size <= _DENSE_STATS_MAX_ELEMENTS
-    )
+    dense_stats = _dense_stats_applies(x.size, k)
     sel = (
         (sc[None, :] == jnp.arange(k, dtype=jnp.int32)[:, None])
         if dense_stats
@@ -199,6 +233,36 @@ def add_impl(
     shifts = bank.level[sc]  # per-value levels for the segmented kernels
 
     from repro.kernels import ops
+
+    if method is None:
+        method = picked_insert_method(
+            x.size, k, spec.num_buckets,
+            unit_weights=raw_w is None, use_kernel=use_kernel,
+        )
+
+    if method == "fused":
+        # one dispatch: histograms + aux stats; no second pass below
+        pos_hist, neg_hist, st = ops.fused_ingest(
+            x,
+            s,
+            raw_w,
+            shifts,
+            num_segments=k,
+            spec=spec,
+            force=None if use_kernel else "ref",
+        )
+        cd = bank.pos.dtype
+        return SketchBank(
+            pos=bank.pos + pos_hist.astype(cd),
+            neg=bank.neg + neg_hist.astype(cd),
+            zero=bank.zero + st.zero.astype(cd),
+            overflow=bank.overflow + st.overflow.astype(cd),
+            underflow=bank.underflow + st.underflow.astype(cd),
+            summ=bank.summ + st.summ,
+            vmin=jnp.minimum(bank.vmin, st.vmin),
+            vmax=jnp.maximum(bank.vmax, st.vmax),
+            level=bank.level,
+        )
 
     pos_hist, neg_hist = ops.bank_histograms(
         x,

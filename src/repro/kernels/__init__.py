@@ -7,6 +7,8 @@ UDDSketch uniform-collapse fold, TPU-native:
 * ``ddsketch_seg_hist`` — segmented insert for a bank of K sketches,
 * ``ddsketch_scatter``  — input-stationary scatter over compacted triples
   (the back end of the sort–reduce–scatter ingest pipeline),
+* ``ddsketch_ingest``   — fused single-dispatch full ingest: bucketize +
+  bin + the six per-row aux stats in one program,
 * ``bank_quantiles``    — fused cumsum + searchsorted bank query,
 * ``fold_pairs``        — uniform-collapse resolution fold (gamma -> gamma^2),
 * ``ref``               — pure-jnp semantic oracles / XLA fallback,
@@ -16,12 +18,16 @@ UDDSketch uniform-collapse fold, TPU-native:
 
 from repro.kernels.ops import (  # noqa: F401
     BucketSpec,
+    IngestStats,
     bank_histograms,
     bank_quantiles,
     ddsketch_histogram,
     ddsketch_scatter,
+    dispatch_stats,
     fold_pairs,
+    fused_ingest,
     insert_method,
+    reset_dispatch_stats,
     segment_histogram,
 )
 from repro.kernels.ref import (  # noqa: F401

@@ -21,30 +21,39 @@ shapes, dtypes, mappings and tile configurations asserting exact agreement.
 
 ``bank_histograms`` is the bank-insert front door: it routes a batch of
 ``(value, segment)`` pairs to the matmul-histogram formulation (work
-O(K·m·N): every output tile streams the whole batch) or to the
+O(K·m·N): every output tile streams the whole batch), to the
 sort–reduce–scatter pipeline (O(N log N) sort + compaction to
-U <= min(N, 2·K·m) triples) based on the ``(N, K, m)`` arithmetic-intensity
-ratio; ``method=`` pins a pipeline the same way ``force=`` pins a backend.
+U <= min(N, 2·K·m) triples), or to the fused single-dispatch ingest
+(``fused_ingest``: bucketize + bin + aux stats in one program) based on the
+``(N, K, m)`` arithmetic-intensity ratio; ``method=`` pins a pipeline the
+same way ``force=`` pins a backend, and the ``REPRO_INSERT_METHOD``
+environment variable overrides the auto heuristic process-wide (benchmark
+attribution / emergency pinning).
 """
 
 from __future__ import annotations
 
 import math
+import os
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.bank_quantiles import bank_quantiles_pallas
 from repro.kernels.ddsketch_hist import histogram_pallas
+from repro.kernels.ddsketch_ingest import ddsketch_ingest_pallas
 from repro.kernels.ddsketch_scatter import MAX_RESIDENT_ROWS, ddsketch_scatter_pallas
 from repro.kernels.ddsketch_seg_hist import segment_histogram_pallas
 from repro.kernels.fold_pairs import fold_pairs_pallas
 from repro.kernels.ref import (
     BucketSpec,
+    IngestStats,
     bank_quantiles_ref,
     compact_triples,
     composite_keys,
     fold_pairs_ref,
+    fused_ingest_ref,
     histogram_ref,
     scatter_histogram_ref,
     segment_histogram_ref,
@@ -56,13 +65,55 @@ __all__ = [
     "fold_pairs",
     "ddsketch_scatter",
     "bank_histograms",
+    "fused_ingest",
     "bank_quantiles",
     "insert_method",
+    "dispatch_stats",
+    "reset_dispatch_stats",
     "BucketSpec",
+    "IngestStats",
 ]
 
 _FORCE_VALUES = (None, "pallas", "interpret", "ref")
-_METHOD_VALUES = (None, "matmul", "sort")
+_METHOD_VALUES = (None, "matmul", "sort", "fused")
+_METHOD_ENV = "REPRO_INSERT_METHOD"
+
+# fallback observability (satellite of PR 7): auto dispatch decisions that
+# silently changed paths used to be invisible — now each tall-bank
+# ref-fallback warns once per call site and counts here.  Counts are per
+# *trace* (the decision is made on static shapes at trace time), so an AOT
+# executable that falls back registers once, not once per call.
+_DISPATCH_STATS: dict[str, dict[str, int]] = {"tall_bank_fallbacks": {}}
+_TALL_BANK_WARNED: set[str] = set()
+
+
+def dispatch_stats() -> dict:
+    """Snapshot of auto-dispatch fallback counters (copies, safe to keep)."""
+    return {k: dict(v) for k, v in _DISPATCH_STATS.items()}
+
+
+def reset_dispatch_stats() -> None:
+    """Clear fallback counters AND the warn-once latches (tests/benches)."""
+    for v in _DISPATCH_STATS.values():
+        v.clear()
+    _TALL_BANK_WARNED.clear()
+
+
+def _note_tall_bank_fallback(site: str, num_rows: int) -> None:
+    counts = _DISPATCH_STATS["tall_bank_fallbacks"]
+    counts[site] = counts.get(site, 0) + 1
+    if site not in _TALL_BANK_WARNED:
+        _TALL_BANK_WARNED.add(site)
+        warnings.warn(
+            f"{site}: bank row axis ({num_rows} rows) exceeds "
+            f"MAX_RESIDENT_ROWS={MAX_RESIDENT_ROWS}; auto dispatch is "
+            "falling back to the XLA reference path (correct but off the "
+            "resident-row kernel).  Shard the bank, shrink it, or pin "
+            'method="matmul" to silence this.  Recorded in '
+            "ops.dispatch_stats(); warning once per site.",
+            RuntimeWarning,
+            stacklevel=3,
+        )
 
 
 def _on_tpu() -> bool:
@@ -102,24 +153,46 @@ def insert_method(
     num_buckets: int,
     unit_weights: bool = True,
     on_tpu: bool | None = None,
+    full_ingest: bool = False,
 ) -> str:
-    """Pick ``"matmul"`` or ``"sort"`` for a bank insert from (N, K, m).
+    """Pick ``"matmul"``, ``"sort"`` or ``"fused"`` for a bank insert.
+
+    ``full_ingest=True`` means the caller wants histogram *and* aux stats
+    (``sketch_bank.add_impl``), so the fused single-dispatch path is on the
+    menu; histogram-only callers (``full_ingest=False``) never auto-pick
+    ``"fused"`` — its fused stats would be pure overhead there (pinning
+    ``method="fused"`` still works and simply drops the stats).
+
+    The ``REPRO_INSERT_METHOD`` environment variable overrides the
+    heuristic process-wide (any of ``matmul | sort | fused``) — the
+    benchmark-attribution / emergency-pinning knob; invalid values raise.
 
     On TPU the matmul-histogram kernel streams all N lanes through every
     ``(row_tile, bucket_tile)`` output tile — work grows with
-    ``ceil(2K/TR) * ceil(m/TB)`` — while the sort pipeline pays N·log2(N)
-    once and then streams only U <= 2·K·m compacted triples, so sort wins
-    when the output-tile count outgrows log2(N).  Banks taller than the
-    scatter kernel's resident-row ceiling stay on matmul.
+    ``ceil(2K/TR) * ceil(m/TB)``; the sort pipeline pays N·log2(N) once and
+    then streams only U <= 2·K·m compacted triples; the fused kernel keeps
+    all 2K rows resident so its streamed work is ``ceil(m/TB) * N`` with no
+    sort stage and no second stats pass.  Hence for full ingests with the
+    rows resident, fused wins unless the bucket-tile count outgrows the
+    sort factor (huge m, small N); histogram-only keeps the PR-3 sort vs
+    matmul rule; banks taller than the resident-row ceiling stay on matmul.
 
-    On the XLA reference tier the pipeline's sort + reduce fold into the
-    reducing scatter-add, so it costs one key pass + one scatter where the
-    matmul path costs two of each — a ~2x win for any batch big enough to
-    amortize the extra dispatch plumbing (crossover measured on CPU in
-    ``benchmarks/bank_bench.bench_insert_methods``; ``unit_weights`` does
-    not change the ref-tier cost and is kept for the TPU heuristic, where
-    weighted streams must payload-sort).
+    On the XLA reference tier the sort pipeline folds into one key pass +
+    one reducing scatter; the fused path adds the stacked stats reductions
+    to that same single lane pass, so for full ingests it subsumes the
+    separate ``add_impl`` stats pass (measured ~1.5x over sort at N=1M,
+    K=128 on CPU — ``benchmarks/bank_bench.bench_fused_ingest``).  The
+    N >= 2^14 crossover vs matmul is shared: below it the batch cannot
+    amortize the scatter plumbing.  ``unit_weights`` only matters for the
+    TPU sort heuristic, where weighted streams must payload-sort.
     """
+    env = os.environ.get(_METHOD_ENV)
+    if env:
+        if env not in _METHOD_VALUES[1:]:
+            raise ValueError(
+                f"{_METHOD_ENV}={env!r}: must be one of {_METHOD_VALUES[1:]}"
+            )
+        return env
     if on_tpu is None:
         on_tpu = _on_tpu()
     if n == 0:
@@ -128,12 +201,17 @@ def insert_method(
     if on_tpu:
         if 2 * num_segments > MAX_RESIDENT_ROWS:
             return "matmul"
-        out_tiles = math.ceil(2 * num_segments / 8) * math.ceil(num_buckets / 512)
         # weighted streams payload-sort (keys + weights move together),
         # roughly doubling the sort stage the pipeline must amortize
         sort_cost = (4.0 if unit_weights else 8.0) * logn
+        if full_ingest:
+            bucket_tiles = math.ceil(num_buckets / 512)
+            return "fused" if bucket_tiles <= sort_cost else "sort"
+        out_tiles = math.ceil(2 * num_segments / 8) * math.ceil(num_buckets / 512)
         return "sort" if out_tiles > sort_cost else "matmul"
-    return "sort" if n >= (1 << 14) else "matmul"
+    if n < (1 << 14):
+        return "matmul"
+    return "fused" if full_ingest else "sort"
 
 
 def ddsketch_histogram(
@@ -243,7 +321,10 @@ def ddsketch_scatter(
     _check_force(force)
     impl = _impl(force, keys.size, triple_tile)
     if impl != "ref" and num_rows > MAX_RESIDENT_ROWS and force is None:
-        impl = "ref"  # auto never hands a too-tall bank to the resident kernel
+        # auto never hands a too-tall bank to the resident kernel — but it
+        # no longer changes paths silently (warn once + counted)
+        _note_tall_bank_fallback("ddsketch_scatter", num_rows)
+        impl = "ref"
     if impl == "ref":
         return scatter_histogram_ref(
             keys, weights, num_rows=num_rows, num_buckets=num_buckets
@@ -267,7 +348,7 @@ def bank_histograms(
     *,
     num_segments: int,
     spec: BucketSpec,
-    method: str | None = None,  # "matmul" | "sort" | None(auto)
+    method: str | None = None,  # "matmul" | "sort" | "fused" | None(auto)
     force: str | None = None,  # "pallas" | "interpret" | "ref" | None(auto)
     value_tile: int = 2048,
     row_tile: int = 8,
@@ -289,8 +370,15 @@ def bank_histograms(
     (order-free exact accumulation needs no physical sort), so the ref tier
     pays one key pass + one scatter where matmul pays two of each.
 
-    ``method=None`` auto-selects via ``insert_method``; both pipelines
-    produce identical results.  On the XLA tier the match is bit-for-bit
+    ``method="fused"`` routes through ``fused_ingest`` (one program:
+    bucketize + bin + aux stats) and drops the stats — correct anywhere,
+    but the stats work is wasted on this histogram-only surface, so
+    ``method=None`` never auto-picks it here (``insert_method`` only offers
+    fused to ``full_ingest`` callers like ``sketch_bank.add_impl``, which
+    calls ``fused_ingest`` directly to keep the stats).
+
+    ``method=None`` auto-selects via ``insert_method``; all pipelines
+    produce identical counts.  On the XLA tier the match is bit-for-bit
     for *arbitrary* weights (per output bucket the contributing lanes
     accumulate in the same order as the matmul path); on the Pallas tiers
     the unstable compaction sort reorders duplicate-key accumulation, so
@@ -311,6 +399,18 @@ def bank_histograms(
         method = insert_method(
             n, num_segments, spec.num_buckets, unit_weights=weights is None
         )
+    if method == "fused":
+        pos, neg, _ = fused_ingest(
+            values,
+            segment_ids,
+            weights,
+            levels,
+            num_segments=num_segments,
+            spec=spec,
+            bucket_tile=bucket_tile,
+            force=force,
+        )
+        return pos, neg
     if method == "matmul":
         x = values.reshape(-1).astype(jnp.float32)
         pos_vals = jnp.where(x > spec.min_indexable, x, -1.0)
@@ -328,7 +428,9 @@ def bank_histograms(
         return pos, neg
     impl = _impl(force, n, triple_tile)
     if impl != "ref" and 2 * num_segments > MAX_RESIDENT_ROWS and force is None:
-        impl = "ref"  # bank too tall for the resident-row scatter kernel
+        # bank too tall for the resident-row scatter kernel (warn once)
+        _note_tall_bank_fallback("bank_histograms[sort]", 2 * num_segments)
+        impl = "ref"
     if impl == "ref":
         # XLA twin of the pipeline: scatter-add already reduces by key, so
         # the sort + segment-sum stages are the identity here — one
@@ -364,6 +466,58 @@ def bank_histograms(
             interpret=impl == "interpret",
         )
     return both[:num_segments], both[num_segments:]
+
+
+def fused_ingest(
+    values: jnp.ndarray,
+    segment_ids: jnp.ndarray | None = None,
+    weights: jnp.ndarray | None = None,
+    levels: jnp.ndarray | None = None,
+    *,
+    num_segments: int,
+    spec: BucketSpec,
+    value_tile: int = 1024,
+    bucket_tile: int = 512,
+    force: str | None = None,  # "pallas" | "interpret" | "ref" | None(auto)
+) -> tuple[jnp.ndarray, jnp.ndarray, IngestStats]:
+    """The fused single-dispatch ingest: ``(pos, neg, IngestStats)``.
+
+    One program produces both ``(K, m)`` sign stores AND the six per-row
+    aux stats (zero / overflow / underflow / summ / vmin / vmax) the bank
+    maintains — ``sketch_bank.add_impl`` folds them in directly instead of
+    making a second pass over the lanes.  Semantics contract is
+    ``ref.fused_ingest_ref`` (histograms and the integer-weight counters
+    bit-exact across tiers; the float ``summ`` may differ in final ulps on
+    the Pallas tiers, where it accumulates in tile order).
+
+    Banks whose combined pos/neg row axis exceeds ``MAX_RESIDENT_ROWS``
+    fall back from the resident-row kernel to the reference (warn-once,
+    counted in ``dispatch_stats()``); ``force="pallas"`` on such a bank
+    raises in the kernel instead.
+    """
+    _check_force(force)
+    impl = _impl(force, values.size, value_tile)
+    if impl != "ref" and 2 * num_segments > MAX_RESIDENT_ROWS and force is None:
+        _note_tall_bank_fallback("fused_ingest", 2 * num_segments)
+        impl = "ref"
+    if impl == "ref":
+        both, stats = fused_ingest_ref(
+            values, segment_ids, weights, levels,
+            num_segments=num_segments, spec=spec,
+        )
+    else:
+        both, stats = ddsketch_ingest_pallas(
+            values,
+            segment_ids,
+            weights,
+            levels,
+            num_segments=num_segments,
+            spec=spec,
+            value_tile=value_tile,
+            bucket_tile=bucket_tile,
+            interpret=impl == "interpret",
+        )
+    return both[:num_segments], both[num_segments:], stats
 
 
 def bank_quantiles(

@@ -11,12 +11,14 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 __all__ = [
     "BucketSpec",
+    "IngestStats",
     "MAX_COLLAPSE_LEVEL",
     "bucket_index",
     "histogram_ref",
@@ -28,6 +30,7 @@ __all__ = [
     "composite_keys",
     "compact_triples",
     "scatter_histogram_ref",
+    "fused_ingest_ref",
     "bank_quantiles_ref",
 ]
 
@@ -346,6 +349,130 @@ def scatter_histogram_ref(
     flat = jnp.where(valid, k, total)
     out = jnp.zeros(total + 1, jnp.float32).at[flat].add(jnp.where(valid, w, 0.0))
     return out[:total].reshape(num_rows, num_buckets)
+
+
+# --------------------------------------------------------------------- #
+# fused single-pass ingest: histogram + aux stats in one dispatch
+# --------------------------------------------------------------------- #
+class IngestStats(NamedTuple):
+    """Per-row auxiliary statistics of one ingest batch, each ``(K,)``.
+
+    Exactly the six non-bucket fields ``sketch_bank.add_impl`` maintains:
+    the caller folds them into the bank with ``+`` (counters / sum) and
+    ``minimum`` / ``maximum`` (extrema).  Rows untouched by the batch report
+    0 for the counters and ``+inf`` / ``-inf`` for ``vmin`` / ``vmax`` —
+    the identities of those folds.
+    """
+
+    zero: jnp.ndarray  # weight of |x| <= min_indexable lanes
+    overflow: jnp.ndarray  # weight of lanes whose shifted key clamps high
+    underflow: jnp.ndarray  # weight of lanes whose shifted key clamps low
+    summ: jnp.ndarray  # sum of w * x over valid lanes
+    vmin: jnp.ndarray  # min x over contributing (w > 0) lanes
+    vmax: jnp.ndarray  # max x over contributing (w > 0) lanes
+
+
+@partial(jax.jit, static_argnames=("num_segments", "spec"))
+def fused_ingest_ref(
+    values: jnp.ndarray,
+    segment_ids: jnp.ndarray | None = None,
+    weights: jnp.ndarray | None = None,
+    levels: jnp.ndarray | None = None,
+    *,
+    num_segments: int,
+    spec: BucketSpec,
+) -> tuple[jnp.ndarray, IngestStats]:
+    """Oracle for the fused ingest: ``(hist (2K, m), IngestStats)`` in one pass.
+
+    The histogram half is bit-identical to the sort pipeline's XLA twin
+    (``composite_keys`` + ``scatter_histogram_ref``): positives land in rows
+    ``[0, K)``, negatives (keyed on ``|x|``) in rows ``[K, 2K)``.  The stats
+    half reuses the *same* elementwise key pass for the clamp accounting —
+    overflow / underflow are lanes whose shifted key escapes
+    ``[offset, offset + m - 1]`` — instead of a second bucketization, and
+    batches the six per-row reductions into one stacked ``segment_sum``
+    (zero / overflow / underflow / summ) plus one stacked ``segment_min``
+    (``vmin`` and ``vmax = -min(-x)``), so the whole ingest is one read of
+    the lanes where the sort path plus ``add_impl``'s stats pass reads them
+    ~5x (see ``launch.roofline.ingest_bytes_model``).
+
+    Counters are exact (sums of ``w * {0, 1}``); ``summ`` accumulates in
+    lane order like ``jax.ops.segment_sum``, matching ``add_impl``'s
+    segment-stats path bit-for-bit.
+    """
+    m = spec.num_buckets
+    k = num_segments
+    x = values.reshape(-1).astype(jnp.float32)
+    if segment_ids is None:
+        s = jnp.zeros(x.shape, jnp.int32)
+    else:
+        s = segment_ids.reshape(-1).astype(jnp.int32)
+    w = (
+        jnp.ones_like(x)
+        if weights is None
+        else weights.reshape(-1).astype(jnp.float32)
+    )
+    lev = (
+        jnp.zeros(x.shape, jnp.int32)
+        if levels is None
+        else levels.reshape(-1).astype(jnp.int32)
+    )
+    valid = jnp.isfinite(x) & (s >= 0) & (s < k)
+    w = jnp.where(valid, w, 0.0)
+    sc = jnp.clip(s, 0, max(k - 1, 0))
+    is_pos = valid & (x > spec.min_indexable)
+    is_neg = valid & (x < -spec.min_indexable)
+    is_zero = valid & ~is_pos & ~is_neg
+
+    # one elementwise key pass feeds the histogram AND the clamp accounting
+    mag = jnp.where(is_pos | is_neg, jnp.abs(x), 1.0)
+    key = jnp.ceil(approx_log2(mag, spec.mapping) * jnp.float32(spec.multiplier))
+    k_lev = shift_key(key.astype(jnp.int32), lev)
+    idx = jnp.clip(k_lev - spec.offset, 0, m - 1)
+    top_key = spec.offset + m - 1
+    over = (is_pos | is_neg) & (k_lev > top_key)
+    under = (is_pos | is_neg) & (k_lev < spec.offset)
+
+    sentinel = 2 * k * m
+    flat = jnp.where(
+        is_pos | is_neg, sc * m + idx + jnp.where(is_neg, k * m, 0), sentinel
+    )
+    hist = (
+        jnp.zeros(sentinel + 1, jnp.float32)
+        .at[flat]
+        .add(jnp.where(is_pos | is_neg, w, 0.0))[:sentinel]
+        .reshape(2 * k, m)
+    )
+
+    # stacked reductions: one segment_sum over 4 columns, one segment_min
+    # over (x, -x) — six per-row stats for two passes over the lanes
+    wx = w * jnp.where(valid, x, 0.0)
+    sums = jax.ops.segment_sum(
+        jnp.stack([w * is_zero, w * over, w * under, wx], axis=1),
+        sc,
+        num_segments=k,
+    )
+    contributes = valid & (w > 0)
+    ext = jax.ops.segment_min(
+        jnp.stack(
+            [
+                jnp.where(contributes, x, jnp.inf),
+                jnp.where(contributes, -x, jnp.inf),
+            ],
+            axis=1,
+        ),
+        sc,
+        num_segments=k,
+    )
+    stats = IngestStats(
+        zero=sums[:, 0],
+        overflow=sums[:, 1],
+        underflow=sums[:, 2],
+        summ=sums[:, 3],
+        vmin=ext[:, 0],
+        vmax=-ext[:, 1],
+    )
+    return hist, stats
 
 
 # --------------------------------------------------------------------- #
