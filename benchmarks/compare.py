@@ -49,6 +49,13 @@ _MEASURED_FIELDS = {
     # the gate still compares their timings
     "picked_method",
     "dispatches_per_ingest",
+    # ingest_http robustness counters: outputs under test (throttles, shed
+    # mass, and the conservation flag move with load behaviour, not config)
+    "http_429",
+    "http_5xx",
+    "shed_mass",
+    "max_queue_depth",
+    "conserved",
 }
 
 

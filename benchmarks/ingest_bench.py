@@ -1,0 +1,199 @@
+"""Write-path benchmark: HTTP ingest through the coalescing gateway.
+
+Two scenarios per run:
+
+* ``sweep`` — N concurrent well-behaved clients (retries on) push batches
+  through ``POST /ingest``; we report requests/s, request-latency p50/p99,
+  and the p99 *ingest-to-queryable* latency (submit -> merged into the
+  device bank, measured inside the gateway with its own DDSketch — the
+  paper's sketch instruments the system that serves it).
+
+* ``overload`` — sustained ~2x the drain capacity against a deliberately
+  tiny queue, clients with retries off.  The acceptance row for the
+  robustness story: zero 5xx, bounded queue depth (``max_queue_depth`` <=
+  the configured cap), clean 429 + Retry-After for everything shed at
+  admission, and ``conserved`` — every accepted value is queryable, mass
+  exact.
+
+The conservation flag and the failure counters ride in every row so the
+CI compare gate (see ``compare.py``) trips if a future change starts
+dropping accepted data or converting overload into 5xx.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core.jax_sketch import BucketSpec
+from repro.launch.http_api import QuantileHTTPServer, TelemetryFacade
+from repro.launch.ingest_client import IngestClient, IngestError
+from repro.launch.ingest_gateway import IngestGateway
+from repro.telemetry.keyed import KeyedWindow
+
+
+def _warm(gw, srv, payload, max_log2=17):
+    """Compile the pow-2 executable ladder before timing: coalesced tick
+    sizes vary with thread scheduling, and a first-encounter batch shape
+    costs a jit compile that would otherwise land in the p99."""
+    IngestClient(srv.url).ingest("/warm", payload)
+    gw.flush()
+    for log2 in range(8, max_log2):
+        gw.submit("/warm", np.ones(1 << log2, np.float32))
+        gw.flush()
+    gw.reset_latency()  # compile-time outliers out of the p99
+
+
+def _run_clients(n_clients, fn):
+    """Start-together thread harness; returns per-thread exceptions."""
+    barrier = threading.Barrier(n_clients)
+    errors = []
+
+    def wrapped(i):
+        barrier.wait()
+        try:
+            fn(i)
+        except BaseException as e:  # pragma: no cover - surfaced in the row
+            errors.append(e)
+
+    ts = [threading.Thread(target=wrapped, args=(i,)) for i in range(n_clients)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    return errors
+
+
+def bench_ingest_http(
+    clients=(1, 4, 16),
+    reqs_per_client: int = 16,
+    values_per_req: int = 256,
+    overload_queue: int = 1024,
+    overload_reqs: int = 12,
+) -> list[dict]:
+    rng = np.random.default_rng(0)
+    payload = (rng.pareto(1.0, values_per_req) + 1.0).tolist()
+    rows = []
+
+    # ----------------------------------------------------------------- #
+    # sweep: throughput + latency vs client count
+    # ----------------------------------------------------------------- #
+    for n_clients in clients:
+        window = KeyedWindow(BucketSpec(), capacity=8)
+        gw = IngestGateway(
+            window, max_queue_values=1 << 20, tick_interval_s=0.005
+        )
+        with QuantileHTTPServer(TelemetryFacade(window, None), gateway=gw) as srv:
+            _warm(gw, srv, payload)
+            warm_mass = window.total_mass()
+
+            lat_ms = [[] for _ in range(n_clients)]
+            depth_hwm = [0]
+
+            def worker(i):
+                client = IngestClient(srv.url, max_retries=4, base_backoff_s=0.01)
+                for r in range(reqs_per_client):
+                    t0 = time.perf_counter()
+                    client.ingest(f"/ep{i % 4}", payload)
+                    lat_ms[i].append((time.perf_counter() - t0) * 1e3)
+                    depth_hwm[0] = max(depth_hwm[0], gw.depth())
+
+            t0 = time.perf_counter()
+            errors = _run_clients(n_clients, worker)
+            wall = time.perf_counter() - t0
+            gw.flush()
+            st = gw.stats()
+            total_reqs = n_clients * reqs_per_client
+            accepted_mass = total_reqs * values_per_req
+            flat = np.concatenate([np.asarray(x) for x in lat_ms if x])
+            rows.append(
+                {
+                    "bench": "ingest_http",
+                    "scenario": "sweep",
+                    "clients": n_clients,
+                    "reqs": total_reqs,
+                    "values_per_req": values_per_req,
+                    "req_per_s": round(total_reqs / wall, 1),
+                    "p50_req_ms": round(float(np.percentile(flat, 50)), 3),
+                    "p99_req_ms": round(float(np.percentile(flat, 99)), 3),
+                    "p99_queryable_ms": round(
+                        gw.latency_quantiles([0.99])[0] * 1e3, 3
+                    ),
+                    "http_429": srv.stats.get("ingest_429"),
+                    "http_5xx": srv.stats.get("ingest_unavailable") + len(errors),
+                    "shed_mass": int(st["shed_mass"]),
+                    "max_queue_depth": depth_hwm[0],
+                    "conserved": bool(
+                        window.total_mass() - warm_mass == float(accepted_mass)
+                    ),
+                }
+            )
+            gw.stop()
+
+    # ----------------------------------------------------------------- #
+    # overload: ~2x capacity into a tiny queue, retries off
+    # ----------------------------------------------------------------- #
+    n_clients = max(clients)
+    window = KeyedWindow(BucketSpec(), capacity=8)
+    gw = IngestGateway(
+        window, max_queue_values=overload_queue, tick_interval_s=0.005
+    )
+    with QuantileHTTPServer(TelemetryFacade(window, None), gateway=gw) as srv:
+        _warm(gw, srv, payload, max_log2=11)  # overload queue is tiny anyway
+        warm_mass = window.total_mass()
+
+        outcome = {"accepted": 0, "throttled": 0, "other": 0}
+        lock = threading.Lock()
+        depth_hwm = [0]
+
+        def hammer(i):
+            client = IngestClient(srv.url, max_retries=0)
+            for _ in range(overload_reqs):
+                try:
+                    client.ingest("/hot", payload)
+                    with lock:
+                        outcome["accepted"] += 1
+                except IngestError as e:
+                    code = getattr(e.cause, "code", None)
+                    with lock:
+                        outcome["throttled" if code == 429 else "other"] += 1
+                with lock:
+                    depth_hwm[0] = max(depth_hwm[0], gw.depth())
+
+        t0 = time.perf_counter()
+        errors = _run_clients(n_clients, hammer)
+        wall = time.perf_counter() - t0
+        gw.flush()
+        st = gw.stats()
+        rows.append(
+            {
+                "bench": "ingest_http",
+                "scenario": "overload",
+                "clients": n_clients,
+                "reqs": n_clients * overload_reqs,
+                "values_per_req": values_per_req,
+                "req_per_s": round(n_clients * overload_reqs / wall, 1),
+                "p50_req_ms": float("nan"),
+                "p99_req_ms": float("nan"),
+                "p99_queryable_ms": round(
+                    gw.latency_quantiles([0.99])[0] * 1e3, 3
+                ),
+                "http_429": srv.stats.get("ingest_429"),
+                # "other" covers conn errors AND any 5xx: must stay 0
+                "http_5xx": outcome["other"]
+                + len(errors)
+                + srv.stats.get("ingest_unavailable"),
+                "shed_mass": int(st["shed_mass"]),
+                "max_queue_depth": depth_hwm[0],
+                # accepted mass (and only accepted mass) became queryable
+                "conserved": bool(
+                    window.total_mass() - warm_mass
+                    == float(outcome["accepted"] * values_per_req)
+                    and depth_hwm[0] <= overload_queue
+                ),
+            }
+        )
+        gw.stop()
+    return rows

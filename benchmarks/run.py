@@ -21,7 +21,13 @@ import json
 import os
 import sys
 
-from benchmarks import bank_bench, kernels_bench, sketches, telemetry_bench
+from benchmarks import (
+    bank_bench,
+    ingest_bench,
+    kernels_bench,
+    sketches,
+    telemetry_bench,
+)
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 
@@ -127,6 +133,12 @@ def main() -> None:
             "telemetry_record": lambda: telemetry_bench.bench_telemetry_record(
                 iters=5
             ),
+            # write-path acceptance: HTTP ingest throughput/latency plus the
+            # sustained-overload row (zero 5xx, bounded queue, clean 429s,
+            # mass conservation) tracked in BENCH_baseline.json
+            "ingest_http": lambda: ingest_bench.bench_ingest_http(
+                clients=(1, 8), reqs_per_client=8, overload_reqs=8
+            ),
             "roofline": roofline_rows,
         }
     elif args.quick:
@@ -167,6 +179,9 @@ def main() -> None:
             ),
             "telemetry_record": lambda: telemetry_bench.bench_telemetry_record(
                 iters=10
+            ),
+            "ingest_http": lambda: ingest_bench.bench_ingest_http(
+                clients=(1, 4, 16), reqs_per_client=16
             ),
             "roofline": roofline_rows,
         }
@@ -214,6 +229,9 @@ def main() -> None:
             ),
             "telemetry_record": lambda: telemetry_bench.bench_telemetry_record(
                 seq=2048, iters=10
+            ),
+            "ingest_http": lambda: ingest_bench.bench_ingest_http(
+                clients=(1, 4, 16, 32), reqs_per_client=32, overload_reqs=16
             ),
             "roofline": roofline_rows,
         }

@@ -38,11 +38,23 @@ import os
 import shutil
 import threading
 import time
+import zlib
 
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CheckpointCorruptError"]
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A committed checkpoint failed integrity verification on restore.
+
+    Raised (naming the offending leaf) when a leaf's stored bytes don't
+    match the CRC32 the manifest recorded at save time, or when the array
+    file is truncated/unreadable — instead of silently deserializing
+    garbage into model state.  Bit rot, torn writes surviving a crash, and
+    partial copies between filesystems all land here.
+    """
 
 
 def _is_writer() -> bool:
@@ -150,6 +162,7 @@ class CheckpointManager:
         flat, _ = _flatten_with_paths(host_state)
         arrays = {}
         dtypes = []
+        crcs = []
         for i, (_, v) in enumerate(flat):
             a = np.asarray(v)
             dtypes.append(str(a.dtype))
@@ -158,12 +171,16 @@ class CheckpointManager:
                 # npz: store raw bits, restore via .view(dtype)
                 a = a.view(np.uint8 if a.dtype.itemsize == 1 else np.uint16)
             arrays[f"leaf_{i}"] = a
+            # integrity record: CRC32 of the stored (post-view) payload,
+            # verified leaf-by-leaf on restore
+            crcs.append(zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF)
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
         manifest = {
             "step": step,
             "time": time.time(),
             "paths": [p for p, _ in flat],
             "dtypes": dtypes,
+            "crc32": crcs,
             "aux": aux,
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -219,13 +236,33 @@ class CheckpointManager:
         d = self._step_dir(step)
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
-        data = np.load(os.path.join(d, "arrays.npz"))
+        try:
+            data = np.load(os.path.join(d, "arrays.npz"))
+        except Exception as e:  # truncated/unreadable zip container
+            raise CheckpointCorruptError(
+                f"checkpoint step {step}: arrays.npz unreadable ({e!r})"
+            ) from e
         import ml_dtypes  # noqa: F401  (registers bfloat16/fp8 numpy dtypes)
 
         dtypes = manifest.get("dtypes") or [None] * len(manifest["paths"])
+        crcs = manifest.get("crc32")  # pre-integrity checkpoints: no check
         leaves = []
         for i, dt in enumerate(dtypes):
-            a = data[f"leaf_{i}"]
+            path = manifest["paths"][i]
+            try:
+                a = data[f"leaf_{i}"]
+            except Exception as e:  # missing member / bad zip CRC / short read
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step}: leaf {path!r} unreadable ({e!r})"
+                ) from e
+            if crcs is not None:
+                got = zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF
+                if got != crcs[i]:
+                    raise CheckpointCorruptError(
+                        f"checkpoint step {step}: leaf {path!r} CRC32 mismatch "
+                        f"(stored {crcs[i]:#010x}, read {got:#010x}) — refusing "
+                        "to deserialize corrupt state"
+                    )
             if dt is not None and str(a.dtype) != dt:
                 a = a.view(np.dtype(dt))
             leaves.append(a)

@@ -129,6 +129,15 @@ class SketchEngine:
         self._cache: dict[tuple, Any] = {}
         self._hits = 0
         self._misses = 0
+        # host-side hooks fired at the top of every state-mutating tick
+        # (`ingest`): the gateway's drain loop and the chaos harness use
+        # them to observe/perturb ticks (e.g. injected slow-engine sleeps)
+        # without wrapping the call path; empty list = zero overhead
+        self.tick_hooks: list[Callable[[str], None]] = []
+
+    def _fire_tick_hooks(self, path: str) -> None:
+        for hook in self.tick_hooks:
+            hook(path)
 
     # ------------------------------------------------------------------ #
     # executable cache
@@ -311,6 +320,8 @@ class SketchEngine:
         multi-host contract when each process feeds only its local lanes
         (see ``ShardedEngine.route``); single-device engines ignore it.
         """
+        if self.tick_hooks:
+            self._fire_tick_hooks("ingest")
         v = np.asarray(values, np.float32).reshape(-1)
         s = np.asarray(sketch_ids, np.int32).reshape(-1)
         if v.shape != s.shape:

@@ -49,6 +49,8 @@ _ENV_COORDINATOR = "REPRO_COORDINATOR"
 _ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
 _ENV_PROCESS_ID = "REPRO_PROCESS_ID"
 _ENV_LOCAL_DEVICES = "REPRO_LOCAL_DEVICES"
+_ENV_PREFLIGHT_TIMEOUT = "REPRO_PREFLIGHT_TIMEOUT"
+_ENV_PREFLIGHT_RETRIES = "REPRO_PREFLIGHT_RETRIES"
 
 _initialized = False
 
@@ -58,26 +60,54 @@ def _env_int(name: str) -> int | None:
     return None if raw in (None, "") else int(raw)
 
 
-def _tcp_preflight(coordinator: str, deadline_s: float) -> None:
+def _env_float(name: str) -> float | None:
+    raw = os.environ.get(name)
+    return None if raw in (None, "") else float(raw)
+
+
+def _tcp_preflight(
+    coordinator: str,
+    deadline_s: float,
+    *,
+    retries: int | None = None,
+    attempt_timeout_s: float = 1.0,
+    backoff_s: float = 0.25,
+) -> None:
     """Wait (bounded) for the coordinator's TCP port to accept connections.
 
     ``jax.distributed``'s own client turns an unreachable coordinator into
     a *fatal process abort* (C++ ``LOG(FATAL)`` on RegisterTask deadline) —
     uncatchable from Python.  Probing the socket first converts "nothing is
     listening" into an ordinary ``ConnectionError`` callers can handle (the
-    CI harness maps it to a clean skip)."""
+    CI harness maps it to a clean skip).
+
+    ``deadline_s`` bounds total wall time; ``retries`` additionally caps
+    connect attempts (None = attempts until the deadline) — slow-booting
+    coordinators get the full budget, a truly dead one gives up after a
+    known attempt count.  Attempts back off with a short growing sleep
+    (``backoff_s`` doubling, capped at 2s) so the probe doesn't hammer a
+    booting host.
+    """
     host, _, port = coordinator.rpartition(":")
     deadline = time.monotonic() + deadline_s
+    attempt = 0
     while True:
         try:
-            with socket.create_connection((host or "localhost", int(port)), 1.0):
+            with socket.create_connection(
+                (host or "localhost", int(port)), attempt_timeout_s
+            ):
                 return
         except OSError as e:
-            if time.monotonic() >= deadline:
+            attempt += 1
+            out_of_budget = time.monotonic() >= deadline or (
+                retries is not None and attempt > retries
+            )
+            if out_of_budget:
                 raise ConnectionError(
-                    f"coordinator {coordinator} unreachable after {deadline_s:.0f}s"
+                    f"coordinator {coordinator} unreachable after "
+                    f"{attempt} attempt(s) / {deadline_s:.0f}s budget"
                 ) from e
-            time.sleep(0.25)
+            time.sleep(min(backoff_s * (2 ** (attempt - 1)), 2.0))
 
 
 def initialize(
@@ -87,6 +117,8 @@ def initialize(
     *,
     local_device_count: int | None = None,
     timeout_s: int | None = None,
+    preflight_timeout_s: float | None = None,
+    preflight_retries: int | None = None,
 ) -> bool:
     """Join (or skip joining) the fleet; returns True iff distributed.
 
@@ -101,6 +133,14 @@ def initialize(
     entry points.  ``timeout_s`` bounds the coordinator handshake — the CI
     harness uses a short timeout so an unreachable coordinator surfaces as
     a clean skip rather than a hung job.
+
+    ``preflight_timeout_s`` / ``preflight_retries`` (env
+    ``REPRO_PREFLIGHT_TIMEOUT`` / ``REPRO_PREFLIGHT_RETRIES``) tune the
+    non-coordinator TCP probe: the timeout is the total wall budget to
+    wait for the coordinator port (default: ``timeout_s``), the retry
+    count caps connect attempts — raise the budget for slow-booting
+    coordinators so they aren't misreported as unreachable, lower the
+    retries for fail-fast chaos/CI lanes.
     """
     global _initialized
     coordinator = coordinator or os.environ.get(_ENV_COORDINATOR) or None
@@ -129,14 +169,24 @@ def initialize(
     except AttributeError:  # pragma: no cover - much older jax
         pass
 
+    if preflight_timeout_s is None:
+        preflight_timeout_s = _env_float(_ENV_PREFLIGHT_TIMEOUT)
+    if preflight_retries is None:
+        preflight_retries = _env_int(_ENV_PREFLIGHT_RETRIES)
+
     kwargs = {}
     if timeout_s is not None:
         kwargs["initialization_timeout"] = int(timeout_s)
-        if process_id is not None and int(process_id) != 0:
-            # process 0 *is* the coordinator (it binds the port); everyone
-            # else probes reachability first so a dead coordinator raises
-            # instead of fatally aborting the process
-            _tcp_preflight(coordinator, float(timeout_s))
+    budget = (
+        preflight_timeout_s
+        if preflight_timeout_s is not None
+        else (None if timeout_s is None else float(timeout_s))
+    )
+    if budget is not None and process_id is not None and int(process_id) != 0:
+        # process 0 *is* the coordinator (it binds the port); everyone
+        # else probes reachability first so a dead coordinator raises
+        # instead of fatally aborting the process
+        _tcp_preflight(coordinator, budget, retries=preflight_retries)
     jax.distributed.initialize(
         coordinator_address=coordinator,
         num_processes=int(num_processes),

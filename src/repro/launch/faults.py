@@ -1,0 +1,159 @@
+"""Deterministic fault injection for the ingest/serving tier.
+
+Production quantile pipelines degrade, they don't crash: a slow engine
+tick, a stalled queue, a peer that vanishes mid-response, a coordinator
+that never comes up — each must map to a *defined* response (429, a shed
+counter, a clean ``ConnectionError``), never a traceback or a hang.  This
+module is the chaos harness that proves it: a ``FaultInjector`` holds a set
+of **armed faults**, each with a value (seconds to sleep, bytes to write,
+...) and an optional charge count, and the gateway / HTTP / distributed
+tiers poll it at their injection points.
+
+Faults are injected *by the code under test at named points*, not by
+monkeypatching, so the chaos suite exercises the same lines production
+runs; with nothing armed every check is one dict lookup.
+
+Supported fault kinds (``FaultInjector.KINDS``):
+
+* ``slow_engine``   — sleep ``value`` seconds inside every engine ingest
+                      tick (installed as a ``SketchEngine.tick_hooks``
+                      entry via :meth:`engine_hook`);
+* ``queue_stall``   — the gateway drain loop sleeps ``value`` seconds
+                      before each drain, so the queue backs up and the
+                      backpressure path (429 + shed accounting) fires;
+* ``drop_conn``     — the HTTP handler hard-closes the socket before
+                      writing any response (client sees a reset);
+* ``half_close``    — the HTTP handler writes the headers plus half the
+                      body, then closes (truncated response);
+* ``dead_coordinator`` — ``launch.distributed`` preflight targets are
+                      unreachable; tests pair this with
+                      :func:`unreachable_address`.
+
+Arming comes from code (``faults.arm("queue_stall", 0.2, times=3)``) or
+the environment (``REPRO_FAULTS="slow_engine=0.05,drop_conn=1x3"`` — a
+comma list of ``kind=value`` with an optional ``xN`` charge count), so CI
+chaos lanes can flip faults on without touching call sites.
+"""
+
+from __future__ import annotations
+
+import os
+import socket
+import threading
+import time
+
+__all__ = ["FaultInjector", "unreachable_address"]
+
+_ENV_FAULTS = "REPRO_FAULTS"
+
+
+class FaultInjector:
+    """Armed-fault registry polled at the tier's injection points.
+
+    Thread-safe: the HTTP handler pool, the gateway drain thread, and the
+    test thread all poll/arm concurrently.  ``take`` consumes one charge
+    (bounded faults disarm themselves); ``fired`` counts consumption so
+    tests can assert a fault actually exercised its path.
+    """
+
+    KINDS = (
+        "slow_engine",
+        "queue_stall",
+        "drop_conn",
+        "half_close",
+        "dead_coordinator",
+    )
+
+    def __init__(self, spec: str | dict | None = None):
+        self._lock = threading.Lock()
+        self._armed: dict[str, tuple[float, int | None]] = {}
+        self._fired: dict[str, int] = {}
+        if isinstance(spec, str):
+            self._parse(spec)
+        elif isinstance(spec, dict):
+            for kind, value in spec.items():
+                self.arm(kind, value)
+
+    @classmethod
+    def from_env(cls, env: str = _ENV_FAULTS) -> "FaultInjector":
+        """Injector armed from ``REPRO_FAULTS`` (empty/unset -> nothing armed)."""
+        return cls(os.environ.get(env) or None)
+
+    def _parse(self, spec: str) -> None:
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            kind, _, raw = part.partition("=")
+            raw = raw or "1"
+            times: int | None = None
+            if "x" in raw:
+                raw, _, n = raw.partition("x")
+                times = int(n)
+            self.arm(kind.strip(), float(raw), times=times)
+
+    # ------------------------------------------------------------------ #
+    def arm(self, kind: str, value: float = 1.0, times: int | None = None) -> None:
+        """Arm ``kind`` with ``value``; ``times`` bounds how often it fires."""
+        if kind not in self.KINDS:
+            raise ValueError(f"unknown fault kind {kind!r} (know {self.KINDS})")
+        if times is not None and times < 1:
+            raise ValueError("times must be >= 1 (use disarm to clear)")
+        with self._lock:
+            self._armed[kind] = (float(value), times)
+
+    def disarm(self, kind: str) -> None:
+        with self._lock:
+            self._armed.pop(kind, None)
+
+    def peek(self, kind: str) -> float | None:
+        """Armed value without consuming a charge (None when disarmed)."""
+        with self._lock:
+            entry = self._armed.get(kind)
+            return None if entry is None else entry[0]
+
+    def take(self, kind: str) -> float | None:
+        """Consume one charge of ``kind``; None when disarmed/exhausted."""
+        with self._lock:
+            entry = self._armed.get(kind)
+            if entry is None:
+                return None
+            value, times = entry
+            if times is not None:
+                if times <= 1:
+                    self._armed.pop(kind)
+                else:
+                    self._armed[kind] = (value, times - 1)
+            self._fired[kind] = self._fired.get(kind, 0) + 1
+            return value
+
+    def fired(self, kind: str) -> int:
+        """How many times ``kind``'s charge was consumed."""
+        with self._lock:
+            return self._fired.get(kind, 0)
+
+    # ------------------------------------------------------------------ #
+    def sleep(self, kind: str) -> float:
+        """Consume a charge and sleep its value (seconds); returns the value."""
+        value = self.take(kind)
+        if value:
+            time.sleep(value)
+        return value or 0.0
+
+    def engine_hook(self):
+        """A ``SketchEngine.tick_hooks`` entry injecting slow engine ticks."""
+
+        def hook(path: str) -> None:
+            del path
+            self.sleep("slow_engine")
+
+        return hook
+
+
+def unreachable_address() -> str:
+    """A ``host:port`` that accepts no connections (for dead-coordinator
+    chaos): the port is bound, observed, and released — nothing listens."""
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+    return f"127.0.0.1:{port}"

@@ -35,20 +35,70 @@ Hardening (both off by default, production wants both on):
 
 ``/healthz`` is exempt from both: liveness probes must not need secrets
 and must not evict real traffic from the bucket.
+
+Write path (``gateway=`` an ``launch.ingest_gateway.IngestGateway``):
+
+  POST /ingest   {"key": str, "values": [..], "weights"?: [..],
+                  "deadline_ms"?: float}
+                 -> 200 admission receipt {status, queued, shed,
+                    queue_depth}; 429 + Retry-After when the gateway queue
+                    is full (reject policy); 400 on malformed payloads;
+                    413 past ``max_body_bytes``
+  GET  /stats    -> {"server": per-server counters (write_errors,
+                    requests, faults fired), "gateway": queue/shed/latency
+                    counters} — the operator's overload dashboard
+
+Robustness: a peer closing mid-response used to make ``wfile.write``
+raise ``BrokenPipeError``/``ConnectionResetError``, which
+``ThreadingHTTPServer`` dumped as a traceback to stderr; ``_reply`` now
+swallows per-connection write failures and counts them in the server
+stats.  ``faults=`` (a ``launch.faults.FaultInjector``) arms deterministic
+connection chaos — ``drop_conn`` (hard-close before any response) and
+``half_close`` (headers + half the body, then close) — so the degradation
+paths are exercised by tests, not discovered in production.
 """
 
 from __future__ import annotations
 
 import hmac
 import json
+import socket
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
 
-__all__ = ["TelemetryFacade", "TokenBucket", "QuantileHTTPServer", "serve_http"]
+from repro.launch.ingest_gateway import GatewayOverloaded
+
+__all__ = [
+    "TelemetryFacade",
+    "TokenBucket",
+    "ServerStats",
+    "QuantileHTTPServer",
+    "serve_http",
+]
 
 _DEFAULT_QS = (0.5, 0.95, 0.99)
+
+
+class ServerStats:
+    """Thread-safe counter dict for the handler pool (one per server)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counts: dict[str, int] = {}
+
+    def incr(self, key: str, n: int = 1) -> None:
+        with self._lock:
+            self._counts[key] = self._counts.get(key, 0) + n
+
+    def get(self, key: str) -> int:
+        with self._lock:
+            return self._counts.get(key, 0)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return dict(self._counts)
 
 
 class TelemetryFacade:
@@ -134,20 +184,62 @@ def _parse_qs_param(query: dict) -> list[float]:
     return qs
 
 
-def _make_handler(telemetry, auth_token: str | None, bucket: TokenBucket | None):
+def _make_handler(
+    telemetry,
+    auth_token: str | None,
+    bucket: TokenBucket | None,
+    stats: ServerStats,
+    gateway=None,
+    faults=None,
+    max_body_bytes: int = 8 << 20,
+):
     class Handler(BaseHTTPRequestHandler):
         def log_message(self, *args):  # quiet: tests/servers manage logging
             pass
 
         def _reply(self, code: int, payload: dict, headers: dict | None = None) -> None:
-            body = json.dumps(payload).encode()
-            self.send_response(code)
-            self.send_header("Content-Type", "application/json")
-            self.send_header("Content-Length", str(len(body)))
-            for k, v in (headers or {}).items():
-                self.send_header(k, v)
-            self.end_headers()
-            self.wfile.write(body)
+            try:
+                body = json.dumps(payload).encode()
+                if faults is not None and faults.take("half_close") is not None:
+                    # chaos: truncate mid-body, then vanish — clients must
+                    # treat it as a connection error and retry
+                    stats.incr("faults_half_close")
+                    self.send_response(code)
+                    self.send_header("Content-Type", "application/json")
+                    self.send_header("Content-Length", str(len(body)))
+                    self.end_headers()
+                    self.wfile.write(body[: max(1, len(body) // 2)])
+                    self.wfile.flush()
+                    self._abort_connection()
+                    return
+                self.send_response(code)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(body)))
+                for k, v in (headers or {}).items():
+                    self.send_header(k, v)
+                self.end_headers()
+                self.wfile.write(body)
+            except (BrokenPipeError, ConnectionResetError, OSError):
+                # the peer hung up mid-response: their problem, not a
+                # traceback — count it and drop this connection quietly
+                stats.incr("write_errors")
+                self.close_connection = True
+
+        def _abort_connection(self) -> None:
+            """Hard-close the socket (RST-ish): the chaos 'vanished peer'."""
+            self.close_connection = True
+            try:
+                self.connection.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+
+        def _chaos_drop(self) -> bool:
+            """True when the drop_conn fault consumed this request whole."""
+            if faults is not None and faults.take("drop_conn") is not None:
+                stats.incr("faults_dropped_conn")
+                self._abort_connection()
+                return True
+            return False
 
         def _gate(self) -> bool:
             """Rate limit + auth; replies and returns False on refusal.
@@ -182,13 +274,22 @@ def _make_handler(telemetry, auth_token: str | None, bucket: TokenBucket | None)
         def do_GET(self) -> None:  # noqa: N802 (http.server API)
             url = urlparse(self.path)
             query = parse_qs(url.query)
+            stats.incr("requests")
+            if self._chaos_drop():
+                return
             try:
                 if url.path == "/healthz":  # liveness: no auth, no bucket
                     self._reply(200, {"ok": True})
                     return
                 if not self._gate():
                     return
-                if url.path == "/quantiles":
+                if url.path == "/stats":
+                    payload = {"server": stats.snapshot()}
+                    if gateway is not None:
+                        payload["gateway"] = gateway.stats()
+                        payload["gateway"]["latency_s"] = gateway.latency_quantiles()
+                    self._reply(200, payload)
+                elif url.path == "/quantiles":
                     endpoint = query.get("endpoint", [None])[0]
                     if endpoint is None:
                         raise ValueError("missing required parameter 'endpoint'")
@@ -220,6 +321,78 @@ def _make_handler(telemetry, auth_token: str | None, bucket: TokenBucket | None)
             except ValueError as e:
                 self._reply(400, {"error": str(e)})
 
+        def do_POST(self) -> None:  # noqa: N802 (http.server API)
+            url = urlparse(self.path)
+            stats.incr("requests")
+            if self._chaos_drop():
+                return
+            try:
+                if url.path != "/ingest":
+                    self._reply(404, {"error": f"unknown path {url.path!r}"})
+                    return
+                if not self._gate():
+                    return
+                if gateway is None:
+                    self._reply(404, {"error": "ingest not enabled on this server"})
+                    return
+                try:
+                    length = int(self.headers.get("Content-Length") or 0)
+                except ValueError:
+                    length = -1
+                if length <= 0:
+                    self._reply(400, {"error": "missing or invalid Content-Length"})
+                    return
+                if length > max_body_bytes:
+                    stats.incr("oversized_bodies")
+                    self._reply(
+                        413,
+                        {"error": f"body {length} bytes > limit {max_body_bytes}"},
+                    )
+                    return
+                raw = self.rfile.read(length)
+                if len(raw) < length:  # peer died mid-upload: no reply path
+                    stats.incr("truncated_bodies")
+                    self.close_connection = True
+                    return
+                try:
+                    payload = json.loads(raw)
+                except json.JSONDecodeError as e:
+                    raise ValueError(f"invalid JSON body: {e}") from e
+                if not isinstance(payload, dict):
+                    raise ValueError("body must be a JSON object")
+                key = payload.get("key")
+                values = payload.get("values")
+                if not isinstance(key, str) or not key:
+                    raise ValueError("'key' must be a non-empty string")
+                if not isinstance(values, list):
+                    raise ValueError("'values' must be a list of numbers")
+                weights = payload.get("weights")
+                deadline_ms = payload.get("deadline_ms")
+                try:
+                    receipt = gateway.submit(
+                        key,
+                        values,
+                        weights=weights,
+                        deadline_s=(
+                            None if deadline_ms is None else float(deadline_ms) / 1e3
+                        ),
+                    )
+                except GatewayOverloaded as e:
+                    stats.incr("ingest_429")
+                    self._reply(
+                        429,
+                        {"error": "ingest queue full", "queue_depth": e.depth},
+                        {"Retry-After": f"{e.retry_after_s:.3f}"},
+                    )
+                    return
+                stats.incr("ingest_accepted")
+                self._reply(200, receipt)
+            except ValueError as e:
+                self._reply(400, {"error": str(e)})
+            except RuntimeError as e:  # gateway stopped: refuse, don't crash
+                stats.incr("ingest_unavailable")
+                self._reply(503, {"error": str(e)}, {"Retry-After": "1"})
+
     return Handler
 
 
@@ -229,8 +402,10 @@ class QuantileHTTPServer:
     ``port=0`` binds an ephemeral port (see ``.port`` after construction).
     ``auth_token`` requires ``Authorization: Bearer <token>`` on every
     query; ``rate_limit`` (requests/s, with ``rate_burst`` peak — default
-    2x the rate) token-buckets the whole server.  Use as a context manager
-    or call ``shutdown()`` explicitly.
+    2x the rate) token-buckets the whole server.  ``gateway`` (an
+    ``IngestGateway``) enables the ``POST /ingest`` write path; ``faults``
+    arms connection chaos for the degradation tests.  Use as a context
+    manager or call ``shutdown()`` explicitly.
     """
 
     def __init__(
@@ -242,14 +417,33 @@ class QuantileHTTPServer:
         auth_token: str | None = None,
         rate_limit: float | None = None,
         rate_burst: float | None = None,
+        gateway=None,
+        faults=None,
+        max_body_bytes: int = 8 << 20,
     ):
         bucket = None
         if rate_limit is not None:
             burst = rate_burst if rate_burst is not None else max(1.0, 2 * rate_limit)
             bucket = TokenBucket(rate_limit, burst)
         self.bucket = bucket
-        self.httpd = ThreadingHTTPServer(
-            (host, port), _make_handler(telemetry, auth_token, bucket)
+        self.gateway = gateway
+        self.stats = ServerStats()
+        # socketserver's default listen backlog (5) resets concurrent
+        # connects under bursty fleets; raise it before the bind below.
+        server_cls = type(
+            "IngestHTTPServer", (ThreadingHTTPServer,), {"request_queue_size": 128}
+        )
+        self.httpd = server_cls(
+            (host, port),
+            _make_handler(
+                telemetry,
+                auth_token,
+                bucket,
+                self.stats,
+                gateway=gateway,
+                faults=faults,
+                max_body_bytes=max_body_bytes,
+            ),
         )
         self.host, self.port = self.httpd.server_address[:2]
         self._thread = threading.Thread(target=self.httpd.serve_forever, daemon=True)
@@ -266,6 +460,8 @@ class QuantileHTTPServer:
         self.httpd.shutdown()
         self.httpd.server_close()
         self._thread.join(timeout=5)
+        if self.gateway is not None:
+            self.gateway.stop()  # drain what was admitted before exit
 
     def __enter__(self) -> "QuantileHTTPServer":
         return self.start()
@@ -282,6 +478,7 @@ def serve_http(
     auth_token: str | None = None,
     rate_limit: float | None = None,
     rate_burst: float | None = None,
+    gateway=None,
 ) -> None:
     """Blocking entry point: serve ``telemetry``'s quantile queries forever."""
     server = QuantileHTTPServer(
@@ -291,6 +488,7 @@ def serve_http(
         auth_token=auth_token,
         rate_limit=rate_limit,
         rate_burst=rate_burst,
+        gateway=gateway,
     )
     print(f"[http] serving latency quantiles on {server.url}")
     server.start()

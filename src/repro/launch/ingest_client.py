@@ -1,0 +1,131 @@
+"""HTTP ingest client: retries, exponential backoff + jitter, Retry-After.
+
+The gateway's backpressure contract only works if clients hold up their
+half: a 429 means *back off for Retry-After seconds*, a dropped connection
+means *retry with jitter* (never in lockstep with every other client), and
+a 4xx means *stop — the payload is wrong*.  ``IngestClient`` implements
+that contract over the stdlib so benches, chaos tests, and operators all
+exercise the same client behavior:
+
+* 429 -> sleep the server's ``Retry-After`` (bounded by ``max_backoff_s``)
+  and retry; counted in ``stats["throttled"]``;
+* connection errors (reset, refused, half-closed responses, timeouts) ->
+  exponential backoff ``base * 2^attempt`` with uniform jitter, then retry;
+* 5xx -> retried like connection errors (the server said "not you, me");
+* other 4xx -> raise immediately (retrying a bad payload is a retry storm).
+
+``ingest`` returns the gateway receipt; after ``max_retries`` exhausted
+attempts it raises ``IngestError`` carrying the last cause.
+"""
+
+from __future__ import annotations
+
+import http.client
+import json
+import random
+import time
+from urllib.error import HTTPError, URLError
+from urllib.request import Request, urlopen
+
+__all__ = ["IngestError", "IngestClient"]
+
+
+class IngestError(RuntimeError):
+    """All retries exhausted; ``cause`` is the final failure."""
+
+    def __init__(self, message: str, cause: BaseException | None = None):
+        super().__init__(message)
+        self.cause = cause
+
+
+class IngestClient:
+    def __init__(
+        self,
+        base_url: str,
+        *,
+        auth_token: str | None = None,
+        max_retries: int = 6,
+        base_backoff_s: float = 0.05,
+        max_backoff_s: float = 5.0,
+        jitter: float = 0.5,
+        timeout_s: float = 10.0,
+        rng: random.Random | None = None,
+    ):
+        self.base_url = base_url.rstrip("/")
+        self.auth_token = auth_token
+        self.max_retries = int(max_retries)
+        self.base_backoff_s = float(base_backoff_s)
+        self.max_backoff_s = float(max_backoff_s)
+        self.jitter = float(jitter)
+        self.timeout_s = float(timeout_s)
+        self._rng = rng or random.Random()
+        self.stats = {"requests": 0, "retries": 0, "throttled": 0, "conn_errors": 0}
+
+    # ------------------------------------------------------------------ #
+    def _backoff(self, attempt: int) -> float:
+        """base * 2^attempt, capped, with uniform jitter (de-synchronizes a
+        fleet of clients retrying the same outage)."""
+        b = min(self.base_backoff_s * (2**attempt), self.max_backoff_s)
+        return b * (1.0 + self.jitter * self._rng.random())
+
+    def _post(self, path: str, payload: dict) -> dict:
+        body = json.dumps(payload).encode()
+        req = Request(f"{self.base_url}{path}", data=body, method="POST")
+        req.add_header("Content-Type", "application/json")
+        if self.auth_token is not None:
+            req.add_header("Authorization", f"Bearer {self.auth_token}")
+        with urlopen(req, timeout=self.timeout_s) as resp:
+            return json.loads(resp.read())
+
+    def ingest(
+        self,
+        key: str,
+        values,
+        weights=None,
+        deadline_ms: float | None = None,
+    ) -> dict:
+        """POST one ``{key, values[]}`` batch to ``/ingest`` (with retries)."""
+        payload: dict = {"key": key, "values": [float(v) for v in values]}
+        if weights is not None:
+            payload["weights"] = [float(w) for w in weights]
+        if deadline_ms is not None:
+            payload["deadline_ms"] = float(deadline_ms)
+        last: BaseException | None = None
+        for attempt in range(self.max_retries + 1):
+            self.stats["requests"] += 1
+            try:
+                return self._post("/ingest", payload)
+            except HTTPError as e:
+                e.read()  # drain + release the connection
+                if e.code == 429:
+                    self.stats["throttled"] += 1
+                    retry_after = e.headers.get("Retry-After")
+                    try:
+                        delay = min(float(retry_after), self.max_backoff_s)
+                    except (TypeError, ValueError):
+                        delay = self._backoff(attempt)
+                    last = e
+                elif e.code >= 500:
+                    last = e
+                    delay = self._backoff(attempt)
+                else:
+                    raise IngestError(f"ingest refused: HTTP {e.code}", e) from e
+            except (
+                URLError,
+                ConnectionError,
+                TimeoutError,
+                OSError,
+                http.client.HTTPException,
+                json.JSONDecodeError,
+            ) as e:
+                # covers resets, refusals, half-closed/truncated responses,
+                # timeouts — everything a vanished peer can look like
+                self.stats["conn_errors"] += 1
+                last = e
+                delay = self._backoff(attempt)
+            if attempt < self.max_retries:
+                self.stats["retries"] += 1
+                time.sleep(delay)
+        raise IngestError(
+            f"ingest failed after {self.max_retries + 1} attempts: {last!r}", last
+        )

@@ -219,6 +219,43 @@ class Server:
             for ep in sorted(self.endpoint_agg.keys())
         }
 
+    def serve_over_http(
+        self,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        *,
+        auth_token: str | None = None,
+        rate_limit: float | None = None,
+        ingest: bool = True,
+        gateway_kwargs: dict | None = None,
+    ):
+        """Expose this server's quantile surface (and, with ``ingest``, the
+        write path) over HTTP.  Returns a started ``QuantileHTTPServer``.
+
+        The ingest gateway drains ``POST /ingest`` batches into the same
+        ``endpoint_window`` the model's request latencies land in — one
+        donated engine ingest per tick regardless of client count — so
+        external agents and the local serving loop share one fleet view.
+        Caller owns shutdown (``.shutdown()`` stops the HTTP threads and
+        drains the gateway).
+        """
+        from repro.launch.http_api import QuantileHTTPServer
+        from repro.launch.ingest_gateway import IngestGateway
+
+        gateway = (
+            IngestGateway(self.endpoint_window, **(gateway_kwargs or {}))
+            if ingest
+            else None
+        )
+        return QuantileHTTPServer(
+            self,
+            host,
+            port,
+            auth_token=auth_token,
+            rate_limit=rate_limit,
+            gateway=gateway,
+        ).start()
+
     def latency_report(self) -> dict:
         qs = [0.5, 0.95, 0.99]
         return {
@@ -243,6 +280,15 @@ def main() -> None:
         help="row-shard the endpoint sketch bank over this many devices "
         "(spans hosts once launch.distributed joined a fleet)",
     )
+    p.add_argument(
+        "--http-port", type=int, default=None,
+        help="also serve the HTTP quantile surface (with POST /ingest "
+        "write path) on this port while requests run",
+    )
+    p.add_argument(
+        "--http-token", default=None,
+        help="bearer token required on every HTTP query/ingest",
+    )
     args = p.parse_args()
     # fleet bootstrap: no-op single-process, REPRO_COORDINATOR & co. join a
     # multi-host fleet whose devices the keys mesh (sketch shards) can span
@@ -265,7 +311,15 @@ def main() -> None:
         )
         for i in range(args.requests)
     ]
+    http_server = None
+    if args.http_port is not None:
+        http_server = server.serve_over_http(
+            port=args.http_port, auth_token=args.http_token
+        )
+        print(f"[serve] HTTP quantiles + ingest on {http_server.url}")
     done = server.run(reqs)
+    if http_server is not None:
+        http_server.shutdown()
     rep = server.latency_report()
     print(
         f"[serve] {len(done)} requests; decode-step ms p50/p95/p99 = "

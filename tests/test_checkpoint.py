@@ -1,13 +1,15 @@
 """Checkpointing: atomicity, keep-k, async, auto-resume, corruption safety."""
 
+import json
 import os
 
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointCorruptError, CheckpointManager
 
 
 def _state(seed):
@@ -80,6 +82,85 @@ def test_async_save(tmp_path):
 def test_fresh_start_returns_none(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     assert mgr.restore({"a": jax.ShapeDtypeStruct((1,), jnp.float32)}) is None
+
+
+# --------------------------------------------------------------------- #
+# integrity: restore refuses corrupt state, and says which leaf
+# --------------------------------------------------------------------- #
+def _like(state):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+
+
+def _npz_path(tmp_path, step):
+    return os.path.join(str(tmp_path), f"step_{step:012d}", "arrays.npz")
+
+
+def test_bit_flip_raises_corrupt_error(tmp_path):
+    """One flipped byte in a stored leaf payload: the zip member CRC
+    catches it, and restore names the leaf instead of loading garbage."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    state = _state(1)
+    mgr.save(1, state)
+    path = _npz_path(tmp_path, 1)
+    blob = bytearray(open(path, "rb").read())
+    # flip a byte well inside the first member's payload (past its header)
+    blob[len(blob) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(CheckpointCorruptError) as err:
+        mgr.restore(_like(state))
+    assert "leaf" in str(err.value) or "unreadable" in str(err.value)
+
+
+def test_truncated_npz_raises_corrupt_error(tmp_path):
+    """A partial copy (file cut mid-write) must not restore."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    state = _state(2)
+    mgr.save(2, state)
+    path = _npz_path(tmp_path, 2)
+    blob = open(path, "rb").read()
+    open(path, "wb").write(blob[: len(blob) // 3])
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(_like(state))
+
+
+def test_valid_zip_wrong_data_hits_manifest_crc(tmp_path):
+    """Substituted-but-well-formed arrays (a mixed-up copy between runs):
+    the zip is internally consistent, so only the manifest CRC32 record
+    can catch it — and the error names the offending leaf."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    state = _state(3)
+    mgr.save(3, state)
+    path = _npz_path(tmp_path, 3)
+    data = dict(np.load(path))
+    victim = sorted(data)[0]
+    data[victim] = data[victim] + 1  # plausible values, wrong bytes
+    np.savez(path, **data)
+    with pytest.raises(CheckpointCorruptError) as err:
+        mgr.restore(_like(state))
+    msg = str(err.value)
+    assert "CRC32 mismatch" in msg
+    manifest = json.load(
+        open(os.path.join(os.path.dirname(path), "manifest.json"))
+    )
+    leaf_idx = int(victim[len("leaf_"):])
+    assert manifest["paths"][leaf_idx] in msg  # names the corrupt leaf
+
+
+def test_pre_integrity_checkpoint_still_restores(tmp_path):
+    """Checkpoints written before the CRC record existed (no "crc32" in
+    the manifest) must keep restoring — skip verification, don't raise."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    state = _state(4)
+    mgr.save(4, state)
+    mpath = os.path.join(str(tmp_path), "step_000000000004", "manifest.json")
+    manifest = json.load(open(mpath))
+    del manifest["crc32"]
+    json.dump(manifest, open(mpath, "w"))
+    step, restored, _ = mgr.restore(_like(state))
+    assert step == 4
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(state["params"]["w"])
+    )
 
 
 def test_save_only_writes_on_process_zero(tmp_path, monkeypatch):

@@ -1,0 +1,248 @@
+"""Chaos suite: every injected fault degrades to a defined response.
+
+Marked ``chaos`` (run explicitly via ``pytest -m chaos``; also part of the
+tier-1 run — every fault here is deterministic and fast).  The acceptance
+bar, per fault: never a traceback, never a hang, and post-fault quantile
+queries still answer from all successfully ingested data.
+"""
+
+import json
+import time
+from urllib.error import HTTPError, URLError
+from urllib.request import Request, urlopen
+
+import numpy as np
+import pytest
+
+from repro.core.jax_sketch import BucketSpec
+from repro.launch.faults import FaultInjector, unreachable_address
+from repro.launch.http_api import QuantileHTTPServer, TelemetryFacade
+from repro.launch.ingest_client import IngestClient
+from repro.launch.ingest_gateway import GatewayOverloaded, IngestGateway
+from repro.telemetry.keyed import KeyedWindow
+
+pytestmark = pytest.mark.chaos
+
+
+def make_window(capacity=8):
+    return KeyedWindow(BucketSpec(), capacity=capacity)
+
+
+def _get(url):
+    with urlopen(Request(url), timeout=10) as resp:
+        return json.loads(resp.read())
+
+
+# --------------------------------------------------------------------- #
+# injector mechanics
+# --------------------------------------------------------------------- #
+def test_injector_arm_take_charges():
+    f = FaultInjector()
+    assert f.take("drop_conn") is None
+    f.arm("drop_conn", 1.0, times=2)
+    assert f.take("drop_conn") == 1.0
+    assert f.peek("drop_conn") == 1.0
+    assert f.take("drop_conn") == 1.0
+    assert f.take("drop_conn") is None  # charges exhausted -> disarmed
+    assert f.fired("drop_conn") == 2
+    with pytest.raises(ValueError):
+        f.arm("not_a_fault")
+
+
+def test_injector_env_spec(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULTS", "slow_engine=0.05, drop_conn=1x3")
+    f = FaultInjector.from_env()
+    assert f.peek("slow_engine") == 0.05
+    assert [f.take("drop_conn") for _ in range(4)] == [1.0, 1.0, 1.0, None]
+    monkeypatch.delenv("REPRO_FAULTS")
+    assert FaultInjector.from_env().peek("slow_engine") is None
+
+
+# --------------------------------------------------------------------- #
+# slow engine: ticks stretch, nothing breaks, data still lands
+# --------------------------------------------------------------------- #
+def test_slow_engine_tick_degrades_not_fails(rng):
+    faults = FaultInjector()
+    window = make_window()
+    gw = IngestGateway(window, faults=faults, start=False)
+    gw.submit("/a", rng.pareto(1.0, 100) + 1.0)
+    gw.flush()  # warm the executable so the injected sleep dominates
+    faults.arm("slow_engine", 0.15, times=1)
+    gw.submit("/a", rng.pareto(1.0, 100) + 1.0)
+    t0 = time.monotonic()
+    gw.flush()
+    assert time.monotonic() - t0 >= 0.15  # the fault actually fired...
+    assert faults.fired("slow_engine") == 1
+    st = gw.stats()
+    assert st["drain_errors"] == 0
+    assert st["ingested_values"] == 200  # ...and nothing was lost
+    q = window.quantiles("/a", [0.5])
+    assert np.isfinite(q[0]) and q[0] > 0
+
+
+# --------------------------------------------------------------------- #
+# queue stall: backpressure fires, then the backlog drains cleanly
+# --------------------------------------------------------------------- #
+def test_queue_stall_backs_up_then_recovers(rng):
+    faults = FaultInjector()
+    window = make_window()
+    gw = IngestGateway(
+        window,
+        max_queue_values=200,
+        tick_interval_s=0.002,
+        faults=faults,
+        start=False,
+    )
+    faults.arm("queue_stall", 10.0)  # would stall every drain-loop tick
+    gw.submit("/a", np.ones(150))
+    # queue holds 150 with no drain: admission past the bound 429s
+    with pytest.raises(GatewayOverloaded):
+        gw.submit("/a", np.ones(100))
+    assert gw.depth() == 150  # bounded: the stall never grew the queue
+    faults.disarm("queue_stall")
+    gw.flush()  # flush drains on the caller thread (no stall path)
+    assert gw.stats()["ingested_values"] == 150
+    assert window.total_mass() == 150.0
+    # post-fault queries answer from everything that made it in
+    assert np.isfinite(window.rollup_quantiles([0.99])[0])
+
+
+def test_queue_stall_background_thread_counts_stalls(rng):
+    faults = FaultInjector()
+    gw = IngestGateway(
+        make_window(), tick_interval_s=0.002, faults=faults
+    )
+    faults.arm("queue_stall", 0.05, times=1)
+    gw.submit("/a", np.ones(10))
+    deadline = time.monotonic() + 10.0
+    while gw.stats()["ingested_values"] < 10:
+        assert time.monotonic() < deadline
+        time.sleep(0.005)
+    assert gw.stats()["stalls"] == 1
+    gw.stop()
+
+
+# --------------------------------------------------------------------- #
+# dropped / half-closed connections: client-visible errors, server lives
+# --------------------------------------------------------------------- #
+def test_dropped_connection_defined_failure(rng):
+    faults = FaultInjector()
+    window = make_window()
+    gw = IngestGateway(window, start=False)
+    with QuantileHTTPServer(
+        TelemetryFacade(window, None), gateway=gw, faults=faults
+    ) as server:
+        client = IngestClient(server.url, max_retries=0)
+        client.ingest("/a", [1.0] * 10)
+        faults.arm("drop_conn", 1.0, times=1)
+        # the doomed request surfaces as a connection error, not a hang
+        with pytest.raises(Exception) as err:
+            client.ingest("/a", [2.0] * 10)
+        assert not isinstance(err.value, HTTPError)
+        assert client.stats["conn_errors"] == 1
+        # server alive: next request on a fresh connection succeeds
+        assert client.ingest("/a", [3.0] * 10)["status"] == "accepted"
+        assert server.stats.get("faults_dropped_conn") == 1
+        gw.flush()
+        # the dropped request's batch never entered the queue: 20 landed
+        assert window.total_mass() == 20.0
+        assert np.isfinite(window.quantiles("/a", [0.5])[0])
+
+
+def test_dropped_connection_client_retries_through(rng):
+    """With retries enabled the chaos is invisible: backoff + retry wins."""
+    faults = FaultInjector()
+    window = make_window()
+    gw = IngestGateway(window, start=False)
+    with QuantileHTTPServer(
+        TelemetryFacade(window, None), gateway=gw, faults=faults
+    ) as server:
+        faults.arm("drop_conn", 1.0, times=2)
+        client = IngestClient(server.url, max_retries=4, base_backoff_s=0.01)
+        receipt = client.ingest("/a", [1.0] * 25)
+        assert receipt["status"] == "accepted"
+        assert client.stats["conn_errors"] == 2
+        assert client.stats["retries"] >= 2
+        gw.flush()
+        assert window.total_mass() == 25.0
+
+
+def test_half_closed_response_truncates_cleanly(rng):
+    faults = FaultInjector()
+    window = make_window()
+    window.record("/a", np.ones(10))
+    with QuantileHTTPServer(
+        TelemetryFacade(window, None), faults=faults
+    ) as server:
+        assert _get(f"{server.url}/live")["endpoints"]
+        faults.arm("half_close", 1.0, times=1)
+        with pytest.raises((ValueError, OSError, HTTPError, URLError, Exception)):
+            _get(f"{server.url}/live")
+        assert server.stats.get("faults_half_close") == 1
+        # server still healthy afterwards
+        assert _get(f"{server.url}/healthz") == {"ok": True}
+
+
+def test_client_disconnect_counted_not_raised(rng):
+    """A peer closing before the response lands must increment
+    write_errors, not traceback (the ThreadingHTTPServer stderr dump)."""
+    import socket as socket_mod
+
+    window = make_window()
+    window.record("/a", np.ones(50))
+    with QuantileHTTPServer(TelemetryFacade(window, None)) as server:
+        for _ in range(3):
+            s = socket_mod.create_connection((server.host, server.port))
+            # send a complete request, then vanish before reading the reply
+            s.sendall(b"GET /live HTTP/1.1\r\nHost: x\r\n\r\n")
+            s.setsockopt(
+                socket_mod.SOL_SOCKET,
+                socket_mod.SO_LINGER,
+                # RST on close: the server's write hits a reset peer
+                __import__("struct").pack("ii", 1, 0),
+            )
+            s.close()
+        deadline = time.monotonic() + 5.0
+        while server.stats.get("write_errors") == 0:
+            if time.monotonic() > deadline:
+                break  # timing-dependent: the write may win the race
+            time.sleep(0.01)
+        # whether or not the race reproduced, the server must still serve
+        assert _get(f"{server.url}/healthz") == {"ok": True}
+        assert _get(f"{server.url}/live")["endpoints"]
+
+
+# --------------------------------------------------------------------- #
+# dead coordinator: bounded, clean ConnectionError (never a C++ abort)
+# --------------------------------------------------------------------- #
+def test_dead_coordinator_preflight_fails_fast():
+    from repro.launch.distributed import _tcp_preflight
+
+    addr = unreachable_address()
+    t0 = time.monotonic()
+    with pytest.raises(ConnectionError) as err:
+        _tcp_preflight(addr, 5.0, retries=2, backoff_s=0.01)
+    assert time.monotonic() - t0 < 5.0  # retries capped it before the budget
+    assert "3 attempt(s)" in str(err.value)
+
+
+def test_dead_coordinator_preflight_env_config(monkeypatch):
+    from repro.launch import distributed as dist
+
+    calls = {}
+
+    def fake_preflight(coordinator, budget, retries=None):
+        calls.update(coordinator=coordinator, budget=budget, retries=retries)
+        raise ConnectionError("dead")
+
+    monkeypatch.setattr(dist, "_tcp_preflight", fake_preflight)
+    monkeypatch.setenv("REPRO_PREFLIGHT_TIMEOUT", "7.5")
+    monkeypatch.setenv("REPRO_PREFLIGHT_RETRIES", "4")
+    with pytest.raises(ConnectionError):
+        dist.initialize(
+            coordinator=unreachable_address(),
+            num_processes=2,
+            process_id=1,
+            timeout_s=30,
+        )
+    assert calls["budget"] == 7.5 and calls["retries"] == 4

@@ -1,0 +1,170 @@
+"""Threaded stress: the HTTP tier under ~32 concurrent writers.
+
+Three invariants under real thread contention (ThreadingHTTPServer gives
+every request its own thread, so the TokenBucket, auth check, gateway
+queue, and stats counters are all hit concurrently):
+
+* no lost updates — every accepted value is queryable afterwards,
+* no 5xx — overload degrades to 429/shed receipts, never a traceback,
+* exact limiter accounting — a zero-refill bucket admits exactly burst.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.jax_sketch import BucketSpec
+from repro.launch.http_api import QuantileHTTPServer, TelemetryFacade, TokenBucket
+from repro.launch.ingest_client import IngestClient, IngestError
+from repro.launch.ingest_gateway import IngestGateway
+from repro.telemetry.keyed import KeyedWindow
+
+THREADS = 32
+
+
+def _run_threads(fn):
+    errors = []
+    barrier = threading.Barrier(THREADS)
+
+    def wrapped(i):
+        barrier.wait()  # maximize overlap: everyone fires together
+        try:
+            fn(i)
+        except BaseException as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    ts = [threading.Thread(target=wrapped, args=(i,)) for i in range(THREADS)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+        assert not t.is_alive(), "stress thread hung"
+    return errors
+
+
+def test_token_bucket_exact_under_contention():
+    """rate=0, burst=B: exactly B of many concurrent claims succeed."""
+    burst = 100
+    bucket = TokenBucket(rate=0.0, burst=burst)
+    wins = [0] * THREADS
+
+    def worker(i):
+        for _ in range(10):
+            if bucket.try_acquire():
+                wins[i] += 1
+
+    assert _run_threads(worker) == []
+    assert sum(wins) == burst  # not B-1 (lost token), not B+1 (double spend)
+    assert not bucket.try_acquire()
+
+
+def test_concurrent_ingest_no_lost_updates(rng):
+    """32 authed writers, one shared gateway: mass in == mass queryable,
+    zero 5xx, server stats agree with client-side receipts."""
+    window = KeyedWindow(BucketSpec(), capacity=8)
+    gw = IngestGateway(
+        window, max_queue_values=1 << 20, tick_interval_s=0.005
+    )
+    per_thread = 40  # values per request
+    reqs = 8  # requests per thread
+    with QuantileHTTPServer(
+        TelemetryFacade(window, None), gateway=gw, auth_token="hunter2"
+    ) as server:
+        accepted = [0] * THREADS
+        fivehundreds = []
+
+        def worker(i):
+            client = IngestClient(
+                server.url,
+                auth_token="hunter2",
+                max_retries=6,
+                base_backoff_s=0.01,
+            )
+            for r in range(reqs):
+                try:
+                    receipt = client.ingest(f"/ep{i % 4}", [float(i + 1)] * per_thread)
+                except IngestError as e:  # pragma: no cover - failure path
+                    code = getattr(e.cause, "code", None)
+                    if code is not None and code >= 500:
+                        fivehundreds.append(code)
+                    raise
+                assert receipt["status"] == "accepted"
+                accepted[i] += receipt["queued"]
+
+        assert _run_threads(worker) == []
+        assert fivehundreds == []
+        gw.flush()
+        total = THREADS * reqs * per_thread
+        assert sum(accepted) == total
+        assert window.total_mass() == float(total)
+        st = gw.stats()
+        assert st["ingested_values"] == total
+        assert st["shed_mass"] == 0 and st["drain_errors"] == 0
+        assert server.stats.get("ingest_accepted") == THREADS * reqs
+        assert server.stats.get("write_errors") == 0
+        # quantiles of a constant-per-thread stream are sane
+        q = window.quantiles("/ep0", [0.5])
+        assert np.isfinite(q[0]) and q[0] >= 1.0
+        gw.stop()
+
+
+def test_overload_degrades_never_500s(rng):
+    """Sustained 2x overload against a tiny queue: every response is a
+    200 receipt or a clean 429 — never 5xx — and the queue stays bounded."""
+    window = KeyedWindow(BucketSpec(), capacity=4)
+    gw = IngestGateway(
+        window, max_queue_values=512, tick_interval_s=0.005
+    )
+    outcomes = {"accepted": 0, "throttled": 0}
+    lock = threading.Lock()
+    max_depth = [0]
+    with QuantileHTTPServer(TelemetryFacade(window, None), gateway=gw) as server:
+        def worker(i):
+            client = IngestClient(server.url, max_retries=0)
+            for _ in range(6):
+                try:
+                    client.ingest("/hot", [1.0] * 64)
+                    with lock:
+                        outcomes["accepted"] += 1
+                except IngestError as e:
+                    code = getattr(e.cause, "code", None)
+                    assert code == 429, f"expected 429, got {e!r}"
+                    ra = e.cause.headers["Retry-After"]
+                    assert float(ra) > 0
+                    with lock:
+                        outcomes["throttled"] += 1
+                with lock:
+                    max_depth[0] = max(max_depth[0], gw.depth())
+
+        assert _run_threads(worker) == []
+        gw.flush()
+        assert outcomes["accepted"] + outcomes["throttled"] == THREADS * 6
+        assert outcomes["accepted"] > 0  # drain made room: not a full stall
+        # bounded memory: depth never exceeded the configured cap
+        assert max_depth[0] <= 512
+        # conservation: accepted mass (and only accepted mass) landed
+        assert window.total_mass() == float(outcomes["accepted"] * 64)
+        assert server.stats.get("ingest_429") == outcomes["throttled"]
+        gw.stop()
+
+
+def test_auth_rejections_under_contention():
+    """Concurrent bad-token writers all get 401; none reach the gateway."""
+    window = KeyedWindow(BucketSpec(), capacity=4)
+    gw = IngestGateway(window, start=False)
+    with QuantileHTTPServer(
+        TelemetryFacade(window, None), gateway=gw, auth_token="right"
+    ) as server:
+        def worker(i):
+            client = IngestClient(
+                server.url, auth_token=f"wrong{i}", max_retries=0
+            )
+            with pytest.raises(IngestError) as err:
+                client.ingest("/a", [1.0])
+            assert err.value.cause.code == 401
+
+        assert _run_threads(worker) == []
+        assert gw.depth() == 0
+        gw.flush()
+        assert window.total_mass() == 0.0
