@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import hmac
 import json
+import math
 import socket
 import threading
 import time
@@ -174,6 +175,19 @@ class TokenBucket:
             return max(0.0, (1.0 - self._tokens) / self.rate)
 
 
+def _retry_after_headers(seconds: float) -> dict:
+    """429 backoff headers.  RFC 9110 Retry-After takes integer
+    delta-seconds only (proxies and generic clients misparse fractions),
+    so the standard header is ceiled; ``X-Retry-After-Ms`` carries the
+    sub-second advisory for clients that understand it (``IngestClient``).
+    """
+    seconds = max(0.0, float(seconds))
+    return {
+        "Retry-After": str(math.ceil(seconds)),
+        "X-Retry-After-Ms": str(math.ceil(seconds * 1e3)),
+    }
+
+
 def _parse_qs_param(query: dict) -> list[float]:
     raw = query.get("q", [None])[0]
     if raw is None:
@@ -252,7 +266,7 @@ def _make_handler(
                 self._reply(
                     429,
                     {"error": "rate limit exceeded"},
-                    {"Retry-After": f"{bucket.retry_after_s():.3f}"},
+                    _retry_after_headers(bucket.retry_after_s()),
                 )
                 return False
             if auth_token is not None:
@@ -287,7 +301,13 @@ def _make_handler(
                     payload = {"server": stats.snapshot()}
                     if gateway is not None:
                         payload["gateway"] = gateway.stats()
-                        payload["gateway"]["latency_s"] = gateway.latency_quantiles()
+                        # pre-first-tick quantiles are NaN, which json.dumps
+                        # would emit as the non-standard token NaN (invalid
+                        # JSON to strict parsers) — map them to null
+                        payload["gateway"]["latency_s"] = [
+                            None if math.isnan(v) else v
+                            for v in gateway.latency_quantiles()
+                        ]
                     self._reply(200, payload)
                 elif url.path == "/quantiles":
                     endpoint = query.get("endpoint", [None])[0]
@@ -367,7 +387,14 @@ def _make_handler(
                 if not isinstance(values, list):
                     raise ValueError("'values' must be a list of numbers")
                 weights = payload.get("weights")
+                if weights is not None and not isinstance(weights, list):
+                    raise ValueError("'weights' must be a list of numbers")
                 deadline_ms = payload.get("deadline_ms")
+                if deadline_ms is not None and (
+                    isinstance(deadline_ms, bool)
+                    or not isinstance(deadline_ms, (int, float))
+                ):
+                    raise ValueError("'deadline_ms' must be a number")
                 try:
                     receipt = gateway.submit(
                         key,
@@ -382,12 +409,15 @@ def _make_handler(
                     self._reply(
                         429,
                         {"error": "ingest queue full", "queue_depth": e.depth},
-                        {"Retry-After": f"{e.retry_after_s:.3f}"},
+                        _retry_after_headers(e.retry_after_s),
                     )
                     return
                 stats.incr("ingest_accepted")
                 self._reply(200, receipt)
-            except ValueError as e:
+            except (ValueError, TypeError) as e:
+                # TypeError covers malformed payload *types* that survive
+                # the isinstance checks (e.g. dicts inside values/weights
+                # blowing up np.asarray) — still the client's bug: 400
                 self._reply(400, {"error": str(e)})
             except RuntimeError as e:  # gateway stopped: refuse, don't crash
                 stats.incr("ingest_unavailable")

@@ -99,9 +99,18 @@ class IngestClient:
                 e.read()  # drain + release the connection
                 if e.code == 429:
                     self.stats["throttled"] += 1
+                    # the standard header is integer seconds (RFC 9110);
+                    # X-Retry-After-Ms carries the server's sub-second
+                    # advisory — prefer it when present
+                    retry_ms = e.headers.get("X-Retry-After-Ms")
                     retry_after = e.headers.get("Retry-After")
                     try:
-                        delay = min(float(retry_after), self.max_backoff_s)
+                        seconds = (
+                            float(retry_ms) / 1e3
+                            if retry_ms is not None
+                            else float(retry_after)
+                        )
+                        delay = min(seconds, self.max_backoff_s)
                     except (TypeError, ValueError):
                         delay = self._backoff(attempt)
                     last = e

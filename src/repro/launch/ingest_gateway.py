@@ -173,14 +173,22 @@ class IngestGateway:
         w = None if weights is None else np.asarray(weights, np.float32).reshape(-1)
         if w is not None and w.shape != v.shape:
             raise ValueError(f"weights {w.shape} vs values {v.shape}")
-        if self._stopped:
-            raise RuntimeError("gateway is stopped")
-        if v.size == 0:
-            return {"status": "accepted", "queued": 0, "shed": 0, "queue_depth": self.depth()}
         budget = deadline_s if deadline_s is not None else self.deadline_s
         deadline = None if budget is None else time.monotonic() + float(budget)
         shed = 0
         with self._lock:
+            # under the lock: stop() sets _stopped under this same lock, so
+            # nothing can enqueue after the final drain — keeping the
+            # ingested + shed == submitted accounting invariant exact
+            if self._stopped:
+                raise RuntimeError("gateway is stopped")
+            if v.size == 0:
+                return {
+                    "status": "accepted",
+                    "queued": 0,
+                    "shed": 0,
+                    "queue_depth": self._depth,
+                }
             room = self.max_queue_values - self._depth
             if v.size > room:
                 if self.shed_policy == "reject":

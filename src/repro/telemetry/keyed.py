@@ -37,6 +37,7 @@ event log to the serving layer.
 
 from __future__ import annotations
 
+import threading
 from collections import deque
 from typing import NamedTuple
 
@@ -82,6 +83,15 @@ class KeyedWindow:
     entirely.  Tracking is sync-free on the hot path: the ingest
     executable's (fired, clamped) outputs park on device and only transfer
     when the events are actually read (or the window resets).
+
+    Thread safety: every bank access goes through ``self.lock`` (an
+    RLock).  The ingest executable *donates* the bank, so two concurrent
+    ``record``/``record_batches`` calls — e.g. the ingest gateway's drain
+    thread racing a serving loop's flush — could otherwise hand an
+    already-deleted buffer to the engine or lose one thread's update;
+    readers (``quantiles``/``total_mass``/...) take the same lock so they
+    never observe a donated-away bank.  ``KeyedAggregator.flush`` holds it
+    across its read-then-reset so the window swap is atomic too.
     """
 
     def __init__(
@@ -104,6 +114,8 @@ class KeyedWindow:
             raise ValueError("evict_after must be >= 1")
         self.spec = spec
         self.capacity = capacity
+        # reentrant: KeyedAggregator.flush holds it while calling reset()
+        self.lock = threading.RLock()
         self.use_kernel = use_kernel
         self.collapse_threshold = collapse_threshold
         self.evict_after = evict_after
@@ -193,13 +205,14 @@ class KeyedWindow:
         and each fold is logged as a ``CollapseEvent``.
         """
         values = np.asarray(values, np.float32).reshape(-1)
-        if isinstance(keys, str):
-            ids = np.full(values.shape, self.row_id(keys), np.int32)
-        else:
-            ids = np.fromiter(
-                (self.row_id(k) for k in keys), np.int32, count=len(values)
-            )
-        self._ingest(values, ids, weights)
+        with self.lock:
+            if isinstance(keys, str):
+                ids = np.full(values.shape, self.row_id(keys), np.int32)
+            else:
+                ids = np.fromiter(
+                    (self.row_id(k) for k in keys), np.int32, count=len(values)
+                )
+            self._ingest(values, ids, weights)
 
     def record_batches(self, batches) -> int:
         """Coalesce ``[(key, values, weights-or-None), ...]`` into ONE
@@ -219,25 +232,26 @@ class KeyedWindow:
         ids: list[np.ndarray] = []
         ws: list[np.ndarray] = []
         any_weighted = any(w is not None for _, _, w in batches)
-        for key, values, weights in batches:
-            v = np.asarray(values, np.float32).reshape(-1)
-            if v.size == 0:
-                continue
-            vs.append(v)
-            ids.append(np.full(v.size, self.row_id(key), np.int32))
-            if any_weighted:
-                ws.append(
-                    np.ones(v.size, np.float32)
-                    if weights is None
-                    else np.asarray(weights, np.float32).reshape(-1)
-                )
-        if not vs:
-            return 0
-        self._ingest(
-            np.concatenate(vs),
-            np.concatenate(ids),
-            np.concatenate(ws) if any_weighted else None,
-        )
+        with self.lock:
+            for key, values, weights in batches:
+                v = np.asarray(values, np.float32).reshape(-1)
+                if v.size == 0:
+                    continue
+                vs.append(v)
+                ids.append(np.full(v.size, self.row_id(key), np.int32))
+                if any_weighted:
+                    ws.append(
+                        np.ones(v.size, np.float32)
+                        if weights is None
+                        else np.asarray(weights, np.float32).reshape(-1)
+                    )
+            if not vs:
+                return 0
+            self._ingest(
+                np.concatenate(vs),
+                np.concatenate(ids),
+                np.concatenate(ws) if any_weighted else None,
+            )
         return int(sum(v.size for v in vs))
 
     def _ingest(self, values: np.ndarray, ids: np.ndarray, weights) -> None:
@@ -286,7 +300,8 @@ class KeyedWindow:
     @property
     def events(self) -> "deque[CollapseEvent]":
         """Collapse-transition log (materializes any parked outputs)."""
-        self._materialize_events()
+        with self.lock:
+            self._materialize_events()
         return self._events
 
     # ------------------------------------------------------------------ #
@@ -294,10 +309,11 @@ class KeyedWindow:
         """Window-local per-key quantiles straight off the device bank
         (one fused bank-query executable for all qs, indexed at the key's
         row)."""
-        rid = self.key_to_row.get(key)
-        if rid is None:
-            raise KeyError(f"no values recorded for key {key!r}")
-        out = np.asarray(self.engine.quantiles(self.bank, qs))
+        with self.lock:
+            rid = self.key_to_row.get(key)
+            if rid is None:
+                raise KeyError(f"no values recorded for key {key!r}")
+            out = np.asarray(self.engine.quantiles(self.bank, qs))
         return [float(v) for v in out[rid]]
 
     def all_quantiles(self, qs) -> dict[str, list[float]]:
@@ -306,10 +322,12 @@ class KeyedWindow:
         executable answers len(keys) x len(qs) estimates off one cumsum per
         row (gathered across shards when the bank is sharded), instead of a
         per-key (let alone per-q) query loop."""
-        out = np.asarray(self.engine.quantiles(self.bank, qs))
+        with self.lock:
+            out = np.asarray(self.engine.quantiles(self.bank, qs))
+            rows = dict(self.key_to_row)
         return {
             k: [float(v) for v in out[rid]]
-            for k, rid in self.key_to_row.items()
+            for k, rid in rows.items()
             if k != OVERFLOW_KEY
         }
 
@@ -322,7 +340,8 @@ class KeyedWindow:
         reduction; a psum under a sharded engine), then one Algorithm 2
         query answers every q.  NaN when the window is empty.
         """
-        out = np.asarray(self.engine.rollup_quantiles(self.bank, qs))
+        with self.lock:
+            out = np.asarray(self.engine.rollup_quantiles(self.bank, qs))
         return [float(v) for v in out]
 
     def total_mass(self) -> float:
@@ -331,15 +350,17 @@ class KeyedWindow:
         The conservation probe the gateway's accounting tests ride:
         ``ingested mass + recorded shed mass == submitted mass``.
         """
-        return float(np.sum(self.engine.host_rows(self.bank.counts)))
+        with self.lock:
+            return float(np.sum(self.engine.host_rows(self.bank.counts)))
 
     def keys(self) -> list[str]:
         return [k for k in self.key_to_row if k != OVERFLOW_KEY]
 
     def levels(self) -> dict[str, int]:
         """Per-key uniform-collapse level (0 = full resolution)."""
-        lv = self.engine.host_rows(self.bank.level)
-        return {k: int(lv[r]) for k, r in self.key_to_row.items()}
+        with self.lock:
+            lv = self.engine.host_rows(self.bank.level)
+            return {k: int(lv[r]) for k, r in self.key_to_row.items()}
 
     def alphas(self) -> dict[str, float]:
         """Per-key effective relative-error guarantee at the live level."""
@@ -349,9 +370,10 @@ class KeyedWindow:
 
     def drain_events(self) -> list[CollapseEvent]:
         """Hand off (and clear) the collapse-transition log."""
-        self._materialize_events()
-        out = list(self._events)
-        self._events.clear()
+        with self.lock:
+            self._materialize_events()
+            out = list(self._events)
+            self._events.clear()
         return out
 
     def reset(self) -> None:
@@ -363,19 +385,20 @@ class KeyedWindow:
         rows *and* their adapted collapse levels, so stable hot keys stay
         stable across windows.
         """
-        self._window += 1
-        self._materialize_events()  # before rows change hands below
-        levels = self.engine.host_rows(self.bank.level).copy()
-        for key in list(self.key_to_row):
-            if key == OVERFLOW_KEY:
-                continue
-            if self._window - self._last_seen.get(key, self._window) > self.evict_after:
-                rid = self.key_to_row.pop(key)
-                self._last_seen.pop(key, None)
-                self._free.append(rid)
-                levels[rid] = 0  # fresh tenants start at full resolution
-        self._levels = levels.astype(np.int64)
-        self.bank = self.engine.reset(self.bank, levels.astype(np.int32))
+        with self.lock:
+            self._window += 1
+            self._materialize_events()  # before rows change hands below
+            levels = self.engine.host_rows(self.bank.level).copy()
+            for key in list(self.key_to_row):
+                if key == OVERFLOW_KEY:
+                    continue
+                if self._window - self._last_seen.get(key, self._window) > self.evict_after:
+                    rid = self.key_to_row.pop(key)
+                    self._last_seen.pop(key, None)
+                    self._free.append(rid)
+                    levels[rid] = 0  # fresh tenants start at full resolution
+            self._levels = levels.astype(np.int64)
+            self.bank = self.engine.reset(self.bank, levels.astype(np.int32))
 
 
 class KeyedAggregator:
@@ -405,20 +428,26 @@ class KeyedAggregator:
         The bank moves host-side in one pytree transfer (an all_gather per
         leaf when the window spans processes — every flushing host then
         aggregates the same totals, keeping the host tier replicated).
+
+        Holds ``window.lock`` across the read-then-reset so a concurrent
+        writer (the ingest gateway's drain thread) can neither donate the
+        bank away mid-read nor slip a record between the snapshot and the
+        reset (which would silently drop it).
         """
-        bank_h = window.engine.host_bank(window.bank)
-        counts = np.asarray(bank_h.counts)
-        for key, rid in window.key_to_row.items():
-            if counts[rid] == 0:
-                continue
-            host = sbank.to_host(bank_h, window.spec, rid)
-            if key in self.totals:
-                self.totals[key].merge(host)
-            else:
-                self.totals[key] = host
-        self.events.extend(window.drain_events())
-        self.windows_flushed += 1
-        window.reset()
+        with window.lock:
+            bank_h = window.engine.host_bank(window.bank)
+            counts = np.asarray(bank_h.counts)
+            for key, rid in window.key_to_row.items():
+                if counts[rid] == 0:
+                    continue
+                host = sbank.to_host(bank_h, window.spec, rid)
+                if key in self.totals:
+                    self.totals[key].merge(host)
+                else:
+                    self.totals[key] = host
+            self.events.extend(window.drain_events())
+            self.windows_flushed += 1
+            window.reset()
 
     def quantiles(self, key: str, qs) -> list[float]:
         return self.totals[key].quantiles(qs)

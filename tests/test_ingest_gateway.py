@@ -245,6 +245,12 @@ def test_http_ingest_payload_validation(rng):
             json.dumps({"key": "", "values": [1.0]}).encode(),
             json.dumps({"key": "/a", "values": "xs"}).encode(),
             json.dumps({"key": "/a", "values": [1.0], "weights": [1.0, 2.0]}).encode(),
+            # malformed *types* must 400 too, not TypeError-crash the handler
+            json.dumps({"key": "/a", "values": [1.0], "deadline_ms": [1]}).encode(),
+            json.dumps({"key": "/a", "values": [1.0], "deadline_ms": "soon"}).encode(),
+            json.dumps({"key": "/a", "values": [{"v": 1.0}]}).encode(),
+            json.dumps({"key": "/a", "values": [1.0], "weights": [{"w": 1}]}).encode(),
+            json.dumps({"key": "/a", "values": [1.0], "weights": "heavy"}).encode(),
         ):
             with pytest.raises(HTTPError) as err:
                 post(bad)
@@ -257,6 +263,37 @@ def test_http_ingest_payload_validation(rng):
             post_req = Request(f"{server.url}/nope", data=b"{}", method="POST")
             urlopen(post_req, timeout=10)
         assert err.value.code == 404
+
+
+def test_stats_json_is_strict_before_first_tick(rng):
+    """Pre-first-tick latency quantiles are NaN host-side; /stats must map
+    them to null — json.dumps would otherwise emit the non-standard token
+    NaN, which strict parsers (browsers, jq) reject."""
+    gw = IngestGateway(make_window(), start=False)
+    with QuantileHTTPServer(TelemetryFacade(make_window(), None), gateway=gw) as server:
+        with urlopen(Request(f"{server.url}/stats"), timeout=10) as resp:
+            raw = resp.read()
+        assert b"NaN" not in raw
+        payload = json.loads(raw, parse_constant=lambda c: (_ for _ in ()).throw(
+            AssertionError(f"non-standard JSON constant {c!r} in /stats")
+        ))
+        assert payload["gateway"]["latency_s"] == [None, None, None]
+
+
+def test_retry_after_is_integer_seconds(rng):
+    """RFC 9110: Retry-After is integer delta-seconds; the sub-second
+    advisory rides X-Retry-After-Ms (preferred by IngestClient)."""
+    gw = IngestGateway(make_window(), max_queue_values=8, start=False)
+    with QuantileHTTPServer(TelemetryFacade(make_window(), None), gateway=gw) as server:
+        client = IngestClient(server.url, max_retries=0)
+        client.ingest("/a", [1.0] * 8)
+        with pytest.raises(IngestError) as err:
+            client.ingest("/a", [1.0])
+        ra = err.value.cause.headers["Retry-After"]
+        assert ra == str(int(ra))  # integer token, no fraction
+        assert int(ra) >= 1
+        assert float(err.value.cause.headers["X-Retry-After-Ms"]) > 0
+        gw.flush()
 
 
 def test_http_ingest_without_gateway_404s(rng):

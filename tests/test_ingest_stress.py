@@ -10,6 +10,7 @@ queue, and stats counters are all hit concurrently):
 """
 
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -18,7 +19,7 @@ from repro.core.jax_sketch import BucketSpec
 from repro.launch.http_api import QuantileHTTPServer, TelemetryFacade, TokenBucket
 from repro.launch.ingest_client import IngestClient, IngestError
 from repro.launch.ingest_gateway import IngestGateway
-from repro.telemetry.keyed import KeyedWindow
+from repro.telemetry.keyed import KeyedAggregator, KeyedWindow
 
 THREADS = 32
 
@@ -147,6 +148,78 @@ def test_overload_degrades_never_500s(rng):
         assert window.total_mass() == float(outcomes["accepted"] * 64)
         assert server.stats.get("ingest_429") == outcomes["throttled"]
         gw.stop()
+
+
+def test_local_recorder_races_gateway_drain(rng):
+    """serve.py's --http-port topology: the serving loop records + flushes
+    into the same KeyedWindow the gateway's drain thread ingests into.  The
+    engine *donates* the bank, so without the window lock one thread can
+    hand an already-deleted buffer to the engine (raises) or lose the other
+    thread's update; with it, total mass is conserved across both writers
+    and the aggregator's read-then-reset flush."""
+    window = KeyedWindow(BucketSpec(), capacity=8)
+    agg = KeyedAggregator(window.spec)
+    gw = IngestGateway(window, tick_interval_s=0.001)
+    rounds, per_round = 25, 100
+    errors = []
+
+    def local_loop():
+        try:
+            for _ in range(rounds):
+                window.record("/local", np.ones(per_round, np.float32))
+                agg.flush(window)  # read-then-reset races the drain tick
+        except BaseException as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    t = threading.Thread(target=local_loop)
+    t.start()
+    for _ in range(rounds):
+        gw.submit("/remote", np.ones(per_round))
+    t.join(timeout=120)
+    assert not t.is_alive(), "local recorder hung"
+    assert errors == []
+    gw.stop()  # drains anything still queued
+    st = gw.stats()
+    assert st["ingested_values"] == rounds * per_round
+    assert st["shed_mass"] == 0 and st["drain_errors"] == 0
+    # conservation across both writers: everything either flushed into the
+    # host aggregator or still sits in the live window — nothing vanished
+    agg.flush(window)
+    total = sum(sk.count for sk in agg.totals.values())
+    assert total == 2 * rounds * per_round
+
+
+def test_submit_after_stop_is_refused_exactly():
+    """The stopped check rides the queue lock: once stop()'s final drain
+    ran, no straggler submit can slip a batch in unaccounted — the
+    ingested + shed == accepted invariant stays exact."""
+    window = KeyedWindow(BucketSpec(), capacity=4)
+    gw = IngestGateway(window, tick_interval_s=0.001)
+    stop_now = threading.Event()
+    refused = [0]
+    accepted = [0]
+
+    def submitter():
+        while not stop_now.is_set():
+            try:
+                accepted[0] += gw.submit("/a", [1.0] * 10)["queued"]
+            except RuntimeError:  # gateway stopped: defined refusal
+                refused[0] += 1
+                return
+
+    t = threading.Thread(target=submitter)
+    t.start()
+    deadline = time.monotonic() + 30.0
+    while accepted[0] == 0:  # let the writer land at least one batch
+        assert time.monotonic() < deadline, "submitter never admitted a batch"
+        time.sleep(0.001)
+    gw.stop()
+    stop_now.set()
+    t.join(timeout=60)
+    assert not t.is_alive()
+    st = gw.stats()
+    assert st["ingested_values"] + st["shed_mass"] == st["accepted_values"] == accepted[0]
+    assert window.total_mass() == float(st["ingested_values"])
 
 
 def test_auth_rejections_under_contention():
