@@ -27,6 +27,7 @@ from benchmarks import (
     kernels_bench,
     sketches,
     telemetry_bench,
+    window_bench,
 )
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
@@ -139,6 +140,15 @@ def main() -> None:
             "ingest_http": lambda: ingest_bench.bench_ingest_http(
                 clients=(1, 8), reqs_per_client=8, overload_reqs=8
             ),
+            # windowed-quantile acceptance rows: the flagship S=64, K=128,
+            # m=4096 fused-vs-host-loop speedup (committed bar: >= 5x) and
+            # the flat-vs-S window-advance cost, tracked in BENCH_baseline
+            "window_query": lambda: window_bench.bench_window_query(
+                configs=((8, 64, 2048), (64, 128, 4096)), iters=3
+            ),
+            "window_advance": lambda: window_bench.bench_window_advance(
+                ss=(8, 64), k=64, m=2048, iters=10
+            ),
             "roofline": roofline_rows,
         }
     elif args.quick:
@@ -182,6 +192,13 @@ def main() -> None:
             ),
             "ingest_http": lambda: ingest_bench.bench_ingest_http(
                 clients=(1, 4, 16), reqs_per_client=16
+            ),
+            "window_query": lambda: window_bench.bench_window_query(
+                configs=((8, 64, 2048), (64, 128, 4096), (256, 128, 2048)),
+                iters=3,
+            ),
+            "window_advance": lambda: window_bench.bench_window_advance(
+                ss=(8, 64, 256), iters=10
             ),
             "roofline": roofline_rows,
         }
@@ -233,6 +250,11 @@ def main() -> None:
             "ingest_http": lambda: ingest_bench.bench_ingest_http(
                 clients=(1, 4, 16, 32), reqs_per_client=32, overload_reqs=16
             ),
+            "window_query": lambda: window_bench.bench_window_query(
+                configs=((8, 64, 2048), (64, 128, 4096), (256, 128, 2048)),
+                iters=5,
+            ),
+            "window_advance": window_bench.bench_window_advance,
             "roofline": roofline_rows,
         }
 

@@ -1,0 +1,165 @@
+"""Windowed-quantile benches: fused ring range merge vs host-looped merges.
+
+The windowed tentpole's acceptance rows:
+
+* ``bench_window_query`` — latency of "quantiles over the last W slices"
+  two ways over identical data: the ring path (O(log S) cached nodes into
+  ONE fused ``bank_range_merge`` + Algorithm 2 executable) vs the
+  pre-ring baseline (W-1 host-looped ``engine.merge`` dispatches, then a
+  separate ``engine.quantiles`` call).  ``speedup`` is the committed
+  acceptance bar: >= 5x fused-over-loop on the flagship S=64, K=128,
+  m=4096 row.  ``range_nodes`` is the cover the merge tree actually used
+  (<= 2 log2 S, vs W leaves without the tree).
+
+* ``bench_window_advance`` — cost of turning the window over: seal the
+  live bank into the ring (leaf write + amortized O(1) cascade merges,
+  all donated in-place slab updates) plus the donated ``engine.reset``
+  that recycles the live bank.  Constant-ish vs S is the point: advancing
+  never touches more than log2(S) nodes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch_bank as sb
+from repro.engine import SketchEngine, WindowRing
+from repro.kernels.ref import BucketSpec
+
+__all__ = ["bench_window_query", "bench_window_advance"]
+
+
+def _time(fn, *args, iters=10) -> float:
+    out = fn(*args)  # compile + warm
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+QS = (0.5, 0.95, 0.99)
+
+
+def _filled_ring(spec, k, s_ring, *, n_per_slice=2048, seed=0):
+    """A ring sealed all the way around, plus the host-side slice copies
+    the loop baseline replays, plus a live bank."""
+    rng = np.random.default_rng(seed)
+    eng = SketchEngine(spec, k)
+    ring = WindowRing(eng, s_ring)
+    host_slices = []
+    for _ in range(s_ring):
+        x = jnp.asarray((rng.pareto(1.0, n_per_slice) + 1.0).astype(np.float32))
+        s = jnp.asarray(rng.integers(0, k, n_per_slice).astype(np.int32))
+        bank = sb.add(sb.empty(spec, k), x, s, spec=spec)
+        host_slices.append(bank)
+        ring.seal(bank)
+    x = jnp.asarray((rng.pareto(1.0, n_per_slice) + 1.0).astype(np.float32))
+    s = jnp.asarray(rng.integers(0, k, n_per_slice).astype(np.int32))
+    live = sb.add(sb.empty(spec, k), x, s, spec=spec)
+    return eng, ring, host_slices, live
+
+
+def bench_window_query(
+    configs=((8, 64, 2048), (64, 128, 4096)), iters: int = 3
+) -> list[dict]:
+    """Range-query latency, fused ring vs host-looped merge, per (S, K, m).
+
+    The loop baseline is what every query cost before the ring: merge the
+    W-1 sealed slice banks pairwise through ``engine.merge`` (W-1 device
+    dispatches with a host round-trip between each), then one
+    ``engine.quantiles``.  The fused path answers from the ring's cached
+    node cover in one compiled executable.  Both see identical data; the
+    parity suite (tests/test_window_ring.py) pins bit-equality, so the
+    delta is pure dispatch structure.
+    """
+    rows = []
+    for s_ring, k, m in configs:
+        spec = BucketSpec(num_buckets=m, offset=-m // 2)
+        eng, ring, host_slices, live = _filled_ring(spec, k, s_ring)
+        w = s_ring  # the widest window: worst case for the loop baseline
+
+        def fused():
+            return ring.quantiles(live, QS, window_slices=w)
+
+        def loop():
+            # engine.merge donates its accumulator, so the baseline (like
+            # any real caller) must start from a scratch bank rather than
+            # consume the live one
+            merged = eng.merge(eng.new_bank(), live)
+            for b in host_slices[-(w - 1):]:
+                merged = eng.merge(merged, b)
+            return eng.quantiles(merged, QS)
+
+        fused_secs = _time(fused, iters=iters)
+        loop_secs = _time(loop, iters=iters)
+        nodes, valid = ring.query_args(w)
+        rows.append(
+            {
+                "bench": "window_query",
+                "S": s_ring,
+                "K": k,
+                "m": m,
+                "window": w,
+                "range_nodes": int(valid.sum()),
+                "loop_dispatches": w,  # W-1 merges + 1 query
+                "fused_ms": round(fused_secs * 1e3, 3),
+                "loop_ms": round(loop_secs * 1e3, 3),
+                "speedup": round(loop_secs / fused_secs, 2),
+            }
+        )
+    return rows
+
+
+def bench_window_advance(
+    ss=(8, 64, 256), k: int = 128, m: int = 2048, iters: int = 20
+) -> list[dict]:
+    """Window-advance (seal + recycle) cost vs ring size.
+
+    One advance = copy the live bank into its leaf slot (donated slab
+    update), run the amortized cascade (~1 merge/seal), and recycle the
+    live bank through the donated ``engine.reset``.  The slab grows with
+    S but the per-advance work does not — the row to watch is ms staying
+    flat as S goes 8 -> 256.
+    """
+    rows = []
+    for s_ring in ss:
+        spec = BucketSpec(num_buckets=m, offset=-m // 2)
+        eng, ring, _, live = _filled_ring(spec, k, s_ring, n_per_slice=512)
+        bank = live
+
+        def advance():
+            nonlocal bank
+            ring.seal(bank)
+            bank = eng.reset(bank)
+            return bank
+
+        # warm every cascade depth (and the reset executable) first
+        for _ in range(s_ring):
+            advance()
+        jax.block_until_ready(bank)
+        merges0 = ring.node_merges
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            advance()
+        jax.block_until_ready(bank)
+        secs = (time.perf_counter() - t0) / iters
+        rows.append(
+            {
+                "bench": "window_advance",
+                "S": s_ring,
+                "K": k,
+                "m": m,
+                "advance_ms": round(secs * 1e3, 3),
+                "merges_per_advance": round(
+                    (ring.node_merges - merges0) / iters, 2
+                ),
+            }
+        )
+    return rows

@@ -11,15 +11,18 @@ from repro.engine.tables import (
     device_value_table,
     padded_row_count,
 )
-from repro.engine.engine import SketchEngine, shared_engine
+from repro.engine.engine import SketchEngine, shared_engine, window_merge_bank
+from repro.engine.ring import WindowRing
 from repro.engine.sharded import ShardedBank, ShardedEngine, make_engine
 
 __all__ = [
     "SketchEngine",
     "ShardedEngine",
     "ShardedBank",
+    "WindowRing",
     "make_engine",
     "shared_engine",
+    "window_merge_bank",
     "bucket_value_table",
     "device_value_table",
     "padded_row_count",

@@ -35,6 +35,8 @@ row-sharded subclass (``repro.engine.sharded.ShardedEngine``) can reuse
 these exact call paths under ``shard_map``:
 
 * ``"bank"``   — the SketchBank pytree (row axis leading on every leaf);
+* ``"slab"``   — a WindowRing slab pytree (leading *node* axis, then the
+  bank row axis on every leaf — replicated over nodes, sharded over rows);
 * ``"rows"``   — a per-row ``(K,)`` array (collapse targets, reset levels);
 * ``"batch"``  — a streamed batch axis (values / weights), replicated;
 * ``"ids"``    — like batch, but carries *global* row ids the sharded
@@ -56,9 +58,10 @@ from repro.core import jax_sketch
 from repro.core import sketch_bank as sbank
 from repro.core.sketch_bank import SketchBank
 from repro.engine.tables import next_pow2
+from repro.kernels import ops
 from repro.kernels.ref import MAX_COLLAPSE_LEVEL, BucketSpec, bank_quantiles_ref
 
-__all__ = ["SketchEngine", "shared_engine"]
+__all__ = ["SketchEngine", "shared_engine", "window_merge_bank"]
 
 _MIN_BATCH = 32  # smallest padded ingest batch (executable-count floor)
 
@@ -97,6 +100,116 @@ def shared_engine(
 def _zero_where(mask: jnp.ndarray, arr: jnp.ndarray) -> jnp.ndarray:
     """``where(mask, 0, arr)`` without dtype promotion (int counters stay int)."""
     return jnp.where(mask, jnp.zeros_like(arr), arr)
+
+
+def window_merge_bank(
+    slab: SketchBank,
+    bank: SketchBank,
+    nodes: jnp.ndarray,
+    valid: jnp.ndarray,
+    live: jnp.ndarray,
+    *,
+    spec: BucketSpec,
+    use_kernel: bool = False,
+) -> SketchBank:
+    """Traced body of a window query: gather + fused range merge -> one bank.
+
+    Gathers the ``nodes`` (shape ``(D,)``, int32, masked by ``valid``
+    (D,) float 0/1 — padding entries point anywhere and contribute
+    nothing) out of the ring slab, appends the live bank as one more slice
+    gated by the ``live`` scalar, reconciles every slice row to the
+    range's per-row max collapse level, and reduces the slice axis — the
+    pos and neg stores ride ONE ``ops.bank_range_merge`` dispatch as a
+    stacked ``(D+1, 2K, m)`` block.  Returns a float32 ``SketchBank``
+    holding the merged rows, bit-identical (for integer-valued counts) to
+    sequentially ``sketch_bank.merge``-ing the selected slices.
+
+    Shard-safe: every op is row-local (the node axis is replicated per
+    shard), so the same body runs under the base jit and under the
+    sharded engine's ``shard_map``.
+
+    Two runtime paths behind a ``lax.cond``, decided *before* any count
+    data moves (only the tiny ``(D+1, K)`` level gather is unconditional):
+
+    * **steady state** — every live slice row already sits at the range
+      max level (no folds anywhere, the common case once collapse has
+      settled): the merge is a weighted accumulate of slab slices read
+      in place, ONE streaming pass over the node data with no gather
+      copy and no concat;
+    * **reconciliation** — gather + stack the cover into a
+      ``(D+1, 2K, m)`` block and run the fused ``ops.bank_range_merge``
+      (dead slices dropped inside the merge via ``valid``, never by a
+      mask multiply over the slab).
+    """
+    f32 = jnp.float32
+    k = bank.level.shape[0]
+    def take(leaf):
+        return jnp.take(leaf, nodes, axis=0)
+
+    def stack(node_leaf, bank_leaf):
+        return jnp.concatenate(
+            [node_leaf.astype(f32), bank_leaf.astype(f32)[None]], axis=0
+        )
+
+    mask = jnp.concatenate(
+        [valid.astype(f32).reshape(-1), live.astype(f32).reshape(1)]
+    )  # (D+1,)
+    alive = mask > 0
+    lvl = jnp.concatenate([take(slab.level), bank.level[None]], axis=0)
+    target = jnp.max(jnp.where(alive[:, None], lvl, 0), axis=0)  # (K,)
+    delta = target[None, :] - lvl  # (D+1, K)
+    # dead slices: any delta sign; live ones: >= 0 by construction
+    steady = jnp.all(jnp.where(alive[:, None], delta, 0) == 0)
+
+    def steady_merge(_):
+        # exact for integer-valued f32 counts in any accumulation order,
+        # so node order here matches sequential merges bit-for-bit.  The
+        # node loop is unrolled (static, <= 2 log2 S + 1 slices): XLA CPU
+        # only parallelizes straight-line fusions, so an unrolled chain of
+        # dynamic slices streams ~5x faster than the same loop under fori
+        acc_pos = mask[-1] * bank.pos.astype(f32)
+        acc_neg = mask[-1] * bank.neg.astype(f32)
+        for d in range(nodes.shape[0]):
+            p = jax.lax.dynamic_slice_in_dim(slab.pos, nodes[d], 1, axis=0)
+            n = jax.lax.dynamic_slice_in_dim(slab.neg, nodes[d], 1, axis=0)
+            acc_pos = acc_pos + mask[d] * p[0].astype(f32)
+            acc_neg = acc_neg + mask[d] * n[0].astype(f32)
+        return acc_pos, acc_neg
+
+    def general_merge(_):
+        counts = jnp.concatenate(
+            [stack(take(slab.pos), bank.pos), stack(take(slab.neg), bank.neg)],
+            axis=1,
+        )  # (D+1, 2K, m)
+        merged = ops.bank_range_merge(
+            counts,
+            jnp.concatenate([delta, delta], axis=1),
+            spec=spec,
+            valid=mask,
+            force=None if use_kernel else "ref",
+        )
+        return merged[:k], merged[k:]
+
+    pos, neg = jax.lax.cond(steady, steady_merge, general_merge, 0)
+
+    def msum(node_leaf, bank_leaf):
+        return jnp.sum(stack(take(node_leaf), bank_leaf) * mask[:, None], axis=0)
+
+    def mext(node_leaf, bank_leaf, fill, red):
+        x = jnp.where(alive[:, None], stack(take(node_leaf), bank_leaf), fill)
+        return red(x, axis=0)
+
+    return SketchBank(
+        pos=pos,
+        neg=neg,
+        zero=msum(slab.zero, bank.zero),
+        overflow=msum(slab.overflow, bank.overflow),
+        underflow=msum(slab.underflow, bank.underflow),
+        summ=msum(slab.summ, bank.summ),
+        vmin=mext(slab.vmin, bank.vmin, jnp.inf, jnp.min),
+        vmax=mext(slab.vmax, bank.vmax, -jnp.inf, jnp.max),
+        level=target,
+    )
 
 
 class SketchEngine:
@@ -429,6 +542,187 @@ class SketchEngine:
             ("bank",),
             a,
             b,
+        )
+
+    # ------------------------------------------------------------------ #
+    # window-ring slab: stacked per-slice banks + fused range queries
+    # ------------------------------------------------------------------ #
+    def new_slab(self, num_nodes: int) -> SketchBank:
+        """A stacked bank-of-banks: every leaf gains a leading node axis.
+
+        Node 0..S-1 are the ring's sealed-slice leaves and S..2S-2 the
+        merge-tree internals (``repro.engine.ring.WindowRing`` owns the
+        indexing); the engine only sees one ``(num_nodes, K, ...)`` pytree
+        it seals into, merges within, and range-queries — all in place via
+        donation, so a ring's memory footprint is exactly one slab.
+        """
+        bank = sbank.empty(
+            self.spec, self.num_sketches, counts_dtype=self.counts_dtype
+        )
+        slab = jax.tree.map(
+            lambda leaf: jnp.array(
+                jnp.broadcast_to(leaf[None], (num_nodes, *leaf.shape))
+            ),
+            bank,
+        )
+        return self._place_slab(slab)
+
+    def _place_slab(self, slab: SketchBank) -> SketchBank:
+        """Hook for subclasses: pin the slab's device placement."""
+        return slab
+
+    def seal_slice(self, slab: SketchBank, bank: SketchBank, node) -> SketchBank:
+        """Write ``bank`` into slab node ``node`` in place (slab donated).
+
+        The bank itself is *not* consumed — the caller recycles it through
+        the donated ``reset`` path (levels surviving), which is what makes
+        window advance allocation-free.
+        """
+
+        def seal_impl(sl, b, i):
+            return jax.tree.map(
+                lambda leaf, x: leaf.at[i].set(x.astype(leaf.dtype)), sl, b
+            )
+
+        return self._compiled(
+            ("slab_seal", slab.level.shape[0]),
+            seal_impl,
+            (0,),
+            ("slab", "bank", "scalar"),
+            ("slab",),
+            slab,
+            bank,
+            jnp.asarray(int(node), jnp.int32),
+        )
+
+    def merge_node(self, slab: SketchBank, dst, left, right) -> SketchBank:
+        """``slab[dst] = merge(slab[left], slab[right])`` in place (donated).
+
+        The merge-tree maintenance step: one Algorithm 4 merge between two
+        resident nodes, never leaving the device.
+        """
+
+        def node_impl(sl, d, a, b):
+            lhs = jax.tree.map(lambda leaf: leaf[a], sl)
+            rhs = jax.tree.map(lambda leaf: leaf[b], sl)
+            merged = sbank.merge(lhs, rhs, spec=self.spec)
+            return jax.tree.map(
+                lambda leaf, x: leaf.at[d].set(x.astype(leaf.dtype)), sl, merged
+            )
+
+        i32 = jnp.int32
+        return self._compiled(
+            ("slab_merge_node", slab.level.shape[0]),
+            node_impl,
+            (0,),
+            ("slab", "scalar", "scalar", "scalar"),
+            ("slab",),
+            slab,
+            jnp.asarray(int(dst), i32),
+            jnp.asarray(int(left), i32),
+            jnp.asarray(int(right), i32),
+        )
+
+    def window_query(
+        self, slab: SketchBank, bank: SketchBank, nodes, valid, include_live, qs
+    ) -> jnp.ndarray:
+        """Per-row quantiles over a slice range: ``(K, len(qs))``.
+
+        ``nodes`` / ``valid`` are the ring's padded O(log S) node cover of
+        the range (``WindowRing.query_args``); ``include_live`` gates the
+        un-sealed head slice.  The whole thing — gather, level
+        reconciliation, slice reduction, Algorithm 2 — is ONE executable
+        around ONE fused ``bank_range_merge`` dispatch, vs W-1 host-looped
+        ``merge`` calls plus a separate query.  Not donated: querying must
+        not consume ring or bank.
+        """
+        qf = np.atleast_1d(np.asarray(qs, np.float32))
+        nodes = np.asarray(nodes, np.int32).reshape(-1)
+        valid = np.asarray(valid, np.float32).reshape(-1)
+        from repro.engine.tables import device_value_table
+
+        def query_impl(sl, b, nd, vm, lv, q, t):
+            mb = window_merge_bank(
+                sl, b, nd, vm, lv, spec=self.spec, use_kernel=self.use_kernel
+            )
+            return ops.bank_quantiles(
+                mb.pos,
+                mb.neg,
+                mb.zero,
+                mb.vmin,
+                mb.vmax,
+                mb.level,
+                q,
+                spec=self.spec,
+                force=None if self.use_kernel else "ref",
+                table=t,
+            )
+
+        return self._compiled(
+            ("window_query", slab.level.shape[0], nodes.size, qf.size),
+            query_impl,
+            (),
+            ("slab", "bank", "scalar", "scalar", "scalar", "scalar", "scalar"),
+            ("rowsq",),
+            slab,
+            bank,
+            jnp.asarray(nodes),
+            jnp.asarray(valid),
+            jnp.asarray(1.0 if include_live else 0.0, jnp.float32),
+            jnp.asarray(qf),
+            device_value_table(self.spec),
+        )
+
+    def window_rollup(
+        self, slab: SketchBank, bank: SketchBank, nodes, valid, include_live, qs
+    ) -> jnp.ndarray:
+        """Quantiles of every row over a slice range, shape ``(len(qs),)``.
+
+        ``rollup_quantiles`` with the window's fused range merge in front:
+        merged rows collapse to their max level, sum into one bucket array,
+        and answer one Algorithm 2 query.  ``ShardedEngine`` overrides this
+        with the psum form.
+        """
+        qf = np.atleast_1d(np.asarray(qs, np.float32))
+        nodes = np.asarray(nodes, np.int32).reshape(-1)
+        valid = np.asarray(valid, np.float32).reshape(-1)
+        from repro.engine.tables import device_value_table
+
+        def rollup_impl(sl, b, nd, vm, lv, q, t):
+            mb = window_merge_bank(
+                sl, b, nd, vm, lv, spec=self.spec, use_kernel=self.use_kernel
+            )
+            gmax = jnp.max(mb.level)
+            mb = sbank.collapse_to(
+                mb,
+                jnp.broadcast_to(gmax, mb.level.shape),
+                spec=self.spec,
+                use_kernel=self.use_kernel,
+            )
+            return bank_quantiles_ref(
+                mb.pos.sum(0)[None],
+                mb.neg.sum(0)[None],
+                mb.zero.sum()[None],
+                jnp.min(mb.vmin)[None],
+                jnp.max(mb.vmax)[None],
+                gmax[None],
+                q,
+                t,
+            )[0]
+
+        return self._compiled(
+            ("window_rollup", slab.level.shape[0], nodes.size, qf.size),
+            rollup_impl,
+            (),
+            ("slab", "bank", "scalar", "scalar", "scalar", "scalar", "scalar"),
+            ("scalar",),
+            slab,
+            bank,
+            jnp.asarray(nodes),
+            jnp.asarray(valid),
+            jnp.asarray(1.0 if include_live else 0.0, jnp.float32),
+            jnp.asarray(qf),
+            device_value_table(self.spec),
         )
 
     # ------------------------------------------------------------------ #

@@ -50,7 +50,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import sketch_bank as sbank
 from repro.core.sketch_bank import SketchBank
-from repro.engine.engine import SketchEngine, _pad_to_bucket
+from repro.engine.engine import SketchEngine, _pad_to_bucket, window_merge_bank
 from repro.engine.tables import device_value_table
 from repro.kernels.ref import BucketSpec, bank_quantiles_ref
 from repro.launch.mesh import make_keys_mesh
@@ -59,6 +59,8 @@ from repro.sharding.rules import (
     bank_pspec,
     bank_sharding,
     batch_pspec,
+    slab_pspec,
+    slab_sharding,
 )
 
 __all__ = ["ShardedEngine", "ShardedBank", "make_engine"]
@@ -225,6 +227,14 @@ class ShardedEngine(SketchEngine):
             a = np.concatenate([a, np.zeros(self.num_sketches - a.shape[0], a.dtype)])
         return self._put_global(a, NamedSharding(self.mesh, bank_pspec()))
 
+    def _place_slab(self, slab: SketchBank) -> SketchBank:
+        sh = slab_sharding(self.mesh)
+        if self.spans_processes:
+            return jax.tree.map(
+                lambda x: self._put_global(np.asarray(x), sh), slab
+            )
+        return jax.device_put(slab, sh)
+
     def _wrap(
         self,
         fn: Callable,
@@ -242,6 +252,7 @@ class ShardedEngine(SketchEngine):
         """
         kind_spec = {
             "bank": bank_pspec(),
+            "slab": slab_pspec(),
             "rows": bank_pspec(),
             "batch": batch_pspec(),
             "ids": batch_pspec(),
@@ -252,6 +263,8 @@ class ShardedEngine(SketchEngine):
         def out_spec(kind: str) -> P:
             if gather and kind in ("rows", "rowsq"):
                 return P()  # gathered below: replicated on every process
+            if kind == "slab":
+                return slab_pspec()
             return bank_pspec()
 
         rows_local = self.rows_per_shard
@@ -386,6 +399,71 @@ class ShardedEngine(SketchEngine):
         else:
             self._hits += 1
         return exe(bank, jnp.asarray(qf), table)
+
+    def window_rollup(
+        self, slab: SketchBank, bank: SketchBank, nodes, valid, include_live, qs
+    ) -> jnp.ndarray:
+        """Windowed fleet rollup: fused range merge shard-locally, then the
+        same pmax + collapse + psum reduction as ``rollup_quantiles`` —
+        the window changes nothing about the collective story (still one
+        psum per store)."""
+        qf = np.atleast_1d(np.asarray(qs, np.float32))
+        nodes = np.asarray(nodes, np.int32).reshape(-1)
+        valid = np.asarray(valid, np.float32).reshape(-1)
+        spec = self.spec
+
+        def rollup_impl(sl, b, nd, vm, lv, q, t):
+            mb = window_merge_bank(
+                sl, b, nd, vm, lv, spec=spec, use_kernel=self.use_kernel
+            )
+            gmax = jax.lax.pmax(jnp.max(mb.level), BANK_ROW_AXIS)
+            mb = sbank.collapse_to(
+                mb,
+                jnp.broadcast_to(gmax, mb.level.shape),
+                spec=spec,
+                use_kernel=self.use_kernel,
+            )
+            pos = jax.lax.psum(mb.pos.sum(0), BANK_ROW_AXIS)
+            neg = jax.lax.psum(mb.neg.sum(0), BANK_ROW_AXIS)
+            zero = jax.lax.psum(mb.zero.sum(), BANK_ROW_AXIS)
+            vmin = jax.lax.pmin(jnp.min(mb.vmin), BANK_ROW_AXIS)
+            vmax = jax.lax.pmax(jnp.max(mb.vmax), BANK_ROW_AXIS)
+            return bank_quantiles_ref(
+                pos[None],
+                neg[None],
+                zero[None],
+                vmin[None],
+                vmax[None],
+                gmax[None],
+                q,
+                t,
+            )[0]
+
+        sm = shard_map(
+            rollup_impl,
+            mesh=self.mesh,
+            in_specs=(slab_pspec(), bank_pspec(), P(), P(), P(), P(), P()),
+            out_specs=P(),
+        )
+        table = device_value_table(spec)
+        args = (
+            slab,
+            bank,
+            jnp.asarray(nodes),
+            jnp.asarray(valid),
+            jnp.asarray(1.0 if include_live else 0.0, jnp.float32),
+            jnp.asarray(qf),
+            table,
+        )
+        key = ("window_rollup", slab.level.shape[0], nodes.size, qf.size)
+        exe = self._cache.get(key)
+        if exe is None:
+            self._misses += 1
+            exe = jax.jit(sm).lower(*args).compile()
+            self._cache[key] = exe
+        else:
+            self._hits += 1
+        return exe(*args)
 
 
 class ShardedBank:

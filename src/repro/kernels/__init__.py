@@ -10,6 +10,8 @@ UDDSketch uniform-collapse fold, TPU-native:
 * ``ddsketch_ingest``   — fused single-dispatch full ingest: bucketize +
   bin + the six per-row aux stats in one program,
 * ``bank_quantiles``    — fused cumsum + searchsorted bank query,
+* ``bank_range_merge``  — fused slice-range merge for windowed quantiles
+  (fold each slice row to the range's max collapse level, reduce slices),
 * ``fold_pairs``        — uniform-collapse resolution fold (gamma -> gamma^2),
 * ``ref``               — pure-jnp semantic oracles / XLA fallback,
 * ``ops``               — backend dispatch (``force=`` pins a path,
@@ -21,6 +23,7 @@ from repro.kernels.ops import (  # noqa: F401
     IngestStats,
     bank_histograms,
     bank_quantiles,
+    bank_range_merge,
     ddsketch_histogram,
     ddsketch_scatter,
     dispatch_stats,
@@ -33,6 +36,7 @@ from repro.kernels.ops import (  # noqa: F401
 from repro.kernels.ref import (  # noqa: F401
     MAX_COLLAPSE_LEVEL,
     bank_quantiles_ref,
+    bank_range_merge_ref,
     compact_triples,
     fold_pairs_ref,
     histogram_ref,

@@ -41,15 +41,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.bank_quantiles import bank_quantiles_pallas
+from repro.kernels.bank_range_merge import bank_range_merge_pallas
 from repro.kernels.ddsketch_hist import histogram_pallas
 from repro.kernels.ddsketch_ingest import ddsketch_ingest_pallas
 from repro.kernels.ddsketch_scatter import MAX_RESIDENT_ROWS, ddsketch_scatter_pallas
 from repro.kernels.ddsketch_seg_hist import segment_histogram_pallas
 from repro.kernels.fold_pairs import fold_pairs_pallas
 from repro.kernels.ref import (
+    MAX_COLLAPSE_LEVEL,
     BucketSpec,
     IngestStats,
     bank_quantiles_ref,
+    bank_range_merge_ref,
     compact_triples,
     composite_keys,
     fold_pairs_ref,
@@ -67,6 +70,7 @@ __all__ = [
     "bank_histograms",
     "fused_ingest",
     "bank_quantiles",
+    "bank_range_merge",
     "insert_method",
     "dispatch_stats",
     "reset_dispatch_stats",
@@ -83,7 +87,13 @@ _METHOD_ENV = "REPRO_INSERT_METHOD"
 # ref-fallback warns once per call site and counts here.  Counts are per
 # *trace* (the decision is made on static shapes at trace time), so an AOT
 # executable that falls back registers once, not once per call.
-_DISPATCH_STATS: dict[str, dict[str, int]] = {"tall_bank_fallbacks": {}}
+_DISPATCH_STATS: dict[str, dict[str, int]] = {
+    "tall_bank_fallbacks": {},
+    # per-*trace* count of fused range-merge dispatches: the windowed-query
+    # acceptance test asserts a W-slice window query registers exactly one
+    # (one device program, not W-1 host-looped merges)
+    "range_merge_calls": {},
+}
 _TALL_BANK_WARNED: set[str] = set()
 
 
@@ -561,5 +571,53 @@ def bank_quantiles(
         qs,
         table,
         row_tile=row_tile,
+        interpret=impl == "interpret",
+    )
+
+
+def bank_range_merge(
+    counts: jnp.ndarray,
+    deltas: jnp.ndarray,
+    *,
+    spec: BucketSpec,
+    valid: jnp.ndarray | None = None,
+    row_tile: int = 8,
+    bucket_tile: int = 512,
+    force: str | None = None,  # "pallas" | "interpret" | "ref" | None(auto)
+) -> jnp.ndarray:
+    """Fused slice-range merge: ``counts (D, R, m), deltas (D, R) -> (R, m)``.
+
+    The windowed-quantile tentpole: fold every slice row ``counts[d, r]``
+    by ``deltas[d, r]`` uniform-collapse levels (reconciling the window's
+    mixed per-row resolutions to the range max) and reduce the slice axis —
+    a whole W-slice range merge in ONE dispatch, instead of W-1 host-looped
+    ``sketch_bank.merge`` calls.  ``valid`` is an optional ``(D,)`` 0/1
+    slice mask: dead slices contribute nothing WITHOUT their counts being
+    zeroed first (masking is folded into the merge itself, saving a full
+    pass over the slab).  Deltas are clipped to ``[0, MAX_COLLAPSE_LEVEL]``
+    before masking.  Exact for integer-valued counts in any accumulation
+    order, so Pallas and XLA paths agree bit-for-bit (contract:
+    ``ref.bank_range_merge_ref``).
+
+    Each trace increments ``dispatch_stats()["range_merge_calls"]`` — the
+    one-dispatch observability hook the window tests assert on.
+    """
+    _check_force(force)
+    calls = _DISPATCH_STATS["range_merge_calls"]
+    calls["bank_range_merge"] = calls.get("bank_range_merge", 0) + 1
+    impl = _impl(force, counts.shape[1], row_tile)
+    if impl == "ref":
+        return bank_range_merge_ref(counts, deltas, spec=spec, valid=valid)
+    d = jnp.clip(deltas.astype(jnp.int32), 0, MAX_COLLAPSE_LEVEL)
+    if valid is not None:
+        # sentinel delta -1 matches no level gate in the kernel, so dead
+        # slices drop out with their counts untouched
+        d = jnp.where(jnp.asarray(valid).reshape(-1)[:, None] > 0, d, -1)
+    return bank_range_merge_pallas(
+        counts,
+        d,
+        spec=spec,
+        row_tile=row_tile,
+        bucket_tile=bucket_tile,
         interpret=impl == "interpret",
     )

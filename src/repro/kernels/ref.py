@@ -32,6 +32,8 @@ __all__ = [
     "scatter_histogram_ref",
     "fused_ingest_ref",
     "bank_quantiles_ref",
+    "bank_range_merge_ref",
+    "multi_fold_destinations",
 ]
 
 # Hard ceiling on the uniform-collapse level (UDDSketch, Epicoco et al. 2020).
@@ -478,35 +480,64 @@ def fused_ingest_ref(
 # --------------------------------------------------------------------- #
 # fused bank quantile query (Algorithm 2 over all rows and qs at once)
 # --------------------------------------------------------------------- #
-def _bank_quantiles_math(pos, neg, zero, vmin, vmax, level, qs, table):
+def _bank_quantiles_math(pos, neg, zero, vmin, vmax, level, qs, table, *, gather=False):
     """Shared formulation of the fused query; see ``bank_quantiles_ref``.
 
     Operates on a ``(K, m)`` row block with per-row scalars shaped ``(K, 1)``
     so the same code runs as the XLA oracle and inside the Pallas row-tile
     kernel (where ``K`` is the row tile).  ``qs`` is static-length; the loop
     unrolls, answering every q off one cumsum per row.
+
+    ``gather`` switches the *selection-only* steps between bit-identical
+    formulations.  The kernel keeps ``gather=False`` (masked loops, full
+    lane scans, masked sums — the forms Mosaic lowers).  The XLA oracle
+    uses ``gather=True``: the rank search is a per-row binary
+    ``searchsorted`` (identical count on a nondecreasing cumsum) and the
+    answer value is gathered straight out of ``table`` at the one
+    ``(row, lane)`` each q actually reads — the dense per-level value
+    plane and the mirrored value line are never materialized.  Both paths
+    select the same elements, so results are bit-equal — the
+    interpret-mode parity suite pins this.
     """
     num_levels = table.shape[0]
     m = pos.shape[1]
     lclip = jnp.clip(level, 0, num_levels - 1)
-    vals = jnp.zeros_like(pos)
-    for lev in range(num_levels):
-        vals = jnp.where(lclip == lev, table[lev][None, :], vals)
-    line_vals = jnp.concatenate(
-        [-vals[:, ::-1], jnp.zeros_like(zero), vals], axis=1
-    )
+    if not gather:
+        vals = jnp.zeros_like(pos)
+        for lev in range(num_levels):
+            vals = jnp.where(lclip == lev, table[lev][None, :], vals)
+        line_vals = jnp.concatenate(
+            [-vals[:, ::-1], jnp.zeros_like(zero), vals], axis=1
+        )
     line_counts = jnp.concatenate([neg[:, ::-1], zero, pos], axis=1)
     n = jnp.sum(line_counts, axis=1, keepdims=True)
     cum = jnp.cumsum(line_counts, axis=1)
-    lanes = jax.lax.broadcasted_iota(jnp.int32, line_counts.shape, 1)
+    if gather:
+        search = jax.vmap(lambda c, r: jnp.searchsorted(c, r, side="right"))
+        tflat = table.reshape(-1)
+        lrow = lclip.reshape(-1, 1) * m  # row offset into the flat table
+    else:
+        lanes = jax.lax.broadcasted_iota(jnp.int32, line_counts.shape, 1)
     cols = []
     for qi in range(qs.shape[-1]):
         qf = qs.reshape(-1)[qi]
         rank = qf * jnp.maximum(n - 1.0, 0.0)
-        # searchsorted(cum, rank, side="right") == #{cum <= rank}
-        idx = jnp.sum((cum <= rank).astype(jnp.int32), axis=1, keepdims=True)
+        if gather:
+            idx = search(cum, rank.reshape(-1)).reshape(-1, 1)
+        else:
+            # searchsorted(cum, rank, side="right") == #{cum <= rank}
+            idx = jnp.sum((cum <= rank).astype(jnp.int32), axis=1, keepdims=True)
         idx = jnp.clip(idx, 0, 2 * m)
-        est = jnp.sum(jnp.where(lanes == idx, line_vals, 0.0), axis=1, keepdims=True)
+        if gather:
+            # line lane j maps to -vals[m-1-j] / 0 / vals[j-m-1]; read the
+            # one table cell behind it instead of building the line
+            vneg = -jnp.take(tflat, lrow + jnp.clip(m - 1 - idx, 0, m - 1))
+            vpos = jnp.take(tflat, lrow + jnp.clip(idx - m - 1, 0, m - 1))
+            est = jnp.where(idx < m, vneg, jnp.where(idx == m, 0.0, vpos))
+        else:
+            est = jnp.sum(
+                jnp.where(lanes == idx, line_vals, 0.0), axis=1, keepdims=True
+            )
         est = jnp.clip(est, vmin, vmax)  # exact-extrema clamp
         est = jnp.where(qf <= 0.0, vmin, jnp.where(qf >= 1.0, vmax, est))
         cols.append(jnp.where(n > 0, est, jnp.nan))
@@ -543,6 +574,7 @@ def bank_quantiles_ref(
         level.astype(jnp.int32).reshape(-1, 1),
         qf,
         table.astype(jnp.float32),
+        gather=True,
     )
 
 
@@ -585,3 +617,95 @@ def fold_pairs_ref(counts: jnp.ndarray, *, spec: BucketSpec) -> jnp.ndarray:
     flat = counts.reshape(-1, m)
     out = jnp.zeros_like(flat).at[:, dst].add(flat)
     return out.reshape(counts.shape)
+
+
+# --------------------------------------------------------------------- #
+# fused slice-range merge: fold every slice row to its per-row target
+# level and reduce the slice axis (windowed-quantile tentpole)
+# --------------------------------------------------------------------- #
+def multi_fold_destinations(spec: BucketSpec, delta: int):
+    """Static ``(m,)`` destination indices of a ``delta``-level fold.
+
+    ``shift_key`` nests (ceil(ceil(k/2)/2) == ceil(k/4)), so folding
+    ``delta`` levels at once sends bucket i (key ``offset + i``) straight to
+    ``ceil((offset + i) / 2**delta) - offset`` — identical to iterating
+    ``fold_pairs_ref`` ``delta`` times.  With the shipped geometries
+    (offset <= 0 <= offset + m - 1, what ``fold_destination_range``
+    enforces) every destination stays inside [0, m) for any delta, which
+    this asserts statically.
+    """
+    import numpy as np
+
+    keys = np.arange(spec.num_buckets, dtype=np.int64) + spec.offset
+    dst = -((-keys) >> delta) - spec.offset  # ceil(k / 2**delta) - offset
+    if dst.min() < 0 or dst.max() > spec.num_buckets - 1:
+        raise ValueError(
+            f"multi-level fold (delta={delta}) destinations "
+            f"[{dst.min()}, {dst.max()}] escape [0, {spec.num_buckets - 1}] "
+            f"for offset={spec.offset}"
+        )
+    return dst.astype(np.int32)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def bank_range_merge_ref(
+    counts: jnp.ndarray,
+    deltas: jnp.ndarray,
+    *,
+    spec: BucketSpec,
+    valid: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Oracle for the fused range merge: ``(D, R, m) -> (R, m)``.
+
+    Row r of the output is the per-bucket sum of the D slice rows
+    ``counts[d, r]`` after folding each one ``deltas[d, r]`` collapse
+    levels — i.e. Algorithm 4's merge over the slice axis with the
+    UDDSketch level reconciliation applied per (slice, row).  Callers pass
+    ``deltas[d, r] = target_level[r] - level[d, r]`` (pre-clipped to
+    ``[0, MAX_COLLAPSE_LEVEL]``; this clips again defensively).  ``valid``
+    is an optional ``(D,)`` 0/1 slice mask: dead slices contribute
+    *nothing* (their counts need not be zeroed — masking rides the
+    contraction weights and a delta sentinel, never a pass over the data).
+
+    Two runtime paths behind a ``lax.cond``:
+
+    * **steady state** (every live delta is 0 — the common case: slice
+      levels already agree with the range max): the whole merge is ONE
+      mask contraction over the slice axis, a single pass over the data;
+    * **reconciliation**: folds are linear, so slices are grouped by delta
+      with a per-row one-hot contraction of the D axis (one data pass,
+      (L, D) @ (D, m) per row), then each group is folded once —
+      ``MAX_COLLAPSE_LEVEL`` static scatters total instead of one per
+      (slice, delta).
+
+    Exact for integer-valued counts in any accumulation order (the same
+    2^24 float32 contract as the dense stores), so the fused result is
+    bit-identical to sequential ``sketch_bank.merge`` folds; the Pallas
+    twin must match this bit-for-bit.
+    """
+    fold_destination_range(spec)  # static geometry check
+    c = counts.astype(jnp.float32)
+    d = jnp.clip(deltas.astype(jnp.int32), 0, MAX_COLLAPSE_LEVEL)
+    if valid is None:
+        v = jnp.ones((c.shape[0],), jnp.float32)
+    else:
+        v = valid.astype(jnp.float32).reshape(-1)
+        d = jnp.where(v[:, None] > 0, d, -1)  # sentinel: matches no level
+
+    def steady(cc):
+        # no folds anywhere: merge == one weighted sum over the slice axis
+        return jnp.tensordot(v, cc, axes=1, precision=jax.lax.Precision.HIGHEST)
+
+    def reconcile(cc):
+        levels = jnp.arange(MAX_COLLAPSE_LEVEL + 1, dtype=jnp.int32)
+        onehot = (d[:, :, None] == levels).astype(jnp.float32)  # (D, R, L)
+        grouped = jnp.einsum(
+            "drm,drl->lrm", cc, onehot, precision=jax.lax.Precision.HIGHEST
+        )
+        out = grouped[0]
+        for delta in range(1, MAX_COLLAPSE_LEVEL + 1):
+            dst = jnp.asarray(multi_fold_destinations(spec, delta))
+            out = out.at[:, dst].add(grouped[delta])
+        return out
+
+    return jax.lax.cond(jnp.all(d <= 0), steady, reconcile, c)

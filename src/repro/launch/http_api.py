@@ -9,6 +9,14 @@ HTTP with nothing beyond the standard library:
   GET /healthz                             -> {"ok": true}
   GET /quantiles?endpoint=/v1/ep0&q=0.5,0.95,0.99
                                            -> rollup quantiles for one key
+  GET /quantiles?endpoint=/v1/ep0&window=5m
+      (or &slices=4)                       -> time-windowed quantiles over
+                                              the device bank ring (one
+                                              fused range-merge dispatch);
+                                              unparseable durations or
+                                              windows wider than the ring
+                                              are a 400 JSON error, never
+                                              a traceback
   GET /live?q=0.5,0.95,0.99                -> current-window quantiles for
                                               every live endpoint (one
                                               fused bank query)
@@ -16,7 +24,10 @@ HTTP with nothing beyond the standard library:
                                               the union of every endpoint's
                                               current window (one engine
                                               rollup — a psum when the bank
-                                              is sharded)
+                                              is sharded); ``window=`` /
+                                              ``slices=`` select the ring
+                                              window instead of the live
+                                              bank
   GET /report                              -> per-endpoint quantiles +
                                               effective alpha + collapse
                                               transition events
@@ -45,8 +56,11 @@ Write path (``gateway=`` an ``launch.ingest_gateway.IngestGateway``):
                     is full (reject policy); 400 on malformed payloads;
                     413 past ``max_body_bytes``
   GET  /stats    -> {"server": per-server counters (write_errors,
-                    requests, faults fired), "gateway": queue/shed/latency
-                    counters} — the operator's overload dashboard
+                    requests, faults fired), "engine": executable-cache
+                    hit/miss counts + ring occupancy (when the telemetry
+                    source exposes ``engine_stats``), "gateway":
+                    queue/shed/latency counters} — the operator's
+                    overload dashboard
 
 Robustness: a peer closing mid-response used to make ``wfile.write``
 raise ``BrokenPipeError``/``ConnectionResetError``, which
@@ -135,6 +149,24 @@ class TelemetryFacade:
             for ep in sorted(self.aggregator.keys())
         }
 
+    def windowed_quantiles(
+        self, endpoint: str, qs=_DEFAULT_QS, *, window=None, slices=None
+    ) -> list[float]:
+        """Ring-windowed quantiles for one key (one fused range merge)."""
+        return self.window.windowed_quantiles(
+            endpoint, list(qs), window=window, slices=slices
+        )
+
+    def windowed_rollup(
+        self, qs=_DEFAULT_QS, *, window=None, slices=None
+    ) -> list[float]:
+        """Ring-windowed fleet view (union of every key over the window)."""
+        return self.window.windowed_rollup(list(qs), window=window, slices=slices)
+
+    def engine_stats(self) -> dict:
+        """Executable-cache + ring metadata for the /stats payload."""
+        return self.window.engine_stats()
+
 
 class TokenBucket:
     """Process-wide token-bucket rate limiter (thread-safe).
@@ -196,6 +228,31 @@ def _parse_qs_param(query: dict) -> list[float]:
     if not qs or any(not 0.0 <= q <= 1.0 for q in qs):
         raise ValueError(f"q must be comma-separated values in [0, 1], got {raw!r}")
     return qs
+
+
+def _parse_window_params(query: dict) -> tuple[str | None, str | None]:
+    """Extract the optional ``window=``/``slices=`` pair (raw strings).
+
+    Mutual exclusion is checked here; *parsing* (duration suffixes, slice
+    counts, ring bounds) happens in the telemetry tier so the HTTP layer
+    and in-process callers share one validator — its ``ValueError`` maps
+    to a 400 JSON body like every other malformed parameter.
+    """
+    window = query.get("window", [None])[0]
+    slices = query.get("slices", [None])[0]
+    if window is not None and slices is not None:
+        raise ValueError("give either 'window' or 'slices', not both")
+    return window, slices
+
+
+def _nan_to_null(vals) -> list:
+    """JSON-safe quantile list: NaN (empty window) becomes null, not the
+    non-standard ``NaN`` token strict parsers reject."""
+    out = []
+    for v in vals:
+        f = float(v)
+        out.append(None if math.isnan(f) else f)
+    return out
 
 
 def _make_handler(
@@ -299,6 +356,11 @@ def _make_handler(
                     return
                 if url.path == "/stats":
                     payload = {"server": stats.snapshot()}
+                    engine_fn = getattr(telemetry, "engine_stats", None)
+                    if engine_fn is not None:
+                        # executable-cache hit rates + ring occupancy: the
+                        # "is the window tier recompiling?" dashboard
+                        payload["engine"] = engine_fn()
                     if gateway is not None:
                         payload["gateway"] = gateway.stats()
                         # pre-first-tick quantiles are NaN, which json.dumps
@@ -314,6 +376,26 @@ def _make_handler(
                     if endpoint is None:
                         raise ValueError("missing required parameter 'endpoint'")
                     qs = _parse_qs_param(query)
+                    window, slices = _parse_window_params(query)
+                    if window is not None or slices is not None:
+                        fn = getattr(telemetry, "windowed_quantiles", None)
+                        if fn is None:
+                            raise ValueError(
+                                "windowed queries not supported by this "
+                                "telemetry source"
+                            )
+                        vals = fn(endpoint, qs, window=window, slices=slices)
+                        self._reply(
+                            200,
+                            {
+                                "endpoint": endpoint,
+                                "qs": qs,
+                                "window": window,
+                                "slices": slices,
+                                "quantiles": _nan_to_null(vals),
+                            },
+                        )
+                        return
                     vals = telemetry.endpoint_quantiles(endpoint, qs)
                     self._reply(
                         200,
@@ -326,11 +408,30 @@ def _make_handler(
                         {"qs": qs, "endpoints": telemetry.live_endpoint_quantiles(qs)},
                     )
                 elif url.path == "/rollup":
+                    qs = _parse_qs_param(query)
+                    window, slices = _parse_window_params(query)
+                    if window is not None or slices is not None:
+                        wfn = getattr(telemetry, "windowed_rollup", None)
+                        if wfn is None:
+                            raise ValueError(
+                                "windowed queries not supported by this "
+                                "telemetry source"
+                            )
+                        vals = wfn(qs, window=window, slices=slices)
+                        self._reply(
+                            200,
+                            {
+                                "qs": qs,
+                                "window": window,
+                                "slices": slices,
+                                "quantiles": _nan_to_null(vals),
+                            },
+                        )
+                        return
                     fn = getattr(telemetry, "rollup_quantiles", None)
                     if fn is None:  # duck-typed source without a fleet view
                         self._reply(404, {"error": "rollup not supported"})
                         return
-                    qs = _parse_qs_param(query)
                     self._reply(200, {"qs": qs, "quantiles": list(fn(qs))})
                 elif url.path == "/report":
                     self._reply(200, telemetry.endpoint_report(_parse_qs_param(query)))

@@ -23,6 +23,11 @@ the adapter, hardened for the day traffic exceeds what the engine absorbs:
   override or the gateway default); batches still queued past it are
   dropped at drain time and accounted as expired shed mass — a slow
   engine degrades to bounded staleness, not an unbounded backlog;
+* **slice clock** (``slice_interval_s``) — when the window keeps a bank
+  ring (``KeyedWindow(num_slices=...)``), the drain thread seals the live
+  bank into the ring once per interval on a monotonic clock (after the
+  tick's ingest, so a slice never misses values admitted inside its
+  interval); ``flush()`` never advances the clock;
 * **observability** — ``stats()`` snapshots the counters (accepted /
   ingested / shed / rejected / expired / depth / ticks) and the gateway
   dogfoods its own paper: ingest-to-queryable latency per batch goes into
@@ -99,6 +104,7 @@ class IngestGateway:
         sample_stride: int = 8,
         sample_watermark: float = 0.5,
         deadline_s: float | None = None,
+        slice_interval_s: float | None = None,
         faults=None,
         start: bool = True,
     ):
@@ -113,6 +119,22 @@ class IngestGateway:
         self.sample_stride = int(sample_stride)
         self.sample_watermark = float(sample_watermark)
         self.deadline_s = deadline_s
+        if slice_interval_s is not None:
+            if float(slice_interval_s) <= 0:
+                raise ValueError("slice_interval_s must be positive")
+            if getattr(window, "ring", None) is None:
+                raise ValueError(
+                    "slice_interval_s needs a window with a slice ring "
+                    "(KeyedWindow(num_slices=...))"
+                )
+        self.slice_interval_s = (
+            None if slice_interval_s is None else float(slice_interval_s)
+        )
+        self._next_slice_t = (
+            None
+            if self.slice_interval_s is None
+            else time.monotonic() + self.slice_interval_s
+        )
         self.faults = faults
         if faults is not None:
             hooks = getattr(getattr(window, "engine", None), "tick_hooks", None)
@@ -133,6 +155,7 @@ class IngestGateway:
             "rejected_batches": 0,
             "expired_batches": 0,
             "ticks": 0,
+            "slice_advances": 0,
             "engine_calls": 0,
             "drain_errors": 0,
             "stalls": 0,
@@ -258,6 +281,10 @@ class IngestGateway:
                         self._stats["stalls"] += 1
                     time.sleep(stall)
             self._drain_once()
+            # slice clock rides the drain tick: drained values land in the
+            # live bank *before* it can be sealed into the ring, so a slice
+            # never misses ingest that was admitted inside its interval
+            self._maybe_advance_slice()
             time.sleep(self.tick_interval_s)
 
     def _drain_once(self) -> int:
@@ -304,6 +331,35 @@ class IngestGateway:
                 rate = n / drained_s
                 self._drain_rate = 0.8 * self._drain_rate + 0.2 * rate
             return int(n)
+
+    def _maybe_advance_slice(self) -> int:
+        """Seal the window's live bank into its ring once per elapsed
+        ``slice_interval_s`` (monotonic clock, catch-up on stalls).
+
+        Runs only on the drain thread's cadence — ``flush()`` deliberately
+        does NOT advance, so tests and shutdown drains never move the
+        slice clock under the caller.
+        """
+        if self.slice_interval_s is None:
+            return 0
+        advanced = 0
+        now = time.monotonic()
+        while now >= self._next_slice_t:
+            try:
+                self.window.advance_slice()
+            except Exception:
+                # same contract as a failing drain tick: count it, resync
+                # the clock, keep the thread alive
+                with self._lock:
+                    self._stats["drain_errors"] += 1
+                self._next_slice_t = now + self.slice_interval_s
+                break
+            advanced += 1
+            self._next_slice_t += self.slice_interval_s
+        if advanced:
+            with self._lock:
+                self._stats["slice_advances"] += advanced
+        return advanced
 
     # ------------------------------------------------------------------ #
     def flush(self, timeout_s: float = 10.0) -> None:

@@ -65,6 +65,8 @@ class Server:
         max_endpoints: int = 64,
         flush_every: int = 64,
         sketch_shards: int | None = None,
+        window_slices: int | None = None,
+        slice_seconds: float | None = None,
     ):
         self.cfg = cfg
         self.slots = batch_slots
@@ -84,7 +86,11 @@ class Server:
         # in-place bank updates), optionally row-sharded over sketch_shards
         # devices for key counts beyond one device
         self.endpoint_window = KeyedWindow(
-            BucketSpec(), capacity=max_endpoints, num_shards=sketch_shards
+            BucketSpec(),
+            capacity=max_endpoints,
+            num_shards=sketch_shards,
+            num_slices=window_slices,
+            slice_seconds=slice_seconds,
         )
         self.endpoint_agg = KeyedAggregator(self.endpoint_window.spec)
         self.flush_every = flush_every
@@ -194,6 +200,28 @@ class Server:
         this — "p99 across the whole service", not per key."""
         return self.endpoint_window.rollup_quantiles(qs)
 
+    def windowed_quantiles(
+        self, endpoint: str, qs=(0.5, 0.95, 0.99), *, window=None, slices=None
+    ) -> list[float]:
+        """Time-windowed latency quantiles for one endpoint over the bank
+        ring (one fused range-merge dispatch; requires ``window_slices``).
+        ``window`` is a duration string ("5m", "30s"); ``slices`` a slice
+        count — exactly one must be given."""
+        return self.endpoint_window.windowed_quantiles(
+            endpoint, qs, window=window, slices=slices
+        )
+
+    def windowed_rollup(
+        self, qs=(0.5, 0.95, 0.99), *, window=None, slices=None
+    ) -> list[float]:
+        """Fleet-view quantiles over the last ``window``/``slices`` of the
+        bank ring — the windowed counterpart of ``rollup_quantiles``."""
+        return self.endpoint_window.windowed_rollup(qs, window=window, slices=slices)
+
+    def engine_stats(self) -> dict:
+        """Executable-cache + ring occupancy metadata (the /stats payload)."""
+        return self.endpoint_window.engine_stats()
+
     def endpoint_alpha(self, endpoint: str) -> float:
         """Effective relative-error guarantee for one endpoint's rollup.
 
@@ -242,11 +270,16 @@ class Server:
         from repro.launch.http_api import QuantileHTTPServer
         from repro.launch.ingest_gateway import IngestGateway
 
-        gateway = (
-            IngestGateway(self.endpoint_window, **(gateway_kwargs or {}))
-            if ingest
-            else None
-        )
+        kwargs = dict(gateway_kwargs or {})
+        if (
+            ingest
+            and "slice_interval_s" not in kwargs
+            and getattr(self.endpoint_window, "ring", None) is not None
+            and self.endpoint_window.slice_seconds is not None
+        ):
+            # the gateway's drain tick doubles as the ring's clock
+            kwargs["slice_interval_s"] = self.endpoint_window.slice_seconds
+        gateway = IngestGateway(self.endpoint_window, **kwargs) if ingest else None
         return QuantileHTTPServer(
             self,
             host,
@@ -281,6 +314,16 @@ def main() -> None:
         "(spans hosts once launch.distributed joined a fleet)",
     )
     p.add_argument(
+        "--window-slices", type=int, default=None,
+        help="retain this many sealed time slices (power of two) in a "
+        "device-resident bank ring for ?window= quantile queries",
+    )
+    p.add_argument(
+        "--slice-seconds", type=float, default=None,
+        help="wall-clock duration of one ring slice (enables duration "
+        "window strings like ?window=5m and gateway-driven slice advance)",
+    )
+    p.add_argument(
         "--http-port", type=int, default=None,
         help="also serve the HTTP quantile surface (with POST /ingest "
         "write path) on this port while requests run",
@@ -301,6 +344,8 @@ def main() -> None:
         cfg, batch_slots=args.batch_slots,
         max_len=args.prompt_len + args.max_new + 1,
         sketch_shards=args.sketch_shards,
+        window_slices=args.window_slices,
+        slice_seconds=args.slice_seconds,
     )
     reqs = [
         Request(

@@ -41,6 +41,8 @@ __all__ = [
     "bank_sharding",
     "batch_pspec",
     "batch_sharding",
+    "slab_pspec",
+    "slab_sharding",
     "telemetry_pspec",
 ]
 
@@ -64,6 +66,23 @@ def bank_pspec() -> P:
 def bank_sharding(mesh: Mesh) -> NamedSharding:
     """NamedSharding applying ``bank_pspec`` to every bank leaf."""
     return NamedSharding(mesh, bank_pspec())
+
+
+def slab_pspec() -> P:
+    """PartitionSpec for a ``WindowRing`` slab leaf: ``(nodes, K, ...)``.
+
+    The slab stacks every ring node's bank along a leading node axis; the
+    node axis replicates (each shard holds all of *its rows'* history)
+    while the row axis shards over ``keys`` exactly like the live bank —
+    so slice seal / merge-node / range-merge are all shard-local and the
+    windowed rollup stays the one psum.
+    """
+    return P(None, BANK_ROW_AXIS)
+
+
+def slab_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding applying ``slab_pspec`` to every slab leaf."""
+    return NamedSharding(mesh, slab_pspec())
 
 
 def batch_pspec() -> P:

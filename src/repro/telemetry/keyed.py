@@ -48,11 +48,43 @@ import jax.numpy as jnp
 from repro.core import sketch_bank as sbank
 from repro.core.ddsketch import DDSketch
 from repro.core.jax_sketch import BucketSpec, effective_alpha
-from repro.engine import ShardedEngine, make_engine
+from repro.engine import ShardedEngine, WindowRing, make_engine
 
-__all__ = ["OVERFLOW_KEY", "CollapseEvent", "KeyedWindow", "KeyedAggregator"]
+__all__ = [
+    "OVERFLOW_KEY",
+    "CollapseEvent",
+    "KeyedWindow",
+    "KeyedAggregator",
+    "parse_duration",
+]
 
 OVERFLOW_KEY = "__other__"
+
+_DURATION_UNITS = {"ms": 1e-3, "s": 1.0, "m": 60.0, "h": 3600.0}
+
+
+def parse_duration(text) -> float:
+    """``"250ms" | "30s" | "5m" | "1h" | "90"`` -> seconds (bare = seconds).
+
+    The ``?window=`` HTTP parameter grammar.  Raises ``ValueError`` (the
+    HTTP layer's 400 contract) on anything unparseable or non-positive.
+    """
+    s = str(text).strip().lower()
+    for unit in ("ms", "h", "m", "s"):  # "ms" before "m"/"s"
+        if s.endswith(unit):
+            num = s[: -len(unit)]
+            break
+    else:
+        unit, num = "s", s
+    try:
+        secs = float(num) * _DURATION_UNITS[unit]
+    except ValueError:
+        raise ValueError(
+            f"unparseable duration {text!r}: use e.g. 250ms, 30s, 5m, 1h"
+        ) from None
+    if not secs > 0:
+        raise ValueError(f"duration must be positive, got {text!r}")
+    return secs
 
 
 class CollapseEvent(NamedTuple):
@@ -107,6 +139,8 @@ class KeyedWindow:
         num_shards: int | None = None,
         track_collapse_events: bool = True,
         max_events: int = 1024,
+        num_slices: int | None = None,
+        slice_seconds: float | None = None,
     ):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -142,6 +176,12 @@ class KeyedWindow:
         # host mirror of per-row levels: reactive folds bump exactly one
         # level per fire, so events never need an extra device read
         self._levels = np.zeros(self.engine.num_sketches, np.int64)
+        # optional sliding-window ring: the live bank is the head slice,
+        # advance_slice() seals it and recycles the bank in place
+        self.ring = (
+            None if num_slices is None else WindowRing(self.engine, num_slices)
+        )
+        self.slice_seconds = None if slice_seconds is None else float(slice_seconds)
 
     def _initial_free_pool(self) -> list[int]:
         """Usable rows, ordered so ``pop()`` balances load.
@@ -374,6 +414,129 @@ class KeyedWindow:
             self._materialize_events()
             out = list(self._events)
             self._events.clear()
+        return out
+
+    # ------------------------------------------------------------------ #
+    # sliding-window ring (num_slices-enabled windows over time slices)
+    # ------------------------------------------------------------------ #
+    def _require_ring(self) -> WindowRing:
+        if self.ring is None:
+            raise ValueError(
+                "windowed queries need a slice ring: construct the "
+                "KeyedWindow with num_slices="
+            )
+        return self.ring
+
+    def advance_slice(self) -> int:
+        """Seal the live slice into the ring and recycle the bank in place.
+
+        The window-advance tick (the ingest gateway calls this on its
+        monotonic slice clock): the live bank is copied into the ring's
+        head slot (slab donated), then reset through the engine's donated
+        path with ``levels=None`` — so per-key collapse levels survive
+        slice turnover and the expiring slice's buffers become the new
+        head with zero allocation.  Returns the number of merge-tree node
+        rebuilds the seal triggered.
+        """
+        ring = self._require_ring()
+        with self.lock:
+            self._window += 1
+            self._materialize_events()
+            merges = ring.seal(self.bank)
+            self.bank = self.engine.reset(self.bank)
+        return merges
+
+    def resolve_window(self, window=None, slices=None) -> int:
+        """``?window=5m`` / ``?slices=8`` -> a validated slice count.
+
+        Exactly one of the two must be given.  Durations round *up* to
+        whole slices (a 5m window over 60s slices covers 5 slices + the
+        live head) and require ``slice_seconds`` to be configured; raises
+        ``ValueError`` (the HTTP 400 contract) on unparseable input or
+        windows wider than the ring.
+        """
+        ring = self._require_ring()
+        if (window is None) == (slices is None):
+            raise ValueError("pass exactly one of window= or slices=")
+        if slices is not None:
+            try:
+                w = int(str(slices))
+            except ValueError:
+                raise ValueError(
+                    f"slices must be an integer, got {slices!r}"
+                ) from None
+        else:
+            secs = parse_duration(window)
+            if self.slice_seconds is None:
+                raise ValueError(
+                    "duration windows need slice_seconds configured; "
+                    "use slices= instead"
+                )
+            w = max(1, int(np.ceil(secs / self.slice_seconds)))
+        if w < 1:
+            raise ValueError(f"window must cover at least 1 slice, got {w}")
+        if w > ring.num_slices:
+            raise ValueError(
+                f"window of {w} slices exceeds the ring "
+                f"({ring.num_slices} slices retained)"
+            )
+        return w
+
+    def windowed_quantiles(
+        self, key: str, qs, *, window=None, slices=None
+    ) -> list[float]:
+        """Per-key quantiles over the last N slices (live slice included).
+
+        One fused engine dispatch — gather the ring's O(log S) cached
+        nodes, level-reconcile, reduce the slice axis, Algorithm 2 — vs
+        N-1 host-looped merges.
+        """
+        ring = self._require_ring()
+        w = self.resolve_window(window=window, slices=slices)
+        with self.lock:
+            rid = self.key_to_row.get(key)
+            if rid is None:
+                raise KeyError(f"no values recorded for key {key!r}")
+            out = np.asarray(ring.quantiles(self.bank, qs, window_slices=w))
+        return [float(v) for v in out[rid]]
+
+    def windowed_all_quantiles(
+        self, qs, *, window=None, slices=None
+    ) -> dict[str, list[float]]:
+        """Windowed quantiles for every live key (one fused dispatch)."""
+        ring = self._require_ring()
+        w = self.resolve_window(window=window, slices=slices)
+        with self.lock:
+            out = np.asarray(ring.quantiles(self.bank, qs, window_slices=w))
+            rows = dict(self.key_to_row)
+        return {
+            k: [float(v) for v in out[rid]]
+            for k, rid in rows.items()
+            if k != OVERFLOW_KEY
+        }
+
+    def windowed_rollup(self, qs, *, window=None, slices=None) -> list[float]:
+        """Fleet-view quantiles over the last N slices ("p99 across all
+        tenants, last 5 minutes") — stays one psum on a sharded bank."""
+        ring = self._require_ring()
+        w = self.resolve_window(window=window, slices=slices)
+        with self.lock:
+            out = np.asarray(ring.rollup(self.bank, qs, window_slices=w))
+        return [float(v) for v in out]
+
+    def ring_stats(self) -> dict | None:
+        """Ring occupancy / maintenance metadata (None when no ring)."""
+        if self.ring is None:
+            return None
+        with self.lock:
+            return self.ring.stats()
+
+    def engine_stats(self) -> dict:
+        """Executable-cache + ring observability (the /stats payload)."""
+        with self.lock:
+            out = {"executable_cache": self.engine.cache_info()}
+            if self.ring is not None:
+                out["ring"] = self.ring.stats()
         return out
 
     def reset(self) -> None:

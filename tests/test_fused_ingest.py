@@ -315,7 +315,10 @@ def test_fused_auto_falls_back_for_tall_banks(monkeypatch, rng):
         ops.fused_ingest(x, s, num_segments=k, spec=spec)
     assert ops.dispatch_stats()["tall_bank_fallbacks"]["fused_ingest"] == 2
     ops.reset_dispatch_stats()
-    assert ops.dispatch_stats() == {"tall_bank_fallbacks": {}}
+    assert ops.dispatch_stats() == {
+        "tall_bank_fallbacks": {},
+        "range_merge_calls": {},
+    }
 
 
 def test_engine_fused_method_parity(rng):
