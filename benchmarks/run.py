@@ -25,6 +25,7 @@ from benchmarks import (
     bank_bench,
     ingest_bench,
     kernels_bench,
+    serve_bench,
     sketches,
     telemetry_bench,
     window_bench,
@@ -140,6 +141,12 @@ def main() -> None:
             "ingest_http": lambda: ingest_bench.bench_ingest_http(
                 clients=(1, 8), reqs_per_client=8, overload_reqs=8
             ),
+            # read-path acceptance: 8/32-poller storms against sustained
+            # ingest — snapshot+coalesce+cache vs the lock-serialized
+            # baseline (committed bars: >=3x req/s, >0.9 cache hit rate)
+            "query_http": lambda: serve_bench.bench_query_http(
+                pollers=(8, 32), reqs_per_poller=25
+            ),
             # windowed-quantile acceptance rows: the flagship S=64, K=128,
             # m=4096 fused-vs-host-loop speedup (committed bar: >= 5x) and
             # the flat-vs-S window-advance cost, tracked in BENCH_baseline
@@ -192,6 +199,9 @@ def main() -> None:
             ),
             "ingest_http": lambda: ingest_bench.bench_ingest_http(
                 clients=(1, 4, 16), reqs_per_client=16
+            ),
+            "query_http": lambda: serve_bench.bench_query_http(
+                pollers=(8, 32), reqs_per_poller=40
             ),
             "window_query": lambda: window_bench.bench_window_query(
                 configs=((8, 64, 2048), (64, 128, 4096), (256, 128, 2048)),
@@ -249,6 +259,9 @@ def main() -> None:
             ),
             "ingest_http": lambda: ingest_bench.bench_ingest_http(
                 clients=(1, 4, 16, 32), reqs_per_client=32, overload_reqs=16
+            ),
+            "query_http": lambda: serve_bench.bench_query_http(
+                pollers=(8, 32, 64), reqs_per_poller=50
             ),
             "window_query": lambda: window_bench.bench_window_query(
                 configs=((8, 64, 2048), (64, 128, 4096), (256, 128, 2048)),

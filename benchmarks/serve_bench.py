@@ -1,0 +1,277 @@
+"""Read-path benchmark: concurrent HTTP pollers against sustained ingest.
+
+The PR-10 tentpole's acceptance row.  Three scenarios per poller count:
+
+* ``write_only`` — the gateway drains a sustained submit stream with no
+  readers at all: the reference ingest-to-queryable p99 that the read
+  storm must not move.
+
+* ``lock_serialized`` — the pre-snapshot read path reconstructed: every
+  ``/live`` poll takes the window lock and issues its own full-bank
+  device dispatch, serializing against the drain tick and every other
+  poller.  This is the baseline the tentpole is measured against.
+
+* ``snapshot_coalesced`` — the shipped path: version-stamped snapshots
+  (readers never hold the window lock), the ``QueryPlanner`` folding
+  concurrent polls into shared fused dispatches, the version-keyed
+  result cache, and ``If-None-Match`` re-polls answered 304 with no
+  body.  Pollers behave like dashboards: alternate q sets and send a
+  conditional re-poll every other request.
+
+Reported per row: query request p50/p99 and req/s at the poller,
+the gateway's ingest-to-queryable p99 *during the storm* (the stall
+metric), and on the coalesced row the planner cache hit rate, 304
+count, fused dispatch count, ``speedup_vs_lock`` (committed bar: >= 3x)
+and ``ingest_stall_pct`` vs the write-only reference.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+
+from repro.core.jax_sketch import BucketSpec
+from repro.launch.http_api import QuantileHTTPServer, TelemetryFacade
+from repro.launch.ingest_gateway import IngestGateway
+from repro.telemetry.keyed import KeyedWindow
+
+ENDPOINTS = ("/ep0", "/ep1", "/ep2", "/ep3")
+Q_SETS = ("0.5,0.99", "0.25,0.5,0.75,0.99")
+
+
+class LockSerializedFacade:
+    """The PR-8 read path, reconstructed for the baseline row.
+
+    Every query holds the window lock for its whole device round-trip
+    (the donated live bank cannot be read mid-ingest without it) and
+    issues a fresh full-bank fused dispatch — no snapshots, no
+    coalescing, no cache, no ETag.
+    """
+
+    planner = None  # the HTTP tier then uses the direct duck-typed calls
+
+    def __init__(self, window):
+        self.window = window
+
+    def live_endpoint_quantiles(self, qs) -> dict:
+        win = self.window
+        with win.lock:
+            table = np.asarray(
+                win.engine.quantiles(
+                    win.bank, np.asarray(list(qs), np.float32)
+                )
+            )
+            rows = dict(win.key_to_row)
+        from repro.telemetry.keyed import OVERFLOW_KEY
+
+        return {
+            k: [float(x) for x in table[rid]]
+            for k, rid in rows.items()
+            if k != OVERFLOW_KEY
+        }
+
+
+def _get(url: str, etag: str | None = None):
+    """GET returning (status, etag_or_None); drains the body."""
+    req = urllib.request.Request(
+        url, headers={"If-None-Match": etag} if etag else {}
+    )
+    try:
+        with urllib.request.urlopen(req) as r:
+            r.read()
+            return r.status, r.headers.get("ETag")
+    except urllib.error.HTTPError as e:  # 304 lands here under urllib
+        e.read()
+        return e.code, e.headers.get("ETag")
+
+
+def _start_writer(gw, payload, stop, interval_s):
+    def loop():
+        i = 0
+        while not stop.is_set():
+            gw.submit(ENDPOINTS[i % len(ENDPOINTS)], payload)
+            i += 1
+            time.sleep(interval_s)
+
+    t = threading.Thread(target=loop, daemon=True)
+    t.start()
+    return t
+
+
+def _poll_storm(url, n_pollers, reqs, conditional):
+    """Run the storm; returns (wall_s, latencies_ms, n_304, errors)."""
+    barrier = threading.Barrier(n_pollers)
+    lat_ms = [[] for _ in range(n_pollers)]
+    n304 = [0] * n_pollers
+    errors = []
+
+    def poller(i):
+        barrier.wait()
+        etag = None
+        try:
+            for r in range(reqs):
+                target = f"{url}/live?q={Q_SETS[(i + r) % len(Q_SETS)]}"
+                send = etag if conditional and r % 2 == 1 else None
+                t0 = time.perf_counter()
+                code, new_etag = _get(target, send)
+                lat_ms[i].append((time.perf_counter() - t0) * 1e3)
+                if code == 304:
+                    n304[i] += 1
+                elif code != 200:  # pragma: no cover - surfaced in the row
+                    raise RuntimeError(f"poll got HTTP {code}")
+                if new_etag:
+                    etag = new_etag
+        except BaseException as e:  # pragma: no cover - surfaced in the row
+            errors.append(e)
+
+    ts = [threading.Thread(target=poller, args=(i,)) for i in range(n_pollers)]
+    t0 = time.perf_counter()
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    wall = time.perf_counter() - t0
+    flat = np.concatenate([np.asarray(x) for x in lat_ms if x])
+    return wall, flat, sum(n304), errors
+
+
+def _fresh_stack(capacity, tick_interval_s, facade_cls):
+    """A window + draining gateway + HTTP server for one scenario."""
+    window = KeyedWindow(BucketSpec(), capacity=capacity)
+    gw = IngestGateway(
+        window, max_queue_values=1 << 22, tick_interval_s=tick_interval_s
+    )
+    facade = (
+        TelemetryFacade(window, None)
+        if facade_cls is None
+        else facade_cls(window)
+    )
+    srv = QuantileHTTPServer(facade)
+    return window, gw, facade, srv
+
+
+def _warm(window, gw, srv, payload):
+    """Compile the ingest ladder + both query executables before timing."""
+    for ep in ENDPOINTS:
+        gw.submit(ep, payload)
+    gw.flush()
+    for log2 in range(8, 15):
+        gw.submit("/ep0", np.ones(1 << log2, np.float32))
+        gw.flush()
+    for qs in Q_SETS:
+        _get(f"{srv.url}/live?q={qs}")
+    gw.reset_latency()
+
+
+def bench_query_http(
+    pollers=(8, 32),
+    reqs_per_poller: int = 25,
+    values_per_req: int = 256,
+    capacity: int = 128,
+    tick_interval_s: float = 0.05,
+    write_interval_s: float = 0.002,
+) -> list[dict]:
+    rng = np.random.default_rng(0)
+    payload = (rng.pareto(1.0, values_per_req) + 1.0).astype(np.float32)
+    rows = []
+
+    # ----------------------------------------------------------------- #
+    # write-only reference: ingest p99 with zero readers
+    # ----------------------------------------------------------------- #
+    window, gw, _, srv = _fresh_stack(capacity, tick_interval_s, None)
+    with srv:
+        _warm(window, gw, srv, payload)
+        stop = threading.Event()
+        w = _start_writer(gw, payload, stop, write_interval_s)
+        time.sleep(1.0)
+        stop.set()
+        w.join()
+        gw.flush()
+        base_ingest_p99 = gw.latency_quantiles([0.99])[0] * 1e3
+        rows.append(
+            {
+                "bench": "query_http",
+                "scenario": "write_only",
+                "pollers": 0,
+                "reqs": 0,
+                "ingest_p99_ms": round(base_ingest_p99, 3),
+            }
+        )
+        gw.stop()
+
+    # ----------------------------------------------------------------- #
+    # read storms: lock-serialized baseline vs snapshot + coalesce + cache
+    # ----------------------------------------------------------------- #
+    for n_pollers in pollers:
+        lock_req_per_s = None
+        for scenario, facade_cls, conditional in (
+            ("lock_serialized", LockSerializedFacade, False),
+            ("snapshot_coalesced", None, True),
+        ):
+            window, gw, facade, srv = _fresh_stack(
+                capacity, tick_interval_s, facade_cls
+            )
+            with srv:
+                _warm(window, gw, srv, payload)
+                stop = threading.Event()
+                w = _start_writer(gw, payload, stop, write_interval_s)
+                wall, lat, n304, errors = _poll_storm(
+                    srv.url, n_pollers, reqs_per_poller, conditional
+                )
+                stop.set()
+                w.join()
+                gw.flush()
+                total = n_pollers * reqs_per_poller
+                req_per_s = total / wall
+                row = {
+                    "bench": "query_http",
+                    "scenario": scenario,
+                    "pollers": n_pollers,
+                    "reqs": total,
+                    "req_per_s": round(req_per_s, 1),
+                    "p50_query_ms": round(float(np.percentile(lat, 50)), 3),
+                    "p99_query_ms": round(float(np.percentile(lat, 99)), 3),
+                    "ingest_p99_ms": round(
+                        gw.latency_quantiles([0.99])[0] * 1e3, 3
+                    ),
+                    "errors": len(errors),
+                }
+                if scenario == "lock_serialized":
+                    lock_req_per_s = req_per_s
+                else:
+                    planner = facade.planner
+                    cstats = planner.cache.stats()
+                    pstats = planner.stats()
+                    # hit rate on the shared-result tier: LRU hits plus
+                    # coalesced followers (answered from the very entry
+                    # their leader's dispatch filled — singleflight
+                    # accounting); lru_hit_rate is the raw LRU-only rate
+                    row["cache_hit_rate"] = round(
+                        (cstats["hits"] + pstats["coalesced"])
+                        / max(1, pstats["requests"]),
+                        3,
+                    )
+                    row["lru_hit_rate"] = round(cstats["hit_rate"], 3)
+                    row["http_304"] = n304
+                    row["query_dispatches"] = pstats["dispatches"]
+                    row["speedup_vs_lock"] = round(
+                        req_per_s / lock_req_per_s, 2
+                    )
+                    row["ingest_stall_pct"] = round(
+                        (row["ingest_p99_ms"] / max(base_ingest_p99, 1e-9) - 1)
+                        * 100,
+                        1,
+                    )
+                rows.append(row)
+                gw.stop()
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench_query_http(pollers=(8,), reqs_per_poller=10):
+        print(json.dumps(r))

@@ -352,6 +352,35 @@ class SketchEngine:
         """The whole bank pytree as host np arrays (one transfer per leaf)."""
         return jax.tree.map(np.asarray, bank)
 
+    def snapshot(self, state: SketchBank) -> SketchBank:
+        """A device-side copy of a bank (or slab) into FRESH buffers.
+
+        The read-path publish step: the returned pytree shares no buffers
+        with ``state``, so later donated mutations of the live state
+        (``ingest``/``reset``/``seal_slice``) can never invalidate it —
+        readers query the snapshot lock-free while writers keep donating.
+
+        One compiled executable per geometry; never donated.  The body is
+        ``lax.optimization_barrier`` rather than a bare identity: jax
+        passes *unmodified* jit outputs through as the input array itself
+        (which a later donation would then consume out from under the
+        snapshot), while any real primitive forces XLA to materialize
+        fresh, bit-identical output buffers.
+        """
+        kind = "slab" if state.pos.ndim == 3 else "bank"
+
+        def copy_impl(b: SketchBank) -> SketchBank:
+            return jax.lax.optimization_barrier(b)
+
+        return self._compiled(
+            ("snapshot", kind),
+            copy_impl,
+            (),
+            (kind,),
+            (kind,),
+            state,
+        )
+
     def reset(self, bank: SketchBank, levels=None) -> SketchBank:
         """Zero the bank **in place** (donated), keeping or replacing levels.
 

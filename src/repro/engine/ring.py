@@ -128,6 +128,33 @@ class WindowRing:
     # ------------------------------------------------------------------ #
     # range decomposition
     # ------------------------------------------------------------------ #
+    def range_nodes_at(self, sealed: int, lo: int, hi: int) -> list[int]:
+        """Canonical aligned-block node cover of ``[lo, hi)`` *as of* a
+        past ``sealed`` count — pure slot arithmetic, no live bookkeeping.
+
+        The snapshot read path: a slab copied when ``self.sealed`` was
+        ``sealed`` holds exactly the blocks this decomposition names (the
+        freshness-by-construction invariant), so covers computed against
+        the captured count stay valid however far the live ring advances.
+        """
+        if not (max(0, sealed - self.num_slices) <= lo <= hi <= sealed):
+            raise ValueError(
+                f"range [{lo}, {hi}) outside the retained window "
+                f"[{max(0, sealed - self.num_slices)}, {sealed}]"
+            )
+        out: list[int] = []
+        while lo < hi:
+            j = 0
+            while (
+                j < self.tree_levels
+                and lo % (1 << (j + 1)) == 0
+                and lo + (1 << (j + 1)) <= hi
+            ):
+                j += 1
+            out.append(self.node_index(j, lo >> j))
+            lo += 1 << j
+        return out
+
     def range_nodes(self, lo: int, hi: int) -> list[int]:
         """Canonical aligned-block node cover of absolute range ``[lo, hi)``.
 
@@ -156,13 +183,14 @@ class WindowRing:
             lo += 1 << j
         return out
 
-    def query_args(self, window_slices: int) -> tuple[np.ndarray, np.ndarray]:
-        """Padded ``(nodes, valid)`` arrays covering the last
-        ``window_slices - 1`` sealed slices (the window's remaining slice
-        is the live bank, appended by the engine).
+    def query_args_at(
+        self, sealed: int, window_slices: int
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """``query_args`` evaluated at a captured ``sealed`` count.
 
-        Fixed length ``max_range_nodes`` regardless of the window, so one
-        compiled ``window_query`` executable serves every window size.
+        Pure math over the ring's static layout — safe to call without
+        holding the writer lock, against ring state that has since moved
+        on.  Pair with a slab snapshot taken at the same count.
         """
         w = int(window_slices)
         if w < 1:
@@ -172,14 +200,24 @@ class WindowRing:
                 f"window of {w} slices exceeds the ring "
                 f"({self.num_slices} slices retained)"
             )
-        span = min(w - 1, self.sealed)  # can't read more than is sealed
-        cover = self.range_nodes(self.sealed - span, self.sealed)
+        span = min(w - 1, sealed)  # can't read more than is sealed
+        cover = self.range_nodes_at(sealed, sealed - span, sealed)
         dmax = self.max_range_nodes
         nodes = np.zeros(dmax, np.int32)
         valid = np.zeros(dmax, np.float32)
         nodes[: len(cover)] = cover
         valid[: len(cover)] = 1.0
         return nodes, valid
+
+    def query_args(self, window_slices: int) -> tuple[np.ndarray, np.ndarray]:
+        """Padded ``(nodes, valid)`` arrays covering the last
+        ``window_slices - 1`` sealed slices (the window's remaining slice
+        is the live bank, appended by the engine).
+
+        Fixed length ``max_range_nodes`` regardless of the window, so one
+        compiled ``window_query`` executable serves every window size.
+        """
+        return self.query_args_at(self.sealed, window_slices)
 
     # ------------------------------------------------------------------ #
     # queries

@@ -93,8 +93,14 @@ _DISPATCH_STATS: dict[str, dict[str, int]] = {
     # acceptance test asserts a W-slice window query registers exactly one
     # (one device program, not W-1 host-looped merges)
     "range_merge_calls": {},
+    # query-path twin of tall_bank_fallbacks (satellite of PR 10): on TPU a
+    # sub-tile row axis silently drops bank_quantiles / bank_range_merge off
+    # the fused kernel onto the XLA reference — correct, but a perf cliff
+    # the serving tier should be able to see on its dashboard
+    "query_fallbacks": {},
 }
 _TALL_BANK_WARNED: set[str] = set()
+_QUERY_WARNED: set[str] = set()
 
 
 def dispatch_stats() -> dict:
@@ -107,6 +113,7 @@ def reset_dispatch_stats() -> None:
     for v in _DISPATCH_STATS.values():
         v.clear()
     _TALL_BANK_WARNED.clear()
+    _QUERY_WARNED.clear()
 
 
 def _note_tall_bank_fallback(site: str, num_rows: int) -> None:
@@ -120,6 +127,31 @@ def _note_tall_bank_fallback(site: str, num_rows: int) -> None:
             "falling back to the XLA reference path (correct but off the "
             "resident-row kernel).  Shard the bank, shrink it, or pin "
             'method="matmul" to silence this.  Recorded in '
+            "ops.dispatch_stats(); warning once per site.",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+
+
+def _note_query_fallback(site: str, num_rows: int, row_tile: int) -> None:
+    """Record (and warn once) a query-path auto dispatch landing on ref.
+
+    Counted only when the compiled kernel was on the menu (TPU backend,
+    ``force=None``) and the row axis was too small to fill one tile — the
+    ingest path got this treatment in PR 7; the read path gets it here so
+    dashboard pollers noticing slow queries can see *why* in
+    ``dispatch_stats()`` instead of guessing.
+    """
+    counts = _DISPATCH_STATS["query_fallbacks"]
+    counts[site] = counts.get(site, 0) + 1
+    if site not in _QUERY_WARNED:
+        _QUERY_WARNED.add(site)
+        warnings.warn(
+            f"{site}: bank row axis ({num_rows} rows) is below "
+            f"row_tile={row_tile}; auto dispatch is falling back to the XLA "
+            "reference path (correct but off the fused query kernel).  "
+            "Batch more rows per query, shrink row_tile, or pin "
+            'force="ref" to acknowledge this.  Recorded in '
             "ops.dispatch_stats(); warning once per site.",
             RuntimeWarning,
             stacklevel=3,
@@ -560,6 +592,8 @@ def bank_quantiles(
         table = device_value_table(spec)
     impl = _impl(force, pos.shape[0], row_tile)
     if impl == "ref":
+        if force is None and _on_tpu():
+            _note_query_fallback("bank_quantiles", pos.shape[0], row_tile)
         return bank_quantiles_ref(pos, neg, zero, vmin, vmax, level, qs, table)
     return bank_quantiles_pallas(
         pos,
@@ -607,6 +641,8 @@ def bank_range_merge(
     calls["bank_range_merge"] = calls.get("bank_range_merge", 0) + 1
     impl = _impl(force, counts.shape[1], row_tile)
     if impl == "ref":
+        if force is None and _on_tpu():
+            _note_query_fallback("bank_range_merge", counts.shape[1], row_tile)
         return bank_range_merge_ref(counts, deltas, spec=spec, valid=valid)
     d = jnp.clip(deltas.astype(jnp.int32), 0, MAX_COLLAPSE_LEVEL)
     if valid is not None:

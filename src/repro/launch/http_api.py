@@ -84,6 +84,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
 
 from repro.launch.ingest_gateway import GatewayOverloaded
+from repro.telemetry.keyed import OVERFLOW_KEY
 
 __all__ = [
     "TelemetryFacade",
@@ -120,12 +121,19 @@ class TelemetryFacade:
     """The serve-layer query methods over a window + aggregator pair.
 
     Lets the HTTP tier (and tests) run against real sketch telemetry
-    without constructing the model ``Server``.
+    without constructing the model ``Server``.  Carries a ``QueryPlanner``
+    (when the window supports snapshots) so the HTTP tier coalesces and
+    caches reads; ``planner=None`` falls back to direct calls.
     """
 
-    def __init__(self, window, aggregator):
+    def __init__(self, window, aggregator, *, planner=None):
+        from repro.launch.query_planner import QueryPlanner
+
         self.window = window
         self.aggregator = aggregator
+        self.planner = (
+            planner if planner is not None else QueryPlanner.for_window(window)
+        )
 
     def endpoint_quantiles(self, endpoint: str, qs=_DEFAULT_QS) -> list[float]:
         return self.aggregator.quantiles(endpoint, list(qs))
@@ -264,9 +272,34 @@ def _make_handler(
     faults=None,
     max_body_bytes: int = 8 << 20,
 ):
+    # coalesced + version-cached read path when the telemetry source
+    # carries a QueryPlanner (TelemetryFacade / Server); None falls back
+    # to direct duck-typed calls
+    planner = getattr(telemetry, "planner", None)
+    # read endpoints whose answers are fully determined by (URL, version):
+    # eligible for the ETag / If-None-Match -> 304 fast path
+    versioned_paths = ("/quantiles", "/live", "/rollup", "/report")
+
     class Handler(BaseHTTPRequestHandler):
         def log_message(self, *args):  # quiet: tests/servers manage logging
             pass
+
+        def _not_modified(self, etag: str) -> bool:
+            """304 fast path: the client's ``If-None-Match`` matches the
+            live version, so its cached entity is current — reply headers
+            only (304 MUST NOT carry a body), zero planner/device work."""
+            inm = self.headers.get("If-None-Match")
+            if inm is None or inm.strip() != etag:
+                return False
+            stats.incr("http_304")
+            try:
+                self.send_response(304)
+                self.send_header("ETag", etag)
+                self.end_headers()
+            except (BrokenPipeError, ConnectionResetError, OSError):
+                stats.incr("write_errors")
+                self.close_connection = True
+            return True
 
         def _reply(self, code: int, payload: dict, headers: dict | None = None) -> None:
             try:
@@ -354,6 +387,13 @@ def _make_handler(
                     return
                 if not self._gate():
                     return
+                etag = None
+                if planner is not None and url.path in versioned_paths:
+                    # an If-None-Match re-poll at the live version answers
+                    # before any parsing or planner work: 304, no body
+                    etag = planner.etag()
+                    if self._not_modified(etag):
+                        return
                 if url.path == "/stats":
                     payload = {"server": stats.snapshot()}
                     engine_fn = getattr(telemetry, "engine_stats", None)
@@ -361,6 +401,10 @@ def _make_handler(
                         # executable-cache hit rates + ring occupancy: the
                         # "is the window tier recompiling?" dashboard
                         payload["engine"] = engine_fn()
+                    if planner is not None:
+                        # coalescer + result-cache counters: the read-path
+                        # "are polls hitting the cache?" dashboard
+                        payload["query_planner"] = planner.stats()
                     if gateway is not None:
                         payload["gateway"] = gateway.stats()
                         # pre-first-tick quantiles are NaN, which json.dumps
@@ -378,6 +422,21 @@ def _make_handler(
                     qs = _parse_qs_param(query)
                     window, slices = _parse_window_params(query)
                     if window is not None or slices is not None:
+                        payload = {
+                            "endpoint": endpoint,
+                            "qs": qs,
+                            "window": window,
+                            "slices": slices,
+                        }
+                        if planner is not None:
+                            w = planner.resolve_window(window=window, slices=slices)
+                            v, table, rows = planner.quantile_rows(qs, w)
+                            rid = rows.get(endpoint)
+                            if rid is None:
+                                raise KeyError(endpoint)
+                            payload["quantiles"] = _nan_to_null(table[rid])
+                            self._reply(200, payload, {"ETag": f'"{v}"'})
+                            return
                         fn = getattr(telemetry, "windowed_quantiles", None)
                         if fn is None:
                             raise ValueError(
@@ -385,15 +444,18 @@ def _make_handler(
                                 "telemetry source"
                             )
                         vals = fn(endpoint, qs, window=window, slices=slices)
+                        payload["quantiles"] = _nan_to_null(vals)
+                        self._reply(200, payload)
+                        return
+                    if planner is not None:
+                        v, vals = planner.cached(
+                            ("endpoint_quantiles", endpoint, tuple(qs)),
+                            lambda: list(telemetry.endpoint_quantiles(endpoint, qs)),
+                        )
                         self._reply(
                             200,
-                            {
-                                "endpoint": endpoint,
-                                "qs": qs,
-                                "window": window,
-                                "slices": slices,
-                                "quantiles": _nan_to_null(vals),
-                            },
+                            {"endpoint": endpoint, "qs": qs, "quantiles": vals},
+                            {"ETag": f'"{v}"'},
                         )
                         return
                     vals = telemetry.endpoint_quantiles(endpoint, qs)
@@ -403,6 +465,19 @@ def _make_handler(
                     )
                 elif url.path == "/live":
                     qs = _parse_qs_param(query)
+                    if planner is not None:
+                        v, table, rows = planner.quantile_rows(qs)
+                        endpoints = {
+                            k: [float(x) for x in table[rid]]
+                            for k, rid in rows.items()
+                            if k != OVERFLOW_KEY
+                        }
+                        self._reply(
+                            200,
+                            {"qs": qs, "endpoints": endpoints},
+                            {"ETag": f'"{v}"'},
+                        )
+                        return
                     self._reply(
                         200,
                         {"qs": qs, "endpoints": telemetry.live_endpoint_quantiles(qs)},
@@ -411,6 +486,13 @@ def _make_handler(
                     qs = _parse_qs_param(query)
                     window, slices = _parse_window_params(query)
                     if window is not None or slices is not None:
+                        payload = {"qs": qs, "window": window, "slices": slices}
+                        if planner is not None:
+                            w = planner.resolve_window(window=window, slices=slices)
+                            v, vals = planner.rollup(qs, w)
+                            payload["quantiles"] = _nan_to_null(vals)
+                            self._reply(200, payload, {"ETag": f'"{v}"'})
+                            return
                         wfn = getattr(telemetry, "windowed_rollup", None)
                         if wfn is None:
                             raise ValueError(
@@ -418,14 +500,15 @@ def _make_handler(
                                 "telemetry source"
                             )
                         vals = wfn(qs, window=window, slices=slices)
+                        payload["quantiles"] = _nan_to_null(vals)
+                        self._reply(200, payload)
+                        return
+                    if planner is not None:
+                        v, vals = planner.rollup(qs)
                         self._reply(
                             200,
-                            {
-                                "qs": qs,
-                                "window": window,
-                                "slices": slices,
-                                "quantiles": _nan_to_null(vals),
-                            },
+                            {"qs": qs, "quantiles": list(vals)},
+                            {"ETag": f'"{v}"'},
                         )
                         return
                     fn = getattr(telemetry, "rollup_quantiles", None)
@@ -434,7 +517,15 @@ def _make_handler(
                         return
                     self._reply(200, {"qs": qs, "quantiles": list(fn(qs))})
                 elif url.path == "/report":
-                    self._reply(200, telemetry.endpoint_report(_parse_qs_param(query)))
+                    qs = _parse_qs_param(query)
+                    if planner is not None:
+                        v, payload = planner.cached(
+                            ("report", tuple(qs)),
+                            lambda: telemetry.endpoint_report(qs),
+                        )
+                        self._reply(200, payload, {"ETag": f'"{v}"'})
+                        return
+                    self._reply(200, telemetry.endpoint_report(qs))
                 else:
                     self._reply(404, {"error": f"unknown path {url.path!r}"})
             except KeyError as e:

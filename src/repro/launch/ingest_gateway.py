@@ -330,7 +330,16 @@ class IngestGateway:
                 drained_s = max(done - t0, 1e-6)
                 rate = n / drained_s
                 self._drain_rate = 0.8 * self._drain_rate + 0.2 * rate
+            # RCU publish: refresh the window's read snapshot once per tick
+            # (a no-op until the first reader exists), so poll storms hit
+            # the version cache instead of racing the donation cycle
+            self._publish()
             return int(n)
+
+    def _publish(self) -> None:
+        pub = getattr(self.window, "publish", None)
+        if pub is not None:
+            pub()
 
     def _maybe_advance_slice(self) -> int:
         """Seal the window's live bank into its ring once per elapsed
@@ -359,6 +368,7 @@ class IngestGateway:
         if advanced:
             with self._lock:
                 self._stats["slice_advances"] += advanced
+            self._publish()  # seals bump the version: re-publish for readers
         return advanced
 
     # ------------------------------------------------------------------ #

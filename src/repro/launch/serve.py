@@ -93,6 +93,11 @@ class Server:
             slice_seconds=slice_seconds,
         )
         self.endpoint_agg = KeyedAggregator(self.endpoint_window.spec)
+        # coalesced + version-cached HTTP read path over the window's
+        # snapshot tier (http_api picks this up via telemetry.planner)
+        from repro.launch.query_planner import QueryPlanner
+
+        self.planner = QueryPlanner(self.endpoint_window)
         self.flush_every = flush_every
         self._pending: list[tuple[str, float]] = []
         ctx_len = cfg.encoder_seq or cfg.n_cross_tokens

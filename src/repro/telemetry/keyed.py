@@ -37,6 +37,7 @@ event log to the serving layer.
 
 from __future__ import annotations
 
+import re
 import threading
 from collections import deque
 from typing import NamedTuple
@@ -52,6 +53,7 @@ from repro.engine import ShardedEngine, WindowRing, make_engine
 
 __all__ = [
     "OVERFLOW_KEY",
+    "BankSnapshot",
     "CollapseEvent",
     "KeyedWindow",
     "KeyedAggregator",
@@ -61,27 +63,53 @@ __all__ = [
 OVERFLOW_KEY = "__other__"
 
 _DURATION_UNITS = {"ms": 1e-3, "s": 1.0, "m": 60.0, "h": 3600.0}
+# one duration token: a (float) magnitude + optional unit suffix
+_DURATION_TOKEN = re.compile(r"([+-]?[0-9.]+(?:e[+-]?[0-9]+)?)(ms|h|m|s)?")
 
 
 def parse_duration(text) -> float:
-    """``"250ms" | "30s" | "5m" | "1h" | "90"`` -> seconds (bare = seconds).
+    """``"250ms" | "30s" | "5m" | "1h30m" | "90"`` -> seconds.
 
-    The ``?window=`` HTTP parameter grammar.  Raises ``ValueError`` (the
-    HTTP layer's 400 contract) on anything unparseable or non-positive.
+    The ``?window=`` HTTP parameter grammar.  Compound forms concatenate
+    tokens (``"1h30m"`` = 5400 s, ``"1m30.5s"`` works too); a bare number
+    is seconds.  Raises ``ValueError`` (the HTTP layer's 400 contract)
+    naming the offending token on anything unparseable, negative, or
+    zero — ``"0s"`` and ``"-3s"`` are rejected the same way ``"zzz"`` is,
+    not silently accepted to confuse the window validator downstream.
     """
     s = str(text).strip().lower()
-    for unit in ("ms", "h", "m", "s"):  # "ms" before "m"/"s"
-        if s.endswith(unit):
-            num = s[: -len(unit)]
-            break
-    else:
-        unit, num = "s", s
-    try:
-        secs = float(num) * _DURATION_UNITS[unit]
-    except ValueError:
-        raise ValueError(
-            f"unparseable duration {text!r}: use e.g. 250ms, 30s, 5m, 1h"
-        ) from None
+    if not s:
+        raise ValueError("empty duration: use e.g. 250ms, 30s, 5m, 1h30m")
+    secs = 0.0
+    pos = 0
+    while pos < len(s):
+        m = _DURATION_TOKEN.match(s, pos)
+        if m is None:
+            raise ValueError(
+                f"unparseable duration {text!r} at {s[pos:]!r}: "
+                "use e.g. 250ms, 30s, 5m, 1h30m"
+            )
+        num, unit = m.group(1), m.group(2)
+        try:
+            mag = float(num)
+        except ValueError:
+            raise ValueError(
+                f"unparseable duration {text!r}: bad magnitude {num!r}"
+            ) from None
+        if unit is None and m.end() < len(s):
+            # a unit-less token may only be the whole string ("90" = 90 s);
+            # inside a compound it means a typo'd unit ("5x30s")
+            raise ValueError(
+                f"unparseable duration {text!r}: token {num!r} has no unit "
+                f"(before {s[m.end():]!r})"
+            )
+        if mag < 0:
+            raise ValueError(
+                f"duration must be positive, got token {m.group(0)!r} "
+                f"in {text!r}"
+            )
+        secs += mag * _DURATION_UNITS[unit or "s"]
+        pos = m.end()
     if not secs > 0:
         raise ValueError(f"duration must be positive, got {text!r}")
     return secs
@@ -95,6 +123,114 @@ class CollapseEvent(NamedTuple):
     new_level: int
     window: int  # window index the transition happened in
     clamped_mass: float  # mass that had clamped when the fold fired
+
+
+class BankSnapshot:
+    """An immutable, version-stamped read view of a ``KeyedWindow``.
+
+    Holds device-side *copies* of the bank (and ring slab, when the window
+    has one) minted by ``SketchEngine.snapshot`` — fresh buffers the
+    writer's donated ingest/seal/reset paths can never consume — plus a
+    host copy of the key->row map taken at the same instant.  Every query
+    method here runs **lock-free**: the drain thread keeps donating into
+    the live bank while any number of reader threads answer quantiles off
+    this view.
+
+    ``version`` stamps the window state the view reflects (exactly one
+    bump per ingest tick, slice seal, or window reset — the discrete
+    events at which UDDSketch-style results can change), so it doubles as
+    the result-cache key and the HTTP ``ETag``.
+    """
+
+    __slots__ = (
+        "version",
+        "spec",
+        "engine",
+        "bank",
+        "key_to_row",
+        "ring",
+        "sealed",
+        "slab",
+        "window",
+    )
+
+    def __init__(self, *, version, window, bank, key_to_row, sealed, slab):
+        self.version = version
+        self.window = window
+        self.spec = window.spec
+        self.engine = window.engine
+        self.bank = bank
+        self.key_to_row = key_to_row
+        self.ring = window.ring
+        self.sealed = sealed  # ring seal count at capture (None: no ring)
+        self.slab = slab  # slab copy at ``sealed`` (shared between snaps)
+
+    # fused device reads ------------------------------------------------- #
+    def row_quantiles(self, qs) -> np.ndarray:
+        """Raw per-row quantiles ``(K, len(qs))`` — the coalescer's unit."""
+        return np.asarray(self.engine.quantiles(self.bank, qs))
+
+    def windowed_row_quantiles(self, qs, *, window=None, slices=None) -> np.ndarray:
+        """Raw per-row windowed quantiles ``(K, len(qs))``.
+
+        The node cover comes from ``query_args_at`` evaluated at the
+        *captured* seal count — pure layout math, valid however far the
+        live ring has advanced since this snapshot was taken.
+        """
+        w = self.window.resolve_window(window=window, slices=slices)
+        nodes, valid = self.ring.query_args_at(self.sealed, w)
+        return np.asarray(
+            self.engine.window_query(self.slab, self.bank, nodes, valid, True, qs)
+        )
+
+    # keyed views (same contracts as the KeyedWindow methods) ------------ #
+    def quantiles(self, key: str, qs) -> list[float]:
+        rid = self.key_to_row.get(key)
+        if rid is None:
+            raise KeyError(f"no values recorded for key {key!r}")
+        return [float(v) for v in self.row_quantiles(qs)[rid]]
+
+    def all_quantiles(self, qs) -> dict[str, list[float]]:
+        out = self.row_quantiles(qs)
+        return {
+            k: [float(v) for v in out[rid]]
+            for k, rid in self.key_to_row.items()
+            if k != OVERFLOW_KEY
+        }
+
+    def rollup_quantiles(self, qs) -> list[float]:
+        out = np.asarray(self.engine.rollup_quantiles(self.bank, qs))
+        return [float(v) for v in out]
+
+    def windowed_quantiles(self, key: str, qs, *, window=None, slices=None):
+        rid = self.key_to_row.get(key)
+        if rid is None:
+            raise KeyError(f"no values recorded for key {key!r}")
+        out = self.windowed_row_quantiles(qs, window=window, slices=slices)
+        return [float(v) for v in out[rid]]
+
+    def windowed_all_quantiles(self, qs, *, window=None, slices=None):
+        out = self.windowed_row_quantiles(qs, window=window, slices=slices)
+        return {
+            k: [float(v) for v in out[rid]]
+            for k, rid in self.key_to_row.items()
+            if k != OVERFLOW_KEY
+        }
+
+    def windowed_rollup(self, qs, *, window=None, slices=None) -> list[float]:
+        w = self.window.resolve_window(window=window, slices=slices)
+        nodes, valid = self.ring.query_args_at(self.sealed, w)
+        out = np.asarray(
+            self.engine.window_rollup(self.slab, self.bank, nodes, valid, True, qs)
+        )
+        return [float(v) for v in out]
+
+    def total_mass(self) -> float:
+        return float(np.sum(self.engine.host_rows(self.bank.counts)))
+
+    def levels(self) -> dict[str, int]:
+        lv = self.engine.host_rows(self.bank.level)
+        return {k: int(lv[r]) for k, r in self.key_to_row.items()}
 
 
 class KeyedWindow:
@@ -116,14 +252,19 @@ class KeyedWindow:
     executable's (fired, clamped) outputs park on device and only transfer
     when the events are actually read (or the window resets).
 
-    Thread safety: every bank access goes through ``self.lock`` (an
+    Thread safety: every bank *mutation* goes through ``self.lock`` (an
     RLock).  The ingest executable *donates* the bank, so two concurrent
     ``record``/``record_batches`` calls — e.g. the ingest gateway's drain
     thread racing a serving loop's flush — could otherwise hand an
-    already-deleted buffer to the engine or lose one thread's update;
-    readers (``quantiles``/``total_mass``/...) take the same lock so they
-    never observe a donated-away bank.  ``KeyedAggregator.flush`` holds it
-    across its read-then-reset so the window swap is atomic too.
+    already-deleted buffer to the engine or lose one thread's update.
+    Readers (``quantiles``/``total_mass``/...) do NOT contend on that
+    lock: they run against the version-stamped ``BankSnapshot`` published
+    by ``snapshot()`` — device-side copies the donation cycle can never
+    touch — and only take the lock for the brief rebuild when the version
+    moved (RCU-style: the lock shrank from covering every query dispatch
+    to covering the snapshot pointer swap).  ``KeyedAggregator.flush``
+    holds the lock across its read-then-reset so the window swap is
+    atomic too.
     """
 
     def __init__(
@@ -182,6 +323,13 @@ class KeyedWindow:
             None if num_slices is None else WindowRing(self.engine, num_slices)
         )
         self.slice_seconds = None if slice_seconds is None else float(slice_seconds)
+        # read path: monotone state version (one bump per ingest tick /
+        # slice seal / reset) + the published snapshot readers run against
+        self._version = 0
+        self._snap: BankSnapshot | None = None
+        self._slab_snap: tuple[int, object] | None = None  # (sealed, copy)
+        self._snap_builds = 0
+        self._slab_builds = 0
 
     def _initial_free_pool(self) -> list[int]:
         """Usable rows, ordered so ``pop()`` balances load.
@@ -308,6 +456,8 @@ class KeyedWindow:
             self._pending.append((fired, clamped, self._window))
             if len(self._pending) >= 256:  # bound the parked device arrays
                 self._materialize_events()
+        # last: version N must mean "the bank state after N state changes"
+        self._version += 1
 
     def _materialize_events(self) -> None:
         """Transfer parked (fired, clamped) outputs and log the transitions.
@@ -345,16 +495,77 @@ class KeyedWindow:
         return self._events
 
     # ------------------------------------------------------------------ #
-    def quantiles(self, key: str, qs) -> list[float]:
-        """Window-local per-key quantiles straight off the device bank
-        (one fused bank-query executable for all qs, indexed at the key's
-        row)."""
+    # snapshot publication (the lock-free read path)
+    # ------------------------------------------------------------------ #
+    @property
+    def version(self) -> int:
+        """Monotone state version: bumps once per ingest tick (reactive
+        collapse rides the same executable), slice seal, and reset — the
+        only events at which any query answer can change."""
+        return self._version
+
+    def _publish_locked(self) -> BankSnapshot:
+        snap = self._snap
+        if snap is not None and snap.version == self._version:
+            return snap
+        slab = sealed = None
+        if self.ring is not None:
+            sealed = self.ring.sealed
+            cached = self._slab_snap
+            if cached is None or cached[0] != sealed:
+                # the slab only mutates on seal, so one copy per seal
+                # count serves every bank snapshot taken in between
+                cached = (sealed, self.engine.snapshot(self.ring.slab))
+                self._slab_builds += 1
+                self._slab_snap = cached
+            slab = cached[1]
+        snap = BankSnapshot(
+            version=self._version,
+            window=self,
+            bank=self.engine.snapshot(self.bank),
+            key_to_row=dict(self.key_to_row),
+            sealed=sealed,
+            slab=slab,
+        )
+        self._snap_builds += 1
+        self._snap = snap
+        return snap
+
+    def snapshot(self) -> BankSnapshot:
+        """The current read view (lock-free fast path).
+
+        Returns the published version-stamped ``BankSnapshot``, rebuilding
+        under the lock only when the version moved since the last build.
+        The fast path is two GIL-atomic attribute reads — readers never
+        wait on an in-flight ingest tick, and the writer never waits on
+        readers.
+        """
+        snap = self._snap
+        if snap is not None and snap.version == self._version:
+            return snap
         with self.lock:
-            rid = self.key_to_row.get(key)
-            if rid is None:
-                raise KeyError(f"no values recorded for key {key!r}")
-            out = np.asarray(self.engine.quantiles(self.bank, qs))
-        return [float(v) for v in out[rid]]
+            return self._publish_locked()
+
+    def publish(self) -> int:
+        """Refresh the published snapshot; returns the live version.
+
+        The gateway drain loop calls this once per tick after its
+        coalesced ingest.  Self-tuning: if no reader ever took a snapshot
+        the call is a no-op (a pure-write workload pays zero copy cost);
+        once readers poll, each tick pre-pays the device copy so queries
+        between ticks are version-matched cache hits.
+        """
+        if self._snap is not None:
+            with self.lock:
+                self._publish_locked()
+        return self._version
+
+    # ------------------------------------------------------------------ #
+    def quantiles(self, key: str, qs) -> list[float]:
+        """Window-local per-key quantiles off the published snapshot
+        (one fused bank-query executable for all qs, indexed at the key's
+        row; lock-free vs concurrent ingest)."""
+        return self.snapshot().quantiles(key, qs)
 
     def all_quantiles(self, qs) -> dict[str, list[float]]:
         """Window-local quantiles for *every* live key in one fused bank
@@ -362,14 +573,7 @@ class KeyedWindow:
         executable answers len(keys) x len(qs) estimates off one cumsum per
         row (gathered across shards when the bank is sharded), instead of a
         per-key (let alone per-q) query loop."""
-        with self.lock:
-            out = np.asarray(self.engine.quantiles(self.bank, qs))
-            rows = dict(self.key_to_row)
-        return {
-            k: [float(v) for v in out[rid]]
-            for k, rid in rows.items()
-            if k != OVERFLOW_KEY
-        }
+        return self.snapshot().all_quantiles(qs)
 
     def rollup_quantiles(self, qs) -> list[float]:
         """Fleet-view quantiles of the union of *every* row in the window
@@ -380,9 +584,7 @@ class KeyedWindow:
         reduction; a psum under a sharded engine), then one Algorithm 2
         query answers every q.  NaN when the window is empty.
         """
-        with self.lock:
-            out = np.asarray(self.engine.rollup_quantiles(self.bank, qs))
-        return [float(v) for v in out]
+        return self.snapshot().rollup_quantiles(qs)
 
     def total_mass(self) -> float:
         """Total ingested mass across every row (incl. the overflow sink).
@@ -390,17 +592,14 @@ class KeyedWindow:
         The conservation probe the gateway's accounting tests ride:
         ``ingested mass + recorded shed mass == submitted mass``.
         """
-        with self.lock:
-            return float(np.sum(self.engine.host_rows(self.bank.counts)))
+        return self.snapshot().total_mass()
 
     def keys(self) -> list[str]:
         return [k for k in self.key_to_row if k != OVERFLOW_KEY]
 
     def levels(self) -> dict[str, int]:
         """Per-key uniform-collapse level (0 = full resolution)."""
-        with self.lock:
-            lv = self.engine.host_rows(self.bank.level)
-            return {k: int(lv[r]) for k, r in self.key_to_row.items()}
+        return self.snapshot().levels()
 
     def alphas(self) -> dict[str, float]:
         """Per-key effective relative-error guarantee at the live level."""
@@ -444,6 +643,7 @@ class KeyedWindow:
             self._materialize_events()
             merges = ring.seal(self.bank)
             self.bank = self.engine.reset(self.bank)
+            self._version += 1
         return merges
 
     def resolve_window(self, window=None, slices=None) -> int:
@@ -489,40 +689,28 @@ class KeyedWindow:
 
         One fused engine dispatch — gather the ring's O(log S) cached
         nodes, level-reconcile, reduce the slice axis, Algorithm 2 — vs
-        N-1 host-looped merges.
+        N-1 host-looped merges.  Runs against the published snapshot
+        (slab + bank copies), lock-free vs concurrent seals and ingest.
         """
-        ring = self._require_ring()
-        w = self.resolve_window(window=window, slices=slices)
-        with self.lock:
-            rid = self.key_to_row.get(key)
-            if rid is None:
-                raise KeyError(f"no values recorded for key {key!r}")
-            out = np.asarray(ring.quantiles(self.bank, qs, window_slices=w))
-        return [float(v) for v in out[rid]]
+        self._require_ring()
+        return self.snapshot().windowed_quantiles(
+            key, qs, window=window, slices=slices
+        )
 
     def windowed_all_quantiles(
         self, qs, *, window=None, slices=None
     ) -> dict[str, list[float]]:
         """Windowed quantiles for every live key (one fused dispatch)."""
-        ring = self._require_ring()
-        w = self.resolve_window(window=window, slices=slices)
-        with self.lock:
-            out = np.asarray(ring.quantiles(self.bank, qs, window_slices=w))
-            rows = dict(self.key_to_row)
-        return {
-            k: [float(v) for v in out[rid]]
-            for k, rid in rows.items()
-            if k != OVERFLOW_KEY
-        }
+        self._require_ring()
+        return self.snapshot().windowed_all_quantiles(
+            qs, window=window, slices=slices
+        )
 
     def windowed_rollup(self, qs, *, window=None, slices=None) -> list[float]:
         """Fleet-view quantiles over the last N slices ("p99 across all
         tenants, last 5 minutes") — stays one psum on a sharded bank."""
-        ring = self._require_ring()
-        w = self.resolve_window(window=window, slices=slices)
-        with self.lock:
-            out = np.asarray(ring.rollup(self.bank, qs, window_slices=w))
-        return [float(v) for v in out]
+        self._require_ring()
+        return self.snapshot().windowed_rollup(qs, window=window, slices=slices)
 
     def ring_stats(self) -> dict | None:
         """Ring occupancy / maintenance metadata (None when no ring)."""
@@ -532,9 +720,16 @@ class KeyedWindow:
             return self.ring.stats()
 
     def engine_stats(self) -> dict:
-        """Executable-cache + ring observability (the /stats payload)."""
+        """Executable-cache + ring + read-path observability (/stats)."""
         with self.lock:
-            out = {"executable_cache": self.engine.cache_info()}
+            out = {
+                "executable_cache": self.engine.cache_info(),
+                "read_path": {
+                    "version": self._version,
+                    "snapshot_builds": self._snap_builds,
+                    "slab_snapshot_builds": self._slab_builds,
+                },
+            }
             if self.ring is not None:
                 out["ring"] = self.ring.stats()
         return out
@@ -562,6 +757,7 @@ class KeyedWindow:
                     levels[rid] = 0  # fresh tenants start at full resolution
             self._levels = levels.astype(np.int64)
             self.bank = self.engine.reset(self.bank, levels.astype(np.int32))
+            self._version += 1
 
 
 class KeyedAggregator:

@@ -318,6 +318,7 @@ def test_fused_auto_falls_back_for_tall_banks(monkeypatch, rng):
     assert ops.dispatch_stats() == {
         "tall_bank_fallbacks": {},
         "range_merge_calls": {},
+        "query_fallbacks": {},
     }
 
 

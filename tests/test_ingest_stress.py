@@ -222,6 +222,70 @@ def test_submit_after_stop_is_refused_exactly():
     assert window.total_mass() == float(st["ingested_values"])
 
 
+def test_read_poll_storm_against_sustained_ingest():
+    """32 pollers against one sustained writer (the PR-10 read path):
+
+    * snapshot coupling — every concurrently-taken snapshot's mass equals
+      exactly ``(snapshot.version - v0) * batch``: no torn reads (a bank
+      from one tick stamped with another tick's version) and no stale
+      republish ever surfaces;
+    * planner freshness — a coalesced/cached answer is never older than
+      any state the poller already observed (versions are monotone per
+      poller, and cache keys embed the live version at lookup);
+    * conservation — after the storm, live mass == writer rounds * batch
+      == version delta * batch.
+    """
+    from repro.launch.query_planner import QueryPlanner
+
+    window = KeyedWindow(BucketSpec(), capacity=8)
+    planner = QueryPlanner(window, coalesce_window_s=0.001)
+    batch = 64
+    v0 = window.version
+    stop = threading.Event()
+    rounds = [0]
+    writer_errors = []
+
+    def writer():
+        try:
+            while not stop.is_set():
+                window.record("/w", np.ones(batch, np.float32))
+                rounds[0] += 1
+        except BaseException as e:  # pragma: no cover - failure path
+            writer_errors.append(e)
+
+    w = threading.Thread(target=writer)
+    w.start()
+    try:
+        def poller(i):
+            last_v = v0
+            for _ in range(25):
+                snap = window.snapshot()
+                # version/state coupling, bit-exact (integer counts)
+                assert snap.total_mass() == float((snap.version - v0) * batch)
+                assert snap.version >= last_v, "snapshot went backwards"
+                v, table, rows = planner.quantile_rows([0.5, 0.99])
+                # never staler than what this poller already saw
+                assert v >= snap.version >= last_v
+                last_v = v
+                if v > v0:  # all-ones stream: both quantiles are ~1.0
+                    row = np.asarray(table)[rows["/w"]]
+                    assert np.all(np.abs(row - 1.0) < 0.05)
+
+        assert _run_threads(poller) == []
+    finally:
+        stop.set()
+        w.join(timeout=120)
+    assert not w.is_alive(), "writer hung"
+    assert writer_errors == []
+    assert window.version - v0 == rounds[0]
+    assert window.total_mass() == float(rounds[0] * batch)
+    st = planner.stats()
+    assert st["requests"] == THREADS * 25
+    # the storm exercised the coalescer and the versioned cache
+    assert st["dispatches"] <= st["requests"]
+    assert st["cache"]["hits"] + st["coalesced"] > 0
+
+
 def test_auth_rejections_under_contention():
     """Concurrent bad-token writers all get 401; none reach the gateway."""
     window = KeyedWindow(BucketSpec(), capacity=4)

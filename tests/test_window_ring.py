@@ -360,9 +360,23 @@ def test_parse_duration():
     assert parse_duration("5m") == 300.0
     assert parse_duration("1.5h") == 5400.0
     assert parse_duration("45") == 45.0
+    # compound forms concatenate tokens
+    assert parse_duration("1h30m") == 5400.0
+    assert parse_duration("1m30.5s") == 90.5
+    assert parse_duration("2h5m30s500ms") == 7530.5
+    assert parse_duration(" 1H30M ") == 5400.0  # case/space tolerant
     for bad in ("zzz", "", "-3s", "0s", "5 parsecs", None):
         with pytest.raises(ValueError):
             parse_duration(bad)
+    # compound rejects name the offending token
+    with pytest.raises(ValueError, match="'5'"):
+        parse_duration("5x30s")  # unit-less token inside a compound
+    with pytest.raises(ValueError, match="-30m"):
+        parse_duration("1h-30m")  # negative token
+    with pytest.raises(ValueError, match="magnitude"):
+        parse_duration(".")
+    with pytest.raises(ValueError, match="positive"):
+        parse_duration("0ms0s")  # sums to zero
 
 
 def test_keyed_window_slice_turnover_preserves_levels():
